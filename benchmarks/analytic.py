@@ -1,0 +1,339 @@
+"""Analytic per-device cost model for the roofline (§Roofline).
+
+WHY: XLA's ``cost_analysis()`` counts a ``while`` (lax.scan) body ONCE,
+not × trip-count — with scan-over-layers every per-layer FLOP/byte/
+collective is undercounted by ~n_layers.  The dry-run JSONs carry those
+raw numbers (kept for reference); the roofline table is built from this
+analytic model, which we cross-checked against unrolled-scan compiles
+of reduced-depth variants (see EXPERIMENTS.md §Roofline).
+
+All quantities are PER DEVICE PER STEP.  Mesh: dp = pod·data (batch
+axes), tp = model.  Conventions:
+
+- matmul flops = 2·m·n·k;   train executes fwd + bwd(2×fwd) + remat
+  re-fwd (1×fwd) = 4× fwd flops.
+- bytes: HBM traffic ≈ 3 passes (fwd/bwd/remat) × (param reads +
+  activation rw) + optimizer update (read p,mu,nu + write) + score
+  matrices in f32.
+- collectives: TP all-reduces 2 per layer (attn-out, ffn-out) of the
+  local activation slab, ring factor 2, ×3 passes; DP gradient
+  reduce-scatter + param all-gather (FSDP) or grad all-reduce; EP
+  all-to-all 2× (dispatch + return).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+BF16 = 2
+F32 = 4
+
+
+@dataclasses.dataclass
+class CellCost:
+    flops: float  # per device
+    hbm_bytes: float
+    coll_bytes: float
+    useful_flops: float  # MODEL_FLOPS (6ND / 2ND) per device
+
+    def terms(self, peak=197e12, hbm=819e9, ici=50e9) -> Dict[str, float]:
+        return {
+            "compute": self.flops / peak,
+            "memory": self.hbm_bytes / hbm,
+            "collective": self.coll_bytes / ici,
+        }
+
+
+def _mesh_sizes(mesh_kind: str):
+    return (32, 16) if mesh_kind == "multi" else (16, 16)  # (dp, tp)
+
+
+def _attn_flops_fwd(cfg, B, S, T, causal_frac=0.5):
+    """scores + AV for one layer, full batch (global)."""
+    a = cfg.attn
+    if a is None:
+        return 0.0
+    H, hd = a.n_heads, a.head_dim
+    if a.mla is not None:  # latent attention: scores vs kv_lora + rope
+        m = a.mla
+        return 2.0 * B * H * S * T * causal_frac * (2 * m.kv_lora + m.rope_dim) / 2
+    return 4.0 * B * H * hd * S * T * causal_frac
+
+
+def _per_layer_linear_params(cfg, layer_type: str) -> float:
+    """Matmul params in one layer of the given type."""
+    D = cfg.d_model
+    a, f, m, s, xl_ = cfg.attn, cfg.ffn, cfg.moe, cfg.ssm, cfg.xlstm
+    if layer_type in ("attn", "local", "shared_attn", "attn_moe"):
+        if a.mla is not None:
+            ml = a.mla
+            attn_p = (D * ml.q_lora + ml.q_lora * a.n_heads * (ml.nope_dim + ml.rope_dim)
+                      + D * ml.kv_lora + ml.kv_lora * a.n_heads * (ml.nope_dim + ml.v_dim)
+                      + D * ml.rope_dim + a.n_heads * ml.v_dim * D)
+        else:
+            attn_p = D * a.n_heads * a.head_dim * 2 + D * a.n_kv * a.head_dim * 2
+        if layer_type == "attn_moe":
+            mo = m
+            ffn_p = mo.top_k * 3 * D * mo.d_ff_expert + 3 * D * (mo.d_ff_shared or 0)
+        else:
+            ffn_p = (3 if f.gated else 2) * D * f.d_ff
+        return attn_p + ffn_p
+    if layer_type == "mamba":
+        di = s.expand * D
+        H = di // s.head_dim
+        return D * (2 * di + 2 * s.d_state + H) + di * D
+    if layer_type == "mlstm":
+        di = int(xl_.proj_factor_m * D)
+        di -= di % xl_.n_heads
+        return D * 2 * di + 3 * di * di + di * 2 * xl_.n_heads + di * D
+    if layer_type == "slstm":
+        dff = int(xl_.proj_factor_s * D)
+        return D * 4 * D + 4 * xl_.n_heads * (D // xl_.n_heads) ** 2 + 3 * D * dff
+    raise ValueError(layer_type)
+
+
+def _linear_params_total(cfg) -> float:
+    total = sum(_per_layer_linear_params(cfg, t) for t in cfg.pattern())
+    if cfg.kind == "encdec":
+        # encoder layers: attn + ungated mlp
+        enc = cfg.n_enc_layers * (
+            4 * cfg.d_model * cfg.attn.n_heads * cfg.attn.head_dim
+            + 2 * cfg.d_model * cfg.ffn.d_ff
+        )
+        # decoder cross-attention on top of the decoder self-attn+mlp
+        cross = cfg.n_layers * 4 * cfg.d_model * cfg.attn.n_heads * cfg.attn.head_dim
+        total += enc + cross
+    return total
+
+
+def _resident_param_bytes(cfg) -> float:
+    from benchmarks.roofline import _param_counts
+
+    total, _ = _param_counts(cfg.name.replace("_", "-"))
+    return total * BF16
+
+
+def _active_linear_params(cfg) -> float:
+    return _linear_params_total(cfg)
+
+
+def analytic_cell(arch: str, cfg, shape_name: str, mesh_kind: str,
+                  *, overrides: dict | None = None) -> CellCost:
+    """overrides: {'f32_scores': bool, 'fsdp': bool, 'remat_passes': float,
+    'flash': bool} — used by §Perf to model candidate optimizations."""
+    o = {"f32_scores": True, "remat_passes": 3.0, "flash": False, "policy": "2d"}
+    o.update(overrides or {})
+    dp, tp = _mesh_sizes(mesh_kind)
+    if o["policy"] == "dp":
+        dp, tp = dp * tp, 1  # model axis joins the batch axes
+    n_dev = dp * tp
+    D, V = cfg.d_model, cfg.vocab
+    Lp = cfg.pattern()
+    lin_p = _active_linear_params(cfg)
+    from benchmarks.roofline import _param_counts
+    total_p, active_p = _param_counts(arch)
+
+    SHAPES = {"train_4k": (256, 4096), "prefill_32k": (32, 32_768),
+              "decode_32k": (128, 32_768), "long_500k": (1, 524_288)}
+    B, S = SHAPES[shape_name]
+    kind = ("train" if shape_name == "train_4k"
+            else "prefill" if shape_name == "prefill_32k" else "decode")
+
+    fsdp = o.get("fsdp", 5 * total_p * BF16 / tp > 8 * 2**30)
+    passes = 1.0 + o["remat_passes"] if kind == "train" else 1.0  # fwd + (bwd 2 + remat 1)
+
+    # ---------------- flops ----------------
+    if kind in ("train", "prefill"):
+        tokens = B * S
+        fwd_lin = 2.0 * lin_p * tokens + 2.0 * tokens * D * V  # + logits
+        fwd_attn = 0.0
+        for t in Lp:
+            if t in ("attn", "shared_attn", "attn_moe"):
+                fwd_attn += _attn_flops_fwd(cfg, B, S, S)
+            elif t == "local":
+                w = min(cfg.attn.window or S, S)
+                fwd_attn += _attn_flops_fwd(cfg, B, S, w, causal_frac=1.0)
+            elif t == "mlstm":
+                xl_ = cfg.xlstm
+                di = int(xl_.proj_factor_m * D)
+                fwd_attn += 4.0 * B * di * S * S * 0.5  # quadratic mLSTM form
+            elif t == "mamba":
+                s_ = cfg.ssm
+                di = s_.expand * D
+                fwd_attn += tokens * (4.0 * di * s_.d_state + 4.0 * di * s_.chunk * 0.5)
+            elif t == "slstm":
+                pass  # linear terms already counted; recurrence is O(D) elementwise
+        if cfg.kind == "encdec":
+            from repro.configs.whisper_small import N_FRAMES
+            fwd_attn += cfg.n_enc_layers * _attn_flops_fwd(cfg, B, N_FRAMES, N_FRAMES, 1.0)
+            fwd_attn += cfg.n_layers * _attn_flops_fwd(cfg, B, S, N_FRAMES, 1.0)
+        flops_g = (fwd_lin + fwd_attn) * passes
+        useful_g = (6.0 if kind == "train" else 2.0) * active_p * tokens
+    else:  # decode: one token, cache length S
+        tokens = B
+        fwd_lin = 2.0 * lin_p * tokens + 2.0 * tokens * D * V
+        fwd_attn = 0.0
+        for t in Lp:
+            if t in ("attn", "shared_attn", "attn_moe"):
+                fwd_attn += _attn_flops_fwd(cfg, B, 1, S, causal_frac=1.0)
+            elif t == "local":
+                fwd_attn += _attn_flops_fwd(cfg, B, 1, min(cfg.attn.window or S, S), 1.0)
+            elif t == "mamba":
+                s_ = cfg.ssm
+                di = s_.expand * D
+                fwd_attn += tokens * 4.0 * di * s_.d_state
+            elif t == "mlstm":
+                xl_ = cfg.xlstm
+                di = int(xl_.proj_factor_m * D)
+                P = di // xl_.n_heads
+                fwd_attn += tokens * 4.0 * di * P
+        if cfg.kind == "encdec":
+            from repro.configs.whisper_small import N_FRAMES
+            fwd_attn += cfg.n_layers * _attn_flops_fwd(cfg, B, 1, N_FRAMES, 1.0)
+        flops_g = fwd_lin + fwd_attn
+        useful_g = 2.0 * active_p * tokens
+    flops = flops_g / n_dev
+    useful = useful_g / n_dev
+
+    # ---------------- hbm bytes ----------------
+    toks_dev = tokens / dp if kind != "decode" else max(tokens / dp, 1)
+    if kind in ("train", "prefill"):
+        param_reads = passes * lin_p * BF16 / tp
+        act_rw = 8.0 * len(Lp) * toks_dev * D * BF16  # residual stream rw / layer
+        score_bytes = 0.0
+        sb = F32 if o["f32_scores"] else BF16
+        if not o["flash"] and cfg.attn is not None:
+            H = cfg.attn.n_heads
+            for t in Lp:
+                if t in ("attn", "shared_attn", "attn_moe"):
+                    score_bytes += 3.0 * (B / dp) * (H / tp) * S * S * sb
+                elif t == "local":
+                    w = min(cfg.attn.window or S, S)
+                    score_bytes += 3.0 * (B / dp) * (H / tp) * S * w * sb
+        logits_bytes = 3.0 * toks_dev * (V / tp) * F32 / 8  # chunked CE (8 chunks live 1)
+        opt_bytes = 0.0
+        if kind == "train":
+            shard_div = tp * (dp if fsdp else 1)
+            mdt = BF16 if total_p > 3e11 else F32
+            opt_bytes = total_p * (2 * BF16 + 4 * mdt) / shard_div  # p rw + mu,nu rw
+            grad_bytes = total_p * F32 / shard_div * 2
+            opt_bytes += grad_bytes
+        hbm = param_reads + act_rw + score_bytes + logits_bytes + opt_bytes
+    else:
+        # decode: weight-bound — weights are read IN PLACE on their
+        # shard (EP/TP: tokens travel to weights, never the reverse),
+        # so per-device reads = the resident shard
+        param_reads = total_p * BF16 / (tp * (dp if fsdp else 1))
+        cache = 0.0
+        a = cfg.attn
+        for t in Lp:
+            if t in ("attn", "shared_attn", "attn_moe") and a is not None:
+                if a.mla is not None:
+                    cache += B * S * (a.mla.kv_lora + a.mla.rope_dim) * BF16
+                else:
+                    cache += 2 * B * S * a.n_kv * a.head_dim * BF16
+            elif t == "local" and a is not None:
+                cache += 2 * B * min(a.window or S, S) * a.n_kv * a.head_dim * BF16
+        cache /= n_dev  # cache is sharded over batch/heads or seq
+        act = 4.0 * len(Lp) * (B / min(dp, max(B, 1)) if B >= dp else B) * D * BF16
+        hbm = param_reads + cache + act
+
+    # ---------------- collective bytes ----------------
+    coll = 0.0
+    if tp > 1:
+        # TP: 2 all-reduces per layer over the local activation slab
+        slab = toks_dev * D * BF16
+        coll += 2.0 * 2.0 * len(Lp) * slab * (passes if kind == "train" else 1.0) * (tp - 1) / tp
+    if kind == "train":
+        if o["policy"] == "dp":
+            # pure FSDP: all-gather params each pass + reduce-scatter grads
+            coll += (passes + 1.0) * total_p * BF16
+        elif fsdp:
+            # reduce-scatter grads + all-gather params (per pass)
+            coll += 2.0 * total_p * BF16 / tp
+        else:
+            coll += 2.0 * total_p * F32 / tp  # ring all-reduce grads
+    if cfg.moe is not None and kind != "decode":
+        mo = cfg.moe
+        n_moe = sum(1 for t in Lp if t == "attn_moe")
+        # dispatch groups spread tokens over the WHOLE mesh (dp·tp) —
+        # see ffn.moe_forward; a2a volume per device is tokens/(dp·tp)
+        a2a = tokens / n_dev * mo.top_k * D * BF16 * mo.capacity_factor
+        coll += 2.0 * n_moe * a2a * (passes if kind == "train" else 1.0)
+    elif cfg.moe is not None:
+        mo = cfg.moe
+        n_moe = sum(1 for t in Lp if t == "attn_moe")
+        coll += 2.0 * n_moe * (B / dp if B >= dp else B) * mo.top_k * D * BF16
+
+    return CellCost(flops=flops, hbm_bytes=hbm, coll_bytes=coll, useful_flops=useful)
+
+
+def analytic_cca(shape_name: str, mesh_kind: str = "single",
+                 *, microbatch: int = 4096, chunk_rows: int | None = None,
+                 int8_psum: bool = False, overlap: bool = False) -> CellCost:
+    """Cost model for the paper's own workload: one full CCA data pass
+    (Europarl scale: n=1.24M, da=db=2^19, k̃=2060, bf16 compute).
+
+    Knobs mirror the implementation: ``microbatch`` (rows per scan step
+    on each device — sets Q re-read and accumulator-rw frequency),
+    ``int8_psum`` (compressed Y reduction, distributed/compress.py),
+    ``overlap`` (bucketed psum hidden under compute → collective term
+    only counts the un-overlappable remainder).
+    """
+    dp, tp = _mesh_sizes(mesh_kind)
+    n_dev = dp * tp
+    n, d, kt = 1_235_976, 2**19, 2060
+    rows_dev = n / dp
+    d_loc = d / tp
+    n_mb = max(1.0, rows_dev / microbatch)
+
+    final = "final" in shape_name
+    # power pass: project (X·Q) + accumulate (XᵀP), two views.
+    # final pass: project only + small (k̃×k̃) grams.
+    flops_g = (4.0 if final else 8.0) * n * d * kt + (6.0 * n * kt * kt if final else 0)
+    flops = flops_g / n_dev
+    useful = flops  # every data-pass flop is algorithmic (no remat/waste)
+
+    # hbm per device: stream X once + Q re-read per microbatch + Y rw per mb
+    x_bytes = 2.0 * rows_dev * d_loc * BF16  # A and B local slabs
+    q_bytes = 2.0 * n_mb * d_loc * kt * BF16
+    y_bytes = 0.0 if final else 2.0 * 2.0 * n_mb * d_loc * kt * F32  # rw per mb
+    c_bytes = (3.0 * 2.0 * n_mb * kt * kt * F32) if final else 0.0
+    p_bytes = 2.0 * rows_dev * kt * F32  # projected activations rw
+    hbm = x_bytes + q_bytes + y_bytes + c_bytes + p_bytes
+
+    # collectives: per-mb psum of projected (mb, k̃) over model +
+    # one end-of-pass psum of the accumulators over rows
+    per_mb = 2.0 * n_mb * microbatch * kt * F32 * 2 * (tp - 1) / tp
+    acc = (3.0 * kt * kt) if final else (2.0 * d_loc * kt)
+    y_psum = acc * (1 if int8_psum else 4) * 2 * (dp - 1) / dp
+    coll = per_mb + y_psum
+    if overlap:
+        # bucketed accumulate-then-psum: the Y reduction rides under the
+        # next microbatches' compute; only the last bucket is exposed
+        coll = per_mb + y_psum / 8
+    return CellCost(flops=flops, hbm_bytes=hbm, coll_bytes=coll, useful_flops=useful)
+
+
+def analyze(arch: str, shape_name: str, mesh_kind: str = "single",
+            overrides: dict | None = None) -> dict:
+    from repro.configs import get_config
+
+    if arch == "europarl-cca":
+        c = analytic_cca(shape_name, mesh_kind, **(overrides or {}))
+    else:
+        cfg = get_config(arch)
+        c = analytic_cell(arch, cfg, shape_name, mesh_kind, overrides=overrides)
+    t = c.terms()
+    dom = max(t, key=t.get)
+    step = max(t.values())
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "t_compute_s": t["compute"], "t_memory_s": t["memory"],
+        "t_collective_s": t["collective"], "dominant": dom,
+        "step_time_s": step,
+        "useful_flop_ratio": c.useful_flops / c.flops if c.flops else 0.0,
+        "roofline_frac": (c.useful_flops / 197e12) / step if step else 0.0,
+    }

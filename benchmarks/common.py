@@ -1,0 +1,31 @@
+"""Shared benchmark helpers: timing + the Europarl stand-in corpus."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import PlantedCCAData
+
+
+def time_us(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def europarl_standin(n=6000, da=96, db=80, rank=48, seed=0):
+    """Planted power-law corpus with a train/test split (paper §4 setup,
+    scaled to CPU)."""
+    d = PlantedCCAData(n=n, da=da, db=db, rank=rank, decay=0.8, noise=0.5,
+                       seed=seed, chunk=max(256, n // 8))
+    A, B = d.materialize()
+    n_tr = int(n * 0.9)
+    return (jnp.asarray(A[:n_tr]), jnp.asarray(B[:n_tr]),
+            jnp.asarray(A[n_tr:]), jnp.asarray(B[n_tr:]))

@@ -1,0 +1,51 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU — numbers are
+CPU-emulation timings; the real signal is the allclose check and the
+derived arithmetic-intensity / roofline terms for the TPU target)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, pallas_matmul, projgram, ref
+
+from .common import time_us
+
+PEAK_FLOPS = 197e12  # bf16 TPU v5e
+HBM_BW = 819e9
+
+
+def kernel_benchmarks(rows):
+    key = jax.random.PRNGKey(0)
+    n, d, kt = 2048, 1024, 512
+    x = jax.random.normal(key, (n, d), jnp.float32)
+    q = jax.random.normal(jax.random.PRNGKey(1), (d, kt), jnp.float32)
+
+    # project (P = XQ)
+    us = time_us(lambda: pallas_matmul(x, q, interpret=True))
+    flops = 2 * n * d * kt
+    byts = 4 * (n * d + d * kt + n * kt)
+    ai = flops / byts
+    t_tpu = max(flops / PEAK_FLOPS, byts / HBM_BW) * 1e6
+    rows.append(("kernel_project_2048x1024x512", us,
+                 f"AI={ai:.1f}flops/B tpu_roofline_us={t_tpu:.1f}"))
+
+    # tall-skinny update (Y += XᵀP)
+    p = jax.random.normal(jax.random.PRNGKey(2), (n, kt), jnp.float32)
+    us = time_us(lambda: pallas_matmul(x, p, transpose_lhs=True, interpret=True))
+    rows.append(("kernel_tn_update_1024x2048x512", us,
+                 f"AI={2*n*d*kt/(4*(n*d+n*kt+d*kt)):.1f}flops/B"))
+
+    # fused projgram
+    us = time_us(lambda: projgram(x, q, interpret=True))
+    fused_flops = 2 * n * d * kt + 2 * n * kt * kt
+    fused_bytes = 4 * (n * d + d * kt + n * kt + kt * kt)
+    rows.append(("kernel_projgram_fused", us,
+                 f"AI={fused_flops/fused_bytes:.1f}flops/B "
+                 f"(unfused_AI={2*n*d*kt/(4*(n*d+d*kt+2*n*kt)):.1f})"))
+
+    # full fused final-pass chunk
+    b = jax.random.normal(jax.random.PRNGKey(3), (n, d // 2), jnp.float32)
+    qb = jax.random.normal(jax.random.PRNGKey(4), (d // 2, kt), jnp.float32)
+    us = time_us(lambda: ops.final_pass_chunk(x, b, q, qb, interpret=True))
+    rows.append(("kernel_final_pass_chunk", us, "Ca+Cb+F one X/B read each"))

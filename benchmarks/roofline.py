@@ -1,0 +1,149 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh):
+  compute term    = HLO_FLOPs / peak_FLOP/s          (per-chip: post-SPMD
+  memory term     = HLO_bytes / HBM_bw                HLO shapes are local)
+  collective term = collective_bytes / ICI_bw
+plus MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params,
+and the MODEL/HLO FLOP ratio (useful-compute fraction).
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_PARAM_CACHE: dict = {}
+
+
+def _param_counts(arch: str):
+    """(total params, active params per token) for an arch."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    total = sum(x.size for x in jax.tree.leaves(shapes))
+    active = total
+    if cfg.moe is not None:
+        m = cfg.moe
+        n_moe_layers = sum(1 for t in cfg.pattern() if t == "attn_moe")
+        expert_params = n_moe_layers * m.n_experts * 3 * cfg.d_model * m.d_ff_expert
+        active = total - expert_params * (1 - m.top_k / m.n_experts)
+    _PARAM_CACHE[arch] = (total, active)
+    return total, active
+
+
+def model_flops(arch: str, shape: str, kind: str, batch: int, seq: int) -> float:
+    """Global MODEL_FLOPS for one step (6ND train, 2ND inference)."""
+    _, active = _param_counts(arch)
+    if kind == "train":
+        tokens = batch * seq
+        return 6.0 * active * tokens
+    if kind == "prefill":
+        return 2.0 * active * batch * seq
+    return 2.0 * active * batch  # decode: one token per sequence
+
+
+SHAPE_META = {
+    "train_4k": ("train", 256, 4096),
+    "prefill_32k": ("prefill", 32, 32_768),
+    "decode_32k": ("decode", 128, 1),
+    "long_500k": ("decode", 1, 1),
+}
+
+
+def analyze_cell(d: dict) -> dict:
+    """Roofline terms for one dry-run cell.
+
+    PRIMARY terms come from the analytic per-device cost model
+    (benchmarks.analytic): XLA cost_analysis counts lax.scan bodies
+    once, undercounting per-layer flops/bytes/collectives by ~n_layers,
+    so the HLO numbers are attached as `hlo_*` reference fields only.
+    Memory feasibility (arg/temp bytes) is taken from the compiled
+    artifact, which IS scan-aware.
+    """
+    from benchmarks import analytic
+
+    arch, shape = d["arch"], d["shape"]
+    shape_key = shape if arch != "europarl-cca" else shape.replace("cca_", "") + ""
+    out = analytic.analyze(arch, shape, d["mesh"])
+    out["devices"] = d["devices"]
+    out["hlo_flops"] = d.get("flops", 0.0)
+    out["hlo_bytes"] = d.get("bytes_accessed", 0.0)
+    out["hlo_collective_bytes"] = d.get("collectives", {}).get("total_bytes", 0)
+    out["memory"] = d.get("memory", {})
+    return out
+
+
+def load_cells(result_dir: str = "results/dryrun"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        d = json.load(open(f))
+        if d.get("status") == "ok":
+            cells.append(analyze_cell(d))
+        elif d.get("status") == "skipped":
+            cells.append({"arch": d["arch"], "shape": d["shape"],
+                          "mesh": d["mesh"], "skipped": d["reason"]})
+    return cells
+
+
+def roofline_rows(rows, result_dir: str = "results/dryrun"):
+    cells = load_cells(result_dir)
+    if not cells:
+        rows.append(("roofline", 0.0, f"no dry-run artifacts in {result_dir} — "
+                     "run python -m repro.launch.dryrun first"))
+        return
+    for c in cells:
+        if "skipped" in c:
+            rows.append((f"roofline_{c['arch']}_{c['shape']}_{c['mesh']}", 0.0,
+                         f"SKIP({c['skipped'][:40]})"))
+            continue
+        rows.append((
+            f"roofline_{c['arch']}_{c['shape']}_{c['mesh']}",
+            c["step_time_s"] * 1e6,
+            f"dom={c['dominant']} comp={c['t_compute_s']:.3g}s "
+            f"mem={c['t_memory_s']:.3g}s coll={c['t_collective_s']:.3g}s "
+            + (f"useful={c.get('useful_flop_ratio', 0):.2f} "
+               f"roofline_frac={c.get('roofline_frac', 0):.3f}"
+               if "useful_flop_ratio" in c else ""),
+        ))
+
+
+def write_markdown(result_dir: str = "results/dryrun",
+                   out_path: str = "results/roofline.md") -> str:
+    cells = load_cells(result_dir)
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| dominant | useful FLOP ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if "skipped" in c:
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — "
+                         f"| skipped: {c['skipped']} | — | — |")
+        else:
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+                f"| {c['t_compute_s']:.4g} | {c['t_memory_s']:.4g} "
+                f"| {c['t_collective_s']:.4g} | **{c['dominant']}** "
+                f"| {c.get('useful_flop_ratio', float('nan')):.2f} "
+                f"| {c.get('roofline_frac', float('nan')):.3f} |"
+            )
+    md = "\n".join(lines)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write(md + "\n")
+    return md

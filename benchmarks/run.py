@@ -1,0 +1,44 @@
+"""Benchmark harness — one function per paper table/figure plus kernel
+micro-benchmarks and the roofline table derived from the dry-run.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,fig2a,...]
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig1,fig2a,table2b,fig3,kernels,roofline")
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    from . import kernel_bench, paper_figures, roofline
+
+    suites = {
+        "fig1": paper_figures.fig1_spectrum,
+        "fig2a": paper_figures.fig2a_pq_sweep,
+        "table2b": paper_figures.table2b_timings,
+        "fig3": paper_figures.fig3_nu_sweep,
+        "kernels": kernel_bench.kernel_benchmarks,
+        "roofline": lambda rows: roofline.roofline_rows(rows, args.dryrun_dir),
+    }
+    wanted = list(suites) if args.only is None else args.only.split(",")
+
+    rows = []
+    for name in wanted:
+        suites[name](rows)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""The paper's technique × the model zoo: align the representations of
+two different LMs over paired text with distributed RandomizedCCA.
+
+This is the modern analogue of the paper's multilingual-embedding
+application: view A = model 1's hidden states, view B = model 2's
+hidden states of the same token stream; CCA finds the shared subspace.
+Also demonstrates SVCCA-style layer analysis within one model.
+
+    PYTHONPATH=src python examples/activation_cca.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import randomized_cca
+from repro.core.harvest import activation_views, paired_activation_stream
+from repro.core.rcca import RCCAConfig, randomized_cca_iterator
+from repro.data import SyntheticTokenStream
+from repro.models import build_model
+
+
+def main():
+    cfg1 = get_config("granite-3-2b", smoke=True)
+    cfg2 = get_config("gemma3-1b", smoke=True)  # different family!
+    # same vocab so both can read the same stream
+    import dataclasses
+    cfg2 = dataclasses.replace(cfg2, vocab=cfg1.vocab)
+
+    m1, m2 = build_model(cfg1), build_model(cfg2)
+    p1 = m1.init(jax.random.PRNGKey(0))
+    p2 = m2.init(jax.random.PRNGKey(1))
+
+    stream = SyntheticTokenStream(vocab=cfg1.vocab, batch=8, seq=32, seed=3)
+    batches = [{"tokens": jnp.asarray(stream.get_batch(i)[:, :-1])} for i in range(8)]
+
+    print("[1/2] streaming activation harvest → RandomizedCCA "
+          f"(views: {cfg1.name} vs {cfg2.name})")
+    da = cfg1.d_model
+    db = cfg2.d_model
+    cfg = RCCAConfig(k=8, p=24, q=1, nu=0.01, center=True)
+    res = randomized_cca_iterator(
+        lambda: paired_activation_stream(m1, p1, m2, p2, iter(batches)),
+        da, db, cfg, jax.random.PRNGKey(4),
+    )
+    rho = [f"{r:.3f}" for r in res.rho]
+    print(f"      cross-model canonical correlations: {rho}")
+
+    # negative control: break the row ALIGNMENT (CCA finds aligned
+    # structure; shuffling one view's rows destroys it — token AND
+    # positional correlation both vanish)
+    def shuffled_pairs():
+        for i, b in enumerate(batches):
+            va = activation_views(m1, p1, b)
+            vb = activation_views(m2, p2, b)
+            perm = jax.random.permutation(jax.random.PRNGKey(40 + i), vb.shape[0])
+            yield va, vb[perm]
+
+    res0 = randomized_cca_iterator(
+        shuffled_pairs, da, db, cfg, jax.random.PRNGKey(4)
+    )
+    print(f"      shuffled-alignment control:          "
+          f"{[f'{r:.3f}' for r in res0.rho]}")
+    gap = float(jnp.sum(res.rho) - jnp.sum(res0.rho))
+    print(f"      aligned-vs-shuffled gap: {gap:.3f} (should be >> 0)")
+    assert gap > 0.5
+
+    print("[2/2] SVCCA-style: same model, half depth vs full depth")
+    A = activation_views(m1, p1, batches[0])
+    from repro.core.harvest import layer_views
+    try:
+        Ahalf = layer_views(m1, p1, batches[0], 0.5)
+        r = randomized_cca(Ahalf, A, RCCAConfig(k=8, p=16, q=1, nu=0.01),
+                           jax.random.PRNGKey(5))
+        print(f"      depth-0.5 vs depth-1.0 correlations: "
+              f"{[f'{x:.3f}' for x in r.rho]}")
+    except NotImplementedError:
+        print("      (layer_views supports attn family only)")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Quickstart: RandomizedCCA on a planted two-view corpus, validated
+against the exact dense oracle.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exact_cca, feasibility_errors, randomized_cca
+from repro.core.rcca import RCCAConfig
+from repro.data import planted_views
+
+
+def main():
+    # two views with a shared 8-dim latent
+    A, B = planted_views(0, n=4000, da=64, db=48, rank=8, noise=0.4)
+    A, B = jnp.asarray(A), jnp.asarray(B)
+
+    cfg = RCCAConfig(k=6, p=32, q=1, nu=0.01)
+    result = randomized_cca(A, B, cfg, jax.random.PRNGKey(0))
+
+    print("canonical correlations:", [f"{r:.4f}" for r in result.rho])
+
+    lam_a = float(result.diagnostics["lam_a"])
+    lam_b = float(result.diagnostics["lam_b"])
+    exact = exact_cca(A, B, cfg.k, lam_a, lam_b)
+    print("exact oracle:          ", [f"{r:.4f}" for r in exact.rho])
+
+    errs = feasibility_errors(A, B, result.Xa, result.Xb, lam_a, lam_b)
+    print("feasibility residuals: ", {k: f"{float(v):.2e}" for k, v in errs.items()})
+
+    gap = float(jnp.sum(exact.rho) - jnp.sum(result.rho))
+    print(f"objective gap vs exact: {gap:.5f}")
+    assert gap < 0.05, "RandomizedCCA should be near-exact at this scale"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Checkpointing substrate: sharded save/restore with elastic remesh."""
+
+from .checkpoint import CheckpointManager, restore_pytree, save_pytree
+
+__all__ = ["CheckpointManager", "restore_pytree", "save_pytree"]

@@ -1,0 +1,43 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each module exports ``config()`` (the exact published configuration)
+and ``smoke_config()`` (a reduced same-family variant for CPU tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+ARCH_IDS = [
+    "gemma3_1b",
+    "starcoder2_7b",
+    "gemma_7b",
+    "granite_3_2b",
+    "whisper_small",
+    "kimi_k2_1t_a32b",
+    "deepseek_v2_236b",
+    "xlstm_350m",
+    "zamba2_7b",
+    "qwen2_vl_2b",
+    # the paper's own workload as an 11th selectable config
+    "europarl_cca",
+]
+
+# canonical CLI ids (dashes) → module names
+CANONICAL = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+def get_module(arch: str):
+    mod = CANONICAL.get(arch, arch).replace("-", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(arch: str, smoke: bool = False):
+    m = get_module(arch)
+    return m.smoke_config() if smoke else m.config()
+
+
+def model_archs() -> list[str]:
+    """The 10 LM-family archs (europarl_cca is a CCA workload, not an LM)."""
+    return [a.replace("_", "-") for a in ARCH_IDS if a != "europarl_cca"]

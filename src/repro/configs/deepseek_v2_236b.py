@@ -1,0 +1,51 @@
+"""deepseek-v2-236b: 60L MLA + MoE (2 shared + 160 routed, top-6).
+[arXiv:2405.04434; hf]
+
+MLA: kv_lora=512, q_lora=1536, qk_nope=128, qk_rope=64, v=128.
+"""
+
+from repro.models import AttnConfig, FFNConfig, MLAConfig, ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    n_layers = 60
+    return ModelConfig(
+        name="deepseek-v2-236b",
+        d_model=5120,
+        n_layers=n_layers,
+        vocab=102_400,
+        attn=AttnConfig(
+            n_heads=128, n_kv=128, head_dim=128, rope_theta=10_000.0,
+            mla=MLAConfig(q_lora=1536, kv_lora=512, nope_dim=128, rope_dim=64, v_dim=128),
+        ),
+        ffn=FFNConfig(d_ff=12_288, act="silu", gated=True),  # dense first layer
+        moe=MoEConfig(
+            n_experts=160, top_k=6, d_ff_expert=1536, dispatch_groups=512,
+            n_shared=2, d_ff_shared=3072, n_dense_layers=1,
+        ),
+        layer_pattern=("attn",) + ("attn_moe",) * (n_layers - 1),
+        tie_embeddings=False,
+        max_seq=131_072,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    n_layers = 3
+    return ModelConfig(
+        name="deepseek-v2-smoke",
+        d_model=64,
+        n_layers=n_layers,
+        vocab=512,
+        attn=AttnConfig(
+            n_heads=4, n_kv=4, head_dim=16, rope_theta=10_000.0,
+            mla=MLAConfig(q_lora=32, kv_lora=16, nope_dim=16, rope_dim=8, v_dim=16),
+        ),
+        ffn=FFNConfig(d_ff=128, act="silu", gated=True),
+        moe=MoEConfig(
+            n_experts=8, top_k=2, d_ff_expert=32,
+            n_shared=2, d_ff_shared=64, n_dense_layers=1, capacity_factor=4.0,
+        ),
+        layer_pattern=("attn",) + ("attn_moe",) * (n_layers - 1),
+        tie_embeddings=False,
+        max_seq=256,
+    )

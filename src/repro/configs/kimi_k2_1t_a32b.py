@@ -1,0 +1,46 @@
+"""kimi-k2-1t-a32b: trillion-param MoE, 61L, 384 experts top-8.
+[arXiv:2501.kimi2; unverified — paper-table config]
+
+Per the assignment table: GQA kv=8, d_ff(expert)=2048.  First layer
+dense (d_ff = 8 experts worth), 1 shared expert.
+"""
+
+from repro.models import AttnConfig, FFNConfig, ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    n_layers = 61
+    return ModelConfig(
+        name="kimi-k2-1t-a32b",
+        d_model=7168,
+        n_layers=n_layers,
+        vocab=163_840,
+        attn=AttnConfig(n_heads=64, n_kv=8, head_dim=112, rope_theta=50_000.0),
+        ffn=FFNConfig(d_ff=16_384, act="silu", gated=True),  # dense first layer
+        moe=MoEConfig(
+            n_experts=384, top_k=8, d_ff_expert=2048, dispatch_groups=512,
+            n_shared=1, d_ff_shared=2048, n_dense_layers=1,
+        ),
+        layer_pattern=("attn",) + ("attn_moe",) * (n_layers - 1),
+        tie_embeddings=False,
+        max_seq=131_072,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    n_layers = 3
+    return ModelConfig(
+        name="kimi-k2-smoke",
+        d_model=64,
+        n_layers=n_layers,
+        vocab=512,
+        attn=AttnConfig(n_heads=4, n_kv=2, head_dim=16, rope_theta=50_000.0),
+        ffn=FFNConfig(d_ff=128, act="silu", gated=True),
+        moe=MoEConfig(
+            n_experts=8, top_k=2, d_ff_expert=32,
+            n_shared=1, d_ff_shared=32, n_dense_layers=1, capacity_factor=4.0,
+        ),
+        layer_pattern=("attn",) + ("attn_moe",) * (n_layers - 1),
+        tie_embeddings=False,
+        max_seq=256,
+    )

@@ -1,0 +1,37 @@
+"""qwen2-vl-2b: 28L dense GQA with M-RoPE.  [arXiv:2409.12191; hf]
+
+[vlm] backbone only — the ViT frontend is a stub; input_specs provides
+precomputed patch embeddings merged ahead of the text tokens.
+"""
+
+from repro.models import AttnConfig, FFNConfig, ModelConfig
+
+N_PATCHES = 256  # stub: 16×16 patch grid per image
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-2b",
+        d_model=1536,
+        n_layers=28,
+        vocab=151_936,
+        attn=AttnConfig(n_heads=12, n_kv=2, head_dim=128, rope_theta=1_000_000.0, mrope=True),
+        ffn=FFNConfig(d_ff=8960, act="silu", gated=True),
+        frontend="vision_patches",
+        tie_embeddings=True,
+        max_seq=32_768,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-2b-smoke",
+        d_model=64,
+        n_layers=3,
+        vocab=512,
+        attn=AttnConfig(n_heads=4, n_kv=2, head_dim=16, rope_theta=1_000_000.0, mrope=True),
+        ffn=FFNConfig(d_ff=128, act="silu", gated=True),
+        frontend="vision_patches",
+        tie_embeddings=True,
+        max_seq=256,
+    )

@@ -1,0 +1,41 @@
+"""whisper-small: 12L enc + 12L dec, d=768.  [arXiv:2212.04356; unverified]
+
+[audio] backbone only — the conv/mel frontend is a stub; input_specs
+provides precomputed frame embeddings (B, n_frames, d_model).
+"""
+
+from repro.models import AttnConfig, FFNConfig, ModelConfig
+
+N_FRAMES = 1500  # 30 s of audio at 50 Hz after conv stride — stub length
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small",
+        d_model=768,
+        n_layers=12,
+        n_enc_layers=12,
+        vocab=51_865,
+        attn=AttnConfig(n_heads=12, n_kv=12, head_dim=64, rope_theta=0.0),
+        ffn=FFNConfig(d_ff=3072, act="gelu", gated=False),
+        kind="encdec",
+        frontend="audio_frames",
+        tie_embeddings=True,
+        max_seq=32_768 + 8,  # decoder learned positions (assigned shapes go to 32k)
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small-smoke",
+        d_model=64,
+        n_layers=2,
+        n_enc_layers=2,
+        vocab=512,
+        attn=AttnConfig(n_heads=4, n_kv=4, head_dim=16, rope_theta=0.0),
+        ffn=FFNConfig(d_ff=128, act="gelu", gated=False),
+        kind="encdec",
+        frontend="audio_frames",
+        tie_embeddings=True,
+        max_seq=128,
+    )

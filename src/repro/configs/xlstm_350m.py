@@ -1,0 +1,32 @@
+"""xlstm-350m: 24L alternating mLSTM/sLSTM.  [arXiv:2405.04517; unverified]
+
+Recurrent — O(1) decode state → runs the long_500k cell.
+"""
+
+from repro.models import ModelConfig, XLSTMConfig, repeat_pattern
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-350m",
+        d_model=1024,
+        n_layers=24,
+        vocab=50_304,
+        xlstm=XLSTMConfig(n_heads=4, proj_factor_m=2.0, proj_factor_s=1.3333, conv_width=4),
+        layer_pattern=repeat_pattern(("mlstm", "slstm"), 24),
+        tie_embeddings=True,
+        max_seq=1_048_576,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-350m-smoke",
+        d_model=64,
+        n_layers=4,
+        vocab=512,
+        xlstm=XLSTMConfig(n_heads=2, proj_factor_m=2.0, proj_factor_s=1.3333, conv_width=4),
+        layer_pattern=repeat_pattern(("mlstm", "slstm"), 4),
+        tie_embeddings=True,
+        max_seq=256,
+    )

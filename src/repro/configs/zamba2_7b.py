@@ -1,0 +1,42 @@
+"""zamba2-7b: 81L Mamba2 + one SHARED attention block every 6th layer.
+[arXiv:2411.15242; unverified]
+
+Hybrid — recurrent Mamba2 state + a periodically-invoked shared
+transformer block (its params are reused at every invocation).
+"""
+
+from repro.models import AttnConfig, FFNConfig, ModelConfig, SSMConfig, repeat_pattern
+
+
+def _pattern(n):
+    return repeat_pattern(("shared_attn", "mamba", "mamba", "mamba", "mamba", "mamba"), n)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b",
+        d_model=3584,
+        n_layers=81,
+        vocab=32_000,
+        attn=AttnConfig(n_heads=32, n_kv=32, head_dim=112, rope_theta=10_000.0),
+        ffn=FFNConfig(d_ff=14_336, act="silu", gated=True),
+        ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64, chunk=128),
+        layer_pattern=_pattern(81),
+        tie_embeddings=True,
+        max_seq=1_048_576,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b-smoke",
+        d_model=64,
+        n_layers=13,  # 2 groups of 6 + 1 tail mamba
+        vocab=512,
+        attn=AttnConfig(n_heads=4, n_kv=4, head_dim=16, rope_theta=10_000.0),
+        ffn=FFNConfig(d_ff=128, act="silu", gated=True),
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16, chunk=16),
+        layer_pattern=_pattern(13),
+        tie_embeddings=True,
+        max_seq=256,
+    )

@@ -1,0 +1,69 @@
+"""Activation harvesting: the bridge between the model zoo and the
+paper's technique.
+
+RandomizedCCA consumes paired views (n × d matrices).  This module
+turns any zoo model into a view provider: run the backbone over a token
+stream and emit per-position hidden states as CCA rows.  This is the
+modern form of the paper's own application (multilingual embedding
+alignment on Europarl): align two LMs over paired text, Whisper audio
+frames ↔ transcripts, Qwen2-VL patches ↔ captions, or two layers of
+one model (SVCCA-style diagnostics).
+
+For cluster-scale harvesting the stream is row-sharded exactly like the
+CCA data pass, and states feed repro.core.rcca_dist without leaving the
+device: harvest → pass accumulators is a single jit program per chunk.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def activation_views(model, params, batch: Dict[str, jax.Array],
+                     *, normalize: bool = True) -> jax.Array:
+    """Final-layer hidden states flattened to CCA rows (B·S, D).
+
+    ``normalize`` applies per-row unit-variance scaling, the analogue of
+    the paper's per-view scale-free regularization setup.
+    """
+    hidden, _ = model.forward_hidden(params, batch, remat=False)
+    B, S, D = hidden.shape
+    rows = hidden.reshape(B * S, D).astype(jnp.float32)
+    if normalize:
+        rows = rows / (jnp.std(rows, axis=1, keepdims=True) + 1e-6)
+    return rows
+
+
+def paired_activation_stream(model_a, params_a, model_b, params_b,
+                             token_batches, *, batch_key_a="tokens",
+                             batch_key_b="tokens"):
+    """Iterator of (A_chunk, B_chunk) view pairs for the streaming CCA
+    driver — one chunk per token batch, computed lazily (out-of-core)."""
+    for batch in token_batches:
+        yield (
+            activation_views(model_a, params_a, {batch_key_a: batch[batch_key_a]}),
+            activation_views(model_b, params_b, {batch_key_b: batch[batch_key_b]}),
+        )
+
+
+def layer_views(model, params, batch: Dict[str, jax.Array], layer_frac: float):
+    """SVCCA-style: hidden states at a fractional depth.  Implemented by
+    truncating the stacked layer params before the forward pass."""
+    import copy
+
+    cfg = model.cfg
+    if model.family != "attn":
+        raise NotImplementedError("layer_views supports the attn family")
+    L = cfg.n_layers
+    keep = max(1, int(L * layer_frac))
+    p2 = dict(params)
+    p2["layers"] = jax.tree.map(lambda x: x[:keep], params["layers"])
+    import dataclasses
+
+    cfg2 = dataclasses.replace(cfg, n_layers=keep,
+                               layer_pattern=cfg.pattern()[:keep])
+    m2 = type(model)(cfg2)
+    return activation_views(m2, p2, batch)

@@ -1,0 +1,456 @@
+"""RandomizedCCA — Algorithm 1 of Mineiro & Karampatziakis (2014).
+
+Three entry points, sharing one "finish" (paper lines 19-25):
+
+- :func:`randomized_cca` — paper-faithful in-memory version (the ref).
+- :func:`randomized_cca_streaming` — out-of-core semantics: each data
+  pass is a ``lax.scan`` over row chunks; pass statistics are an
+  explicit, checkpointable pytree (:class:`PassStats`) so a killed pass
+  resumes mid-stream (see repro.ckpt).
+- the multi-device version lives in :mod:`repro.core.rcca_dist`
+  (shard_map over a (pod, data, model) mesh).
+
+Mean-centering is the paper's §3 rank-one update: column sums are
+accumulated alongside each pass (O(da+db) extra state, no extra pass)
+and products are corrected as  Āᵀ B̄ = AᵀB − n μa μbᵀ.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .exact import CCASolution
+from .linalg import orth, sym, topk_svd, tri_solve_right
+from jax.scipy.linalg import solve_triangular
+
+
+# --------------------------------------------------------------------------
+# configuration
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RCCAConfig:
+    """Hyper-parameters of Algorithm 1.
+
+    k:       target embedding dimension.
+    p:       oversampling (paper uses 910-2000 for k=60).
+    q:       number of power-iteration data passes (0 = pure sketch).
+    lam_a/b: explicit ridge regularizers; if ``nu`` is set they are
+             derived scale-free as λ = ν·Tr(XᵀX)/d (paper §4).
+    center:  mean-shift both views via the rank-one update.
+    """
+
+    k: int
+    p: int = 100
+    q: int = 1
+    lam_a: float = 0.0
+    lam_b: float = 0.0
+    nu: Optional[float] = None
+    center: bool = False
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def sketch(self) -> int:  # k̃ = k + p
+        return self.k + self.p
+
+
+class RCCAResult(NamedTuple):
+    Xa: jax.Array
+    Xb: jax.Array
+    rho: jax.Array  # top-k canonical correlations (Σ of paper line 22)
+    Qa: jax.Array  # final range bases — useful to warm-start / analyze
+    Qb: jax.Array
+    diagnostics: dict
+
+
+# --------------------------------------------------------------------------
+# pass statistics (checkpointable)
+# --------------------------------------------------------------------------
+
+
+class PowerStats(NamedTuple):
+    """Accumulators of one range-finder pass (paper lines 6-9)."""
+
+    Ya: jax.Array  # AᵀB Qb   (da, k̃)
+    Yb: jax.Array  # BᵀA Qa   (db, k̃)
+    sa: jax.Array  # Aᵀ1      (da,)
+    sb: jax.Array  # Bᵀ1      (db,)
+    n: jax.Array  # row count ()
+    tr_a: jax.Array  # ‖A‖_F²  () — for scale-free λ
+    tr_b: jax.Array  # ‖B‖_F²  ()
+
+
+class FinalStats(NamedTuple):
+    """Accumulators of the final pass (paper lines 14-18)."""
+
+    Ca: jax.Array  # Qaᵀ AᵀA Qa  (k̃, k̃)
+    Cb: jax.Array  # Qbᵀ BᵀB Qb  (k̃, k̃)
+    F: jax.Array  # Qaᵀ AᵀB Qb  (k̃, k̃)
+    sa: jax.Array
+    sb: jax.Array
+    n: jax.Array
+    tr_a: jax.Array
+    tr_b: jax.Array
+
+
+def init_power_stats(da: int, db: int, sketch: int, dtype) -> PowerStats:
+    z = jnp.zeros
+    return PowerStats(
+        Ya=z((da, sketch), dtype),
+        Yb=z((db, sketch), dtype),
+        sa=z((da,), dtype),
+        sb=z((db,), dtype),
+        n=z((), dtype),
+        tr_a=z((), dtype),
+        tr_b=z((), dtype),
+    )
+
+
+def init_final_stats(sketch: int, da: int, db: int, dtype) -> FinalStats:
+    z = jnp.zeros
+    return FinalStats(
+        Ca=z((sketch, sketch), dtype),
+        Cb=z((sketch, sketch), dtype),
+        F=z((sketch, sketch), dtype),
+        sa=z((da,), dtype),
+        sb=z((db,), dtype),
+        n=z((), dtype),
+        tr_a=z((), dtype),
+        tr_b=z((), dtype),
+    )
+
+
+def update_power_stats(
+    s: PowerStats, a: jax.Array, b: jax.Array, Qa: jax.Array, Qb: jax.Array
+) -> PowerStats:
+    """Fold one row chunk into the range-finder accumulators.
+
+    The two rank-k̃ products are the data-pass hot spot; the Pallas
+    kernel (repro.kernels.ccapass) implements exactly this update with
+    fused VMEM tiling — this jnp form is its oracle.
+    """
+    f32 = jnp.float32
+    pb = b @ Qb  # (c, k̃)
+    pa = a @ Qa
+    return PowerStats(
+        Ya=s.Ya + (a.T @ pb).astype(s.Ya.dtype),
+        Yb=s.Yb + (b.T @ pa).astype(s.Yb.dtype),
+        sa=s.sa + jnp.sum(a, axis=0, dtype=f32).astype(s.sa.dtype),
+        sb=s.sb + jnp.sum(b, axis=0, dtype=f32).astype(s.sb.dtype),
+        n=s.n + a.shape[0],
+        tr_a=s.tr_a + jnp.sum(a.astype(f32) ** 2),
+        tr_b=s.tr_b + jnp.sum(b.astype(f32) ** 2),
+    )
+
+
+def update_power_stats_kernel(
+    s: PowerStats, a: jax.Array, b: jax.Array, Qa: jax.Array, Qb: jax.Array
+) -> PowerStats:
+    """Pallas-kernel-backed version of :func:`update_power_stats`
+    (fused MXU matmuls; interpret-mode on CPU)."""
+    from repro.kernels import ops as kops
+
+    f32 = jnp.float32
+    dYa, dYb = kops.power_pass_chunk(a, b, Qa, Qb)
+    return s._replace(
+        Ya=s.Ya + dYa.astype(s.Ya.dtype),
+        Yb=s.Yb + dYb.astype(s.Yb.dtype),
+        sa=s.sa + jnp.sum(a, axis=0, dtype=f32).astype(s.sa.dtype),
+        sb=s.sb + jnp.sum(b, axis=0, dtype=f32).astype(s.sb.dtype),
+        n=s.n + a.shape[0],
+        tr_a=s.tr_a + jnp.sum(a.astype(f32) ** 2),
+        tr_b=s.tr_b + jnp.sum(b.astype(f32) ** 2),
+    )
+
+
+def update_final_stats_kernel(
+    s: FinalStats, a: jax.Array, b: jax.Array, Qa: jax.Array, Qb: jax.Array
+) -> FinalStats:
+    """Pallas-kernel-backed version of :func:`update_final_stats`
+    (projgram fusion: each view read from HBM once per chunk)."""
+    from repro.kernels import ops as kops
+
+    f32 = jnp.float32
+    dCa, dCb, dF = kops.final_pass_chunk(a, b, Qa, Qb)
+    return s._replace(
+        Ca=s.Ca + dCa.astype(s.Ca.dtype),
+        Cb=s.Cb + dCb.astype(s.Cb.dtype),
+        F=s.F + dF.astype(s.F.dtype),
+        sa=s.sa + jnp.sum(a, axis=0, dtype=f32).astype(s.sa.dtype),
+        sb=s.sb + jnp.sum(b, axis=0, dtype=f32).astype(s.sb.dtype),
+        n=s.n + a.shape[0],
+        tr_a=s.tr_a + jnp.sum(a.astype(f32) ** 2),
+        tr_b=s.tr_b + jnp.sum(b.astype(f32) ** 2),
+    )
+
+
+def update_final_stats(
+    s: FinalStats, a: jax.Array, b: jax.Array, Qa: jax.Array, Qb: jax.Array
+) -> FinalStats:
+    pa = a @ Qa  # (c, k̃)
+    pb = b @ Qb
+    f32 = jnp.float32
+    return FinalStats(
+        Ca=s.Ca + (pa.T @ pa).astype(s.Ca.dtype),
+        Cb=s.Cb + (pb.T @ pb).astype(s.Cb.dtype),
+        F=s.F + (pa.T @ pb).astype(s.F.dtype),
+        sa=s.sa + jnp.sum(a, axis=0, dtype=f32).astype(s.sa.dtype),
+        sb=s.sb + jnp.sum(b, axis=0, dtype=f32).astype(s.sb.dtype),
+        n=s.n + a.shape[0],
+        tr_a=s.tr_a + jnp.sum(a.astype(f32) ** 2),
+        tr_b=s.tr_b + jnp.sum(b.astype(f32) ** 2),
+    )
+
+
+# --------------------------------------------------------------------------
+# centering corrections (rank-one updates, paper §3)
+# --------------------------------------------------------------------------
+
+
+def centered_Y(s: PowerStats, Qa, Qb, center: bool):
+    if not center:
+        return s.Ya, s.Yb
+    n = jnp.maximum(s.n, 1.0)
+    mu_a = s.sa / n
+    mu_b = s.sb / n
+    Ya = s.Ya - n * jnp.outer(mu_a, mu_b @ Qb)  # ĀᵀB̄Qb = AᵀBQb − n μa(μbᵀQb)
+    Yb = s.Yb - n * jnp.outer(mu_b, mu_a @ Qa)
+    return Ya, Yb
+
+
+def centered_CF(s: FinalStats, Qa, Qb, center: bool):
+    if not center:
+        return s.Ca, s.Cb, s.F
+    n = jnp.maximum(s.n, 1.0)
+    qa = Qa.T @ (s.sa / n)  # (k̃,) = Qaᵀ μa
+    qb = Qb.T @ (s.sb / n)
+    Ca = s.Ca - n * jnp.outer(qa, qa)
+    Cb = s.Cb - n * jnp.outer(qb, qb)
+    F = s.F - n * jnp.outer(qa, qb)
+    return Ca, Cb, F
+
+
+def resolve_lambdas(cfg: RCCAConfig, tr_a, tr_b, da: int, db: int):
+    if cfg.nu is None:
+        return jnp.asarray(cfg.lam_a, jnp.float32), jnp.asarray(cfg.lam_b, jnp.float32)
+    return cfg.nu * tr_a / da, cfg.nu * tr_b / db
+
+
+# --------------------------------------------------------------------------
+# finish: paper lines 19-25 (host-scale, (k̃)³)
+# --------------------------------------------------------------------------
+
+
+def finish(
+    Ca: jax.Array,
+    Cb: jax.Array,
+    F: jax.Array,
+    QtQa: jax.Array,
+    QtQb: jax.Array,
+    Qa: jax.Array,
+    Qb: jax.Array,
+    n: jax.Array,
+    lam_a,
+    lam_b,
+    k: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Lines 19-25: whiten F in the Q bases, SVD, map back to X.
+
+    NOTE on conventions: the paper's ``chol`` is Matlab's (upper R,
+    RᵀR = C) so it writes F ← La⁻ᵀ F Lb⁻¹ and Xa = √n Qa La⁻¹ U.  With
+    jnp's lower factor (L Lᵀ = C) the equivalent is F ← La⁻¹ F Lb⁻ᵀ and
+    Xa = √n Qa La⁻ᵀ U.  (Both give Q̃ᵀ(QᵀMQ)Q̃ = I for Q̃ = Q·W.)
+    """
+    La = jnp.linalg.cholesky(sym(Ca + lam_a * QtQa))
+    Lb = jnp.linalg.cholesky(sym(Cb + lam_b * QtQb))
+    Fw = solve_triangular(La, F, lower=True)  # La⁻¹ F
+    Fw = tri_solve_right(Fw, Lb, trans=True)  # ... Lb⁻ᵀ
+    U, S, V = topk_svd(Fw, k)
+    sqn = jnp.sqrt(n.astype(Fw.dtype))
+    Xa = sqn * (Qa @ solve_triangular(La.T, U, lower=False))  # √n Qa La⁻ᵀ U
+    Xb = sqn * (Qb @ solve_triangular(Lb.T, V, lower=False))
+    return Xa, Xb, S, La, Lb
+
+
+# --------------------------------------------------------------------------
+# in-memory, paper-faithful
+# --------------------------------------------------------------------------
+
+
+def randomized_cca(
+    A: jax.Array, B: jax.Array, cfg: RCCAConfig, key: jax.Array
+) -> RCCAResult:
+    """Algorithm 1, verbatim, for in-memory A, B (the reference)."""
+    n, da = A.shape
+    db = B.shape[1]
+    kt = cfg.sketch
+    ka, kb = jax.random.split(key)
+    dt = cfg.dtype
+    Qa = jax.random.normal(ka, (da, kt), dt)
+    Qb = jax.random.normal(kb, (db, kt), dt)
+
+    if cfg.center:
+        A = A - jnp.mean(A, axis=0, keepdims=True)
+        B = B - jnp.mean(B, axis=0, keepdims=True)
+
+    for _ in range(cfg.q):  # lines 5-12
+        Ya = A.T @ (B @ Qb)
+        Yb = B.T @ (A @ Qa)
+        Qa = orth(Ya)
+        Qb = orth(Yb)
+
+    Pa = A @ Qa  # lines 14-18 (final pass)
+    Pb = B @ Qb
+    Ca = sym(Pa.T @ Pa)
+    Cb = sym(Pb.T @ Pb)
+    F = Pa.T @ Pb
+
+    tr_a = jnp.sum(A.astype(jnp.float32) ** 2)
+    tr_b = jnp.sum(B.astype(jnp.float32) ** 2)
+    lam_a, lam_b = resolve_lambdas(cfg, tr_a, tr_b, da, db)
+
+    QtQa = sym(Qa.T @ Qa)
+    QtQb = sym(Qb.T @ Qb)
+    Xa, Xb, S, La, Lb = finish(
+        Ca, Cb, F, QtQa, QtQb, Qa, Qb, jnp.asarray(n, jnp.float32), lam_a, lam_b, cfg.k
+    )
+    diag = {"lam_a": lam_a, "lam_b": lam_b, "n": n}
+    return RCCAResult(Xa=Xa, Xb=Xb, rho=S, Qa=Qa, Qb=Qb, diagnostics=diag)
+
+
+# --------------------------------------------------------------------------
+# streaming / out-of-core
+# --------------------------------------------------------------------------
+
+
+def _scan_pass(update_fn, stats, A_chunks: jax.Array, B_chunks: jax.Array, Qa, Qb):
+    """One data pass as a lax.scan over stacked row chunks."""
+
+    def body(s, ab):
+        a, b = ab
+        return update_fn(s, a, b, Qa, Qb), None
+
+    stats, _ = jax.lax.scan(body, stats, (A_chunks, B_chunks))
+    return stats
+
+
+def randomized_cca_streaming(
+    A_chunks: jax.Array,  # (nc, c, da) — out-of-core rows, chunked
+    B_chunks: jax.Array,  # (nc, c, db)
+    cfg: RCCAConfig,
+    key: jax.Array,
+    *,
+    use_kernels: bool = False,
+) -> RCCAResult:
+    """Algorithm 1 where every data pass is a scan over row chunks.
+
+    This is the single-device form of the production data pass: the
+    distributed version (rcca_dist) wraps the same updates in shard_map
+    and psums the accumulators.
+    """
+    nc, c, da = A_chunks.shape
+    db = B_chunks.shape[-1]
+    kt = cfg.sketch
+    dt = cfg.dtype
+    ka, kb = jax.random.split(key)
+    Qa = jax.random.normal(ka, (da, kt), dt)
+    Qb = jax.random.normal(kb, (db, kt), dt)
+
+    upd_pow = update_power_stats_kernel if use_kernels else update_power_stats
+    upd_fin = update_final_stats_kernel if use_kernels else update_final_stats
+
+    for _ in range(cfg.q):
+        stats = init_power_stats(da, db, kt, jnp.float32)
+        stats = _scan_pass(upd_pow, stats, A_chunks, B_chunks, Qa, Qb)
+        Ya, Yb = centered_Y(stats, Qa, Qb, cfg.center)
+        Qa = orth(Ya.astype(dt))
+        Qb = orth(Yb.astype(dt))
+
+    fstats = init_final_stats(kt, da, db, jnp.float32)
+    fstats = _scan_pass(upd_fin, fstats, A_chunks, B_chunks, Qa, Qb)
+    Ca, Cb, F = centered_CF(fstats, Qa, Qb, cfg.center)
+    lam_a, lam_b = resolve_lambdas(cfg, fstats.tr_a, fstats.tr_b, da, db)
+    QtQa = sym((Qa.T @ Qa).astype(jnp.float32))
+    QtQb = sym((Qb.T @ Qb).astype(jnp.float32))
+    Xa, Xb, S, _, _ = finish(
+        Ca, Cb, F, QtQa, QtQb, Qa.astype(jnp.float32), Qb.astype(jnp.float32),
+        fstats.n, lam_a, lam_b, cfg.k,
+    )
+    diag = {"lam_a": lam_a, "lam_b": lam_b, "n": fstats.n}
+    return RCCAResult(Xa=Xa, Xb=Xb, rho=S, Qa=Qa, Qb=Qb, diagnostics=diag)
+
+
+def randomized_cca_iterator(
+    source_factory,
+    da: int,
+    db: int,
+    cfg: RCCAConfig,
+    key: jax.Array,
+    *,
+    resume_state: Optional[dict] = None,
+    on_pass_end=None,
+) -> RCCAResult:
+    """True out-of-core driver: ``source_factory()`` yields (a, b) row
+    chunks (e.g. from disk / a distributed FS).  Per-chunk updates are
+    jitted; pass state is a plain pytree so the caller can checkpoint it
+    between chunks (fault tolerance: resume a killed pass mid-stream via
+    ``resume_state`` = {"pass_idx", "chunk_idx", "stats", "Qa", "Qb"}).
+    """
+    kt = cfg.sketch
+    dt = cfg.dtype
+    ka, kb = jax.random.split(key)
+    Qa = jax.random.normal(ka, (da, kt), dt)
+    Qb = jax.random.normal(kb, (db, kt), dt)
+
+    upd_pow = jax.jit(update_power_stats)
+    upd_fin = jax.jit(update_final_stats)
+
+    start_pass, start_chunk, stats0 = 0, 0, None
+    if resume_state is not None:
+        start_pass = int(resume_state["pass_idx"])
+        start_chunk = int(resume_state["chunk_idx"])
+        stats0 = resume_state["stats"]
+        Qa, Qb = resume_state["Qa"], resume_state["Qb"]
+
+    total_passes = cfg.q + 1  # q power passes + final pass
+    for pass_idx in range(start_pass, total_passes):
+        is_final = pass_idx == cfg.q
+        if stats0 is not None:
+            stats = stats0
+            stats0 = None
+        else:
+            stats = (
+                init_final_stats(kt, da, db, jnp.float32)
+                if is_final
+                else init_power_stats(da, db, kt, jnp.float32)
+            )
+        upd = upd_fin if is_final else upd_pow
+        for chunk_idx, (a, b) in enumerate(source_factory()):
+            if chunk_idx < start_chunk:
+                continue
+            stats = upd(stats, a, b, Qa, Qb)
+            if on_pass_end is not None:
+                on_pass_end(pass_idx, chunk_idx, stats, Qa, Qb)
+        start_chunk = 0
+        if not is_final:
+            Ya, Yb = centered_Y(stats, Qa, Qb, cfg.center)
+            Qa = orth(Ya.astype(dt))
+            Qb = orth(Yb.astype(dt))
+
+    Ca, Cb, F = centered_CF(stats, Qa, Qb, cfg.center)
+    lam_a, lam_b = resolve_lambdas(cfg, stats.tr_a, stats.tr_b, da, db)
+    QtQa = sym((Qa.T @ Qa).astype(jnp.float32))
+    QtQb = sym((Qb.T @ Qb).astype(jnp.float32))
+    Xa, Xb, S, _, _ = finish(
+        Ca, Cb, F, QtQa, QtQb, Qa.astype(jnp.float32), Qb.astype(jnp.float32),
+        stats.n, lam_a, lam_b, cfg.k,
+    )
+    return RCCAResult(
+        Xa=Xa, Xb=Xb, rho=S, Qa=Qa, Qb=Qb,
+        diagnostics={"lam_a": lam_a, "lam_b": lam_b, "n": stats.n},
+    )

@@ -1,0 +1,12 @@
+"""Data substrate: feature hashing, synthetic paired-view corpora
+(Europarl stand-in with planted correlations), and LM token pipelines."""
+
+from .hashing import HashingFeaturizer
+from .synthetic import PlantedCCAData, SyntheticTokenStream, planted_views
+
+__all__ = [
+    "HashingFeaturizer",
+    "PlantedCCAData",
+    "SyntheticTokenStream",
+    "planted_views",
+]

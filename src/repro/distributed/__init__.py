@@ -1,0 +1,7 @@
+"""Distributed-optimization substrate: compressed collectives, bucketed
+overlap, straggler-tolerant pass accounting."""
+
+from .compress import int8_decode, int8_encode, psum_int8_ef
+from .overlap import bucketed_accumulate
+
+__all__ = ["int8_encode", "int8_decode", "psum_int8_ef", "bucketed_accumulate"]

@@ -1,0 +1,76 @@
+"""Gradient/accumulator compression for cross-pod collectives.
+
+int8 block quantization with error feedback (EF-SGD style): the
+quantization residual is carried to the next round, so compression
+noise averages out instead of biasing the solve.  Intended for the
+``pod`` axis where ICI/DCN bandwidth is scarcest: Y-accumulator psums
+in the CCA data pass and LM gradient all-reduces are 4× cheaper in
+bytes at k̃/grad scale.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_encode(x: jax.Array, block: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8 quantization along the last axis.
+
+    Returns (q: int8, scales: f32 with last dim = ceil(d/block)).
+    """
+    *lead, d = x.shape
+    pad = (-d) % block
+    if pad:
+        x = jnp.pad(x, [*[(0, 0)] * len(lead), (0, pad)])
+    xb = x.reshape(*lead, -1, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def int8_decode(q: jax.Array, scale: jax.Array, d: int) -> jax.Array:
+    xb = q.astype(jnp.float32) * scale[..., None]
+    *lead, nb, block = xb.shape
+    return xb.reshape(*lead, nb * block)[..., :d]
+
+
+def psum_int8_ef(
+    x: jax.Array,
+    axis: str,
+    err: Optional[jax.Array] = None,
+    *,
+    block: int = 256,
+) -> Tuple[jax.Array, jax.Array]:
+    """Compressed psum with error feedback (use inside shard_map).
+
+    x: local contribution; err: residual carried from the previous call
+    (same shape as x).  Returns (global_sum_approx, new_err).
+
+    The int8 payload is summed in int32 across the axis (exact), then
+    rescaled by the max block scale — a 1-scale-per-block all-reduce.
+    """
+    if err is not None:
+        x = x + err
+    q, scale = int8_encode(x, block)
+    # use a shared scale across the axis so the int32 sum is coherent
+    gscale = jax.lax.pmax(scale, axis)
+    # requantize against the global scale
+    d = x.shape[-1]
+    xq = int8_decode(q, scale, d)  # dequantized local (matches what we'll send)
+    q2 = jnp.clip(
+        jnp.round(
+            jnp.pad(xq, [*[(0, 0)] * (x.ndim - 1), (0, (-d) % block)])
+            .reshape(*x.shape[:-1], -1, block)
+            / gscale[..., None]
+        ),
+        -127,
+        127,
+    )
+    new_err = x - int8_decode(q2.astype(jnp.int8), gscale, d)
+    total = jax.lax.psum(q2.astype(jnp.int32), axis)
+    out = int8_decode(total, gscale, d)
+    return out, new_err

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the CCA data-pass hot spots.
+
+matmul.py   — MXU-tiled NN/TN matmul (f32 VMEM accumulator)
+projgram.py — fused project+gram (one HBM read of X per final pass)
+ops.py      — jitted public wrappers (interpret-mode on CPU)
+ref.py      — pure-jnp oracles
+"""
+
+from . import ops, ref
+from .matmul import pallas_matmul
+from .projgram import projgram
+
+__all__ = ["ops", "ref", "pallas_matmul", "projgram"]

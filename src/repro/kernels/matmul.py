@@ -1,0 +1,152 @@
+"""Pallas TPU matmul kernels for the CCA data pass.
+
+The data pass of Algorithm 1 is three matmul shapes (see DESIGN.md §3):
+
+  NN: P = X @ Q            (rows × features) @ (features × k̃)
+  TN: Y = Xᵀ @ P           contraction over the streamed row dimension
+  (gram) C = Pᵀ @ P        TN with X == P — reuses the TN kernel
+
+Both kernels use an f32 VMEM scratch accumulator with the contraction
+dimension innermost in the grid, MXU-aligned blocks (multiples of 128 on
+every matmul dim), and cast to the output dtype only on the final
+contraction step.  Validated against ref.py in interpret mode; on real
+TPUs the same code lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# --------------------------------------------------------------------------
+# kernel bodies
+# --------------------------------------------------------------------------
+
+
+def _mm_nn_kernel(x_ref, q_ref, o_ref, acc_ref, *, n_k_steps: int):
+    """o[i,j] = Σ_k x[i,k] q[k,j]; grid (i, j, k) with k innermost."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        q_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k_step == n_k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _mm_tn_kernel(x_ref, p_ref, o_ref, acc_ref, *, n_k_steps: int):
+    """o[d,j] = Σ_n x[n,d] p[n,j]  (contract over leading/stream dim)."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        p_ref[...],
+        (((0,), (0,)), ((), ())),  # xᵀ p without materializing the transpose
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k_step == n_k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+# --------------------------------------------------------------------------
+# host-side wrappers (padding + BlockSpec assembly)
+# --------------------------------------------------------------------------
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block(dim: int, cap: int) -> int:
+    """Largest power-of-two multiple of 128 that divides the padded dim
+    and is ≤ cap.  Padding is always to a multiple of 128 first."""
+    b = 128
+    while b * 2 <= cap and dim % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def _pad2(x: jax.Array, r: int, c: int) -> jax.Array:
+    pr, pc = r - x.shape[0], c - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("transpose_lhs", "block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def pallas_matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    transpose_lhs: bool = False,
+    block_m: int = 512,
+    block_n: int = 512,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """MXU-tiled ``x @ y`` (or ``xᵀ @ y``) with f32 accumulation.
+
+    Shapes: NN — x (M, K), y (K, N) → (M, N);
+            TN — x (K, M), y (K, N) → (M, N)  (contraction = dim 0).
+    Inputs are zero-padded to multiples of 128; the result is sliced
+    back, so any shape is accepted.
+    """
+    if transpose_lhs:
+        K, M = x.shape
+        K2, N = y.shape
+    else:
+        M, K = x.shape
+        K2, N = y.shape
+    assert K == K2, f"contraction mismatch {K} vs {K2}"
+
+    Mp, Np, Kp = _round_up(M, 128), _round_up(N, 128), _round_up(K, 128)
+    bm, bn, bk = _pick_block(Mp, block_m), _pick_block(Np, block_n), _pick_block(Kp, block_k)
+    gm, gn, gk = Mp // bm, Np // bn, Kp // bk
+
+    if transpose_lhs:
+        xp = _pad2(x, Kp, Mp)
+        x_spec = pl.BlockSpec((bk, bm), lambda i, j, k: (k, i))
+        kernel = functools.partial(_mm_tn_kernel, n_k_steps=gk)
+    else:
+        xp = _pad2(x, Mp, Kp)
+        x_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
+        kernel = functools.partial(_mm_nn_kernel, n_k_steps=gk)
+    yp = _pad2(y, Kp, Np)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[x_spec, pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(xp, yp)
+    return out[:M, :N]

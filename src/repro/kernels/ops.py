@@ -1,0 +1,59 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+These are the units the CCA data-pass engine calls when
+``use_kernels=True``; on CPU (this container) they run in interpret
+mode, on TPU they lower to Mosaic.  Every op has a pure-jnp oracle in
+ref.py and a shape/dtype sweep test in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import pallas_matmul
+from .projgram import projgram
+
+# interpret=True on CPU hosts (including the dry-run container), False on TPU.
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def project(x: jax.Array, q: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """P = X @ Q — the projection half of a data pass."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return pallas_matmul(x, q, out_dtype=jnp.float32, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def accumulate_tn(x: jax.Array, p: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """Y_delta = Xᵀ @ P — the accumulation half (contract streamed rows)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return pallas_matmul(x, p, transpose_lhs=True, out_dtype=jnp.float32, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def power_pass_chunk(a, b, Qa, Qb, *, interpret: bool | None = None):
+    """Fused chunk update of Algorithm 1 lines 7-8:
+    ΔYa = Aᵀ(B Qb), ΔYb = Bᵀ(A Qa)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    pb = pallas_matmul(b, Qb, out_dtype=jnp.float32, interpret=interpret)
+    pa = pallas_matmul(a, Qa, out_dtype=jnp.float32, interpret=interpret)
+    dYa = pallas_matmul(a, pb, transpose_lhs=True, out_dtype=jnp.float32, interpret=interpret)
+    dYb = pallas_matmul(b, pa, transpose_lhs=True, out_dtype=jnp.float32, interpret=interpret)
+    return dYa, dYb
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def final_pass_chunk(a, b, Qa, Qb, *, interpret: bool | None = None):
+    """Fused chunk update of Algorithm 1 lines 15-17:
+    ΔCa = QaᵀAᵀA Qa, ΔCb = QbᵀBᵀB Qb, ΔF = QaᵀAᵀB Qb — each view's
+    design matrix is read from HBM exactly once (projgram fusion)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    pa, Ca = projgram(a, Qa, interpret=interpret)
+    pb, Cb = projgram(b, Qb, interpret=interpret)
+    F = pallas_matmul(pa, pb, transpose_lhs=True, out_dtype=jnp.float32, interpret=interpret)
+    return Ca, Cb, F

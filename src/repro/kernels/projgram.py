@@ -1,0 +1,103 @@
+"""Fused project+gram Pallas kernel: one X read → (P = XQ, C = PᵀP).
+
+Final-pass hot spot (Algorithm 1 lines 15-17): the projected covariance
+``C = Qᵀ Xᵀ X Q`` is computed as the Gram of ``P = X Q``.  Fusing both
+matmuls into one kernel means X is read from HBM exactly once per pass
+and P never makes an HBM round-trip before the Gram — the remaining P
+write-out is only needed for the cross term F (done as a TN matmul on
+the emitted Pa, Pb).
+
+VMEM budget per grid step (bn=256, bd=512, k̃p ≤ 1024, f32):
+  X block 0.5 MB + Q block 2 MB + P scratch 1 MB + C block ≤ 4 MB ≤ 8 MB.
+For k̃p > 1024 the wrapper falls back to the unfused matmul pair.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .matmul import _pad2, _pick_block, _round_up, pallas_matmul
+
+
+def _projgram_kernel(x_ref, q_ref, p_ref, c_ref, acc_ref, *, n_d_steps: int):
+    """grid (n_t, d_t), d innermost.  acc_ref : (bn, k̃p) running P tile."""
+    n_step = pl.program_id(0)
+    d_step = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(n_step == 0, d_step == 0))
+    def _init_c():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    @pl.when(d_step == 0)
+    def _init_p():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], q_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(d_step == n_d_steps - 1)
+    def _flush():
+        p = acc_ref[...]
+        p_ref[...] = p.astype(p_ref.dtype)
+        c_ref[...] += jax.lax.dot_general(  # PᵀP on the MXU
+            p, p, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        ).astype(c_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_d", "interpret", "p_dtype")
+)
+def projgram(
+    x: jax.Array,
+    q: jax.Array,
+    *,
+    block_n: int = 256,
+    block_d: int = 512,
+    p_dtype=jnp.float32,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Return (P = x@q, C = PᵀP) with x read once.  x: (n, d), q: (d, k̃)."""
+    n, d = x.shape
+    d2, kt = q.shape
+    assert d == d2
+    ktp = _round_up(kt, 128)
+    if ktp > 1024:  # C block would blow VMEM — unfused fallback
+        p = pallas_matmul(x, q, out_dtype=p_dtype, interpret=interpret)
+        c = pallas_matmul(p, p, transpose_lhs=True, interpret=interpret)
+        return p, c
+
+    np_, dp = _round_up(n, 128), _round_up(d, 128)
+    bn, bd = _pick_block(np_, block_n), _pick_block(dp, block_d)
+    gn, gd = np_ // bn, dp // bd
+    xp = _pad2(x, np_, dp)
+    qp = _pad2(q, dp, ktp)
+
+    p, c = pl.pallas_call(
+        functools.partial(_projgram_kernel, n_d_steps=gd),
+        grid=(gn, gd),
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, k: (i, k)),
+            pl.BlockSpec((bd, ktp), lambda i, k: (k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, ktp), lambda i, k: (i, 0)),
+            pl.BlockSpec((ktp, ktp), lambda i, k: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, ktp), p_dtype),
+            jax.ShapeDtypeStruct((ktp, ktp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bn, ktp), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(xp, qp)
+    return p[:n, :kt], c[:kt, :kt]

@@ -1,0 +1,1 @@
+"""Launch layer: production meshes, step builders, dry-run, drivers."""

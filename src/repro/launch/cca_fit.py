@@ -1,0 +1,110 @@
+"""The paper's end-to-end driver: distributed RandomizedCCA fit.
+
+    PYTHONPATH=src python -m repro.launch.cca_fit --smoke --ckpt-dir /tmp/cca
+
+Streams a (synthetic-Europarl) paired-view corpus through Algorithm 1's
+q+1 data passes.  Two execution modes:
+
+- ``--mode dist``: all rows resident, shard_map over the host mesh —
+  the production mode whose production-mesh lowering the dry-run checks;
+- ``--mode stream``: out-of-core iterator with per-chunk jitted updates
+  and mid-pass CHECKPOINTING (kill/resume fault tolerance for passes
+  over data too large for memory).
+
+Reports the paper's metrics: Σ canonical correlations (train objective),
+feasibility residuals, and — at smoke scale — agreement with the exact
+dense CCA oracle.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.configs.europarl_cca import config as europarl_config
+from repro.configs.europarl_cca import smoke_config as europarl_smoke
+from repro.core import exact_cca, feasibility_errors
+from repro.core.rcca import RCCAConfig, randomized_cca_iterator
+from repro.core.rcca_dist import dist_randomized_cca
+from repro.data import PlantedCCAData
+from repro.launch.mesh import make_host_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mode", default="dist", choices=["dist", "stream"])
+    ap.add_argument("--k", type=int, default=None)
+    ap.add_argument("--p", type=int, default=None)
+    ap.add_argument("--q", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    wl = europarl_smoke() if args.smoke else europarl_config()
+    rcca = wl.rcca
+    if args.k is not None:
+        import dataclasses
+        rcca = dataclasses.replace(rcca, k=args.k)
+    if args.p is not None:
+        import dataclasses
+        rcca = dataclasses.replace(rcca, p=args.p)
+    if args.q is not None:
+        import dataclasses
+        rcca = dataclasses.replace(rcca, q=args.q)
+
+    data = PlantedCCAData(n=wl.n, da=wl.da, db=wl.db, chunk=wl.chunk,
+                          rank=max(rcca.k * 2, 16), seed=args.seed)
+    key = jax.random.PRNGKey(args.seed)
+
+    t0 = time.time()
+    if args.mode == "dist":
+        A, B = data.materialize()
+        mesh = make_host_mesh()
+        print(f"[cca] dist mode, mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}, "
+              f"n={wl.n} da={wl.da} db={wl.db} k={rcca.k} p={rcca.p} q={rcca.q}")
+        res = dist_randomized_cca(jnp.asarray(A), jnp.asarray(B), rcca, key, mesh)
+    else:
+        mgr = CheckpointManager(args.ckpt_dir, keep=2) if args.ckpt_dir else None
+        state = {"count": 0}
+
+        def on_chunk(pass_idx, chunk_idx, stats, Qa, Qb):
+            state["count"] += 1
+            if mgr and state["count"] % 16 == 0:
+                mgr.save(
+                    pass_idx * 10_000 + chunk_idx,
+                    {"stats": stats._asdict(), "Qa": Qa, "Qb": Qb},
+                    metadata={"pass_idx": pass_idx, "chunk_idx": chunk_idx},
+                )
+
+        print(f"[cca] stream mode, n={wl.n} chunks={data.n_chunks}")
+        res = randomized_cca_iterator(
+            lambda: iter(data), wl.da, wl.db, rcca, key, on_pass_end=on_chunk
+        )
+        A, B = data.materialize()  # for evaluation only
+
+    dt = time.time() - t0
+    rho = np.asarray(res.rho)
+    print(f"[cca] done in {dt:.1f}s; sum rho = {rho.sum():.4f}; top-5 rho = {rho[:5]}")
+
+    lam_a = float(res.diagnostics["lam_a"])
+    lam_b = float(res.diagnostics["lam_b"])
+    feas = feasibility_errors(jnp.asarray(A), jnp.asarray(B),
+                              jnp.asarray(res.Xa), jnp.asarray(res.Xb), lam_a, lam_b)
+    print("[cca] feasibility:", {k: float(v) for k, v in feas.items()})
+
+    if args.smoke:
+        ex = exact_cca(jnp.asarray(A), jnp.asarray(B), rcca.k, lam_a, lam_b)
+        gap = float(np.sum(np.asarray(ex.rho)) - rho.sum())
+        print(f"[cca] exact-oracle objective gap: {gap:.5f} "
+              f"(exact {float(np.sum(np.asarray(ex.rho))):.4f})")
+
+
+if __name__ == "__main__":
+    main()

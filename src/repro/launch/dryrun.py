@@ -1,0 +1,324 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and extract memory / cost / collective statistics.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b \
+        --shape train_4k --mesh multi --out results/dryrun
+
+The XLA_FLAGS line above MUST run before any other import (jax locks
+the device count at first init) — hence its position at the top.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config, model_archs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import steps as S  # noqa: E402
+from repro.models import EncDecModel, build_model  # noqa: E402
+from repro.optim import AdamWConfig, adamw_init  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# collective-bytes extraction (not in cost_analysis — parse the HLO)
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all tensors in an HLO shape string like
+    'f32[128,256]' or '(bf16[8,16], bf16[8,16])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the HLO."""
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # result-shape and op name appear as:  %x = f32[..] all-gather(...)
+        m = re.search(r"=\s*((?:\([^)]*\))|(?:[\w\[\],]+))\s+([\w-]+)", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        for kind in _COLLECTIVES:
+            if op == kind or op.startswith(kind + "-start"):
+                stats[kind]["count"] += 1
+                stats[kind]["bytes"] += _shape_bytes(m.group(1))
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items() if isinstance(v, dict))
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_cca_cell(shape_name: str, mesh, *, microbatch: int = 512,
+                   int8_reduce: bool = False, reduce_buckets: int = 1,
+                   reduce_dtype=None, chunk: int = 65_536):
+    """Lower the paper's own workload: one distributed CCA data pass
+    (power or final) at full Europarl scale — n=1.24M streamed rows per
+    pass step, d_a = d_b = 2^19, k̃ = k+p = 2060.  Rows shard over
+    (pod, data); Q/Y shard features over model (DESIGN.md §2).
+
+    §Perf knobs: microbatch / int8_reduce / reduce_buckets."""
+    import functools
+    from jax.experimental.shard_map import shard_map
+    from repro.configs.europarl_cca import config as cca_config
+    from repro.core.rcca_dist import final_pass_local, power_pass_local
+
+    wl = cca_config()
+    kt = wl.rcca.sketch
+    row_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    col_axis = "model"
+    data_spec = P(row_axes, col_axis)
+    q_spec = P(col_axis, None)
+    rep = P()
+    kind = "power" if shape_name == "cca_power_pass" else "final"
+    fn_local = power_pass_local if kind == "power" else final_pass_local
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(data_spec, data_spec, q_spec, q_spec),
+        out_specs=(q_spec, q_spec, rep) if kind == "power" else (rep, rep, rep),
+        check_rep=False,
+    )
+    def pass_step(a, b, Qa, Qb):
+        kw = dict(row_axes=row_axes, col_axis=col_axis,
+                  microbatch=microbatch, compute_dtype=jnp.bfloat16)
+        if kind == "power":
+            kw.update(int8_reduce=int8_reduce, reduce_buckets=reduce_buckets,
+                      reduce_dtype=reduce_dtype)
+        out = fn_local(a, b, Qa, Qb, **kw)
+        if kind == "power":
+            Ya, Yb, sa, sb, tra, trb, nn = out
+            return Ya, Yb, nn
+        Ca, Cb, F = out[0], out[1], out[2]
+        return Ca, Cb, F
+
+    a_sds = jax.ShapeDtypeStruct((chunk, wl.da), jnp.float32)
+    b_sds = jax.ShapeDtypeStruct((chunk, wl.db), jnp.float32)
+    q_a = jax.ShapeDtypeStruct((wl.da, kt), jnp.float32)
+    q_b = jax.ShapeDtypeStruct((wl.db, kt), jnp.float32)
+    ns = lambda s: NamedSharding(mesh, s)
+    fn = jax.jit(pass_step,
+                 in_shardings=(ns(data_spec), ns(data_spec), ns(q_spec), ns(q_spec)))
+    with jax.set_mesh(mesh):
+        lowered = fn.lower(a_sds, b_sds, q_a, q_b)
+    return lowered, {"kind": f"cca_{kind}"}
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, remat: bool = True,
+               loss_chunks: int = 8, policy: str = "2d", flash: bool = False,
+               cca_opts: dict | None = None):
+    """Lower one (arch × shape) cell on a mesh; returns (lowered, meta)."""
+    if arch in ("europarl-cca", "europarl_cca"):
+        return lower_cca_cell(shape_name, mesh, **(cca_opts or {}))
+    cfg = get_config(arch)
+    shape = S.SHAPES[shape_name]
+    ok, reason = S.shape_applicable(cfg, shape)
+    if not ok:
+        return None, {"skipped": reason}
+
+    from repro.models.common import sharding_policy
+
+    model = build_model(cfg)
+    model.flash_attention = flash
+    p_sharding, p_shape = S.param_shardings(model, mesh, policy=policy)
+
+    if shape.kind == "train":
+        n_params = sum(x.size for x in jax.tree.leaves(p_shape))
+        # >300B params: bf16 moments (f32 mu/nu cannot fit 512×16GB HBM)
+        opt_cfg = AdamWConfig(
+            moment_dtype="bfloat16" if n_params > 3e11 else "float32"
+        )
+        opt_shape = jax.eval_shape(
+            lambda p: adamw_init(p, jnp.dtype(opt_cfg.moment_dtype)), p_shape
+        )
+        o_sharding = S.opt_shardings(mesh, p_sharding)
+        from repro.models.common import apply_policy_tree
+        batch, batch_spec = S.input_specs(cfg, shape)
+        with sharding_policy(policy):
+            batch_spec = apply_policy_tree(batch_spec)
+        b_sharding = S.fit_specs(batch_spec, batch, mesh)
+        step = S.make_train_step(model, opt_cfg, loss_chunks=loss_chunks,
+                                 remat=remat)
+        fn = jax.jit(
+            step,
+            in_shardings=(p_sharding, o_sharding, b_sharding),
+            out_shardings=(p_sharding, o_sharding, None),
+            donate_argnums=(0, 1),
+        )
+        with jax.set_mesh(mesh), sharding_policy(policy):
+            lowered = fn.lower(p_shape, opt_shape, batch)
+        return lowered, {"kind": "train"}
+
+    if shape.kind == "prefill":
+        batch, batch_spec = S.input_specs(cfg, shape)
+        b_sharding = S.fit_specs(batch_spec, batch, mesh)
+        cache, c_sharding = S.cache_specs_for(model, cfg, shape, mesh)
+        step = S.make_prefill_step(model)
+        if isinstance(model, EncDecModel):
+            args = (p_shape, batch["frames"], batch["tokens"], cache)
+            in_sh = (p_sharding, b_sharding["frames"], b_sharding["tokens"], c_sharding)
+            donate = (3,)
+        else:
+            args = (p_shape, batch["tokens"], cache)
+            in_sh = (p_sharding, b_sharding["tokens"], c_sharding)
+            donate = (2,)
+        fn = jax.jit(step, in_shardings=in_sh,
+                     out_shardings=(None, c_sharding), donate_argnums=donate)
+        with jax.set_mesh(mesh):
+            lowered = fn.lower(*args)
+        return lowered, {"kind": "prefill"}
+
+    # decode
+    batch, batch_spec = S.input_specs(cfg, shape)
+    b_sharding = S.fit_specs(batch_spec, batch, mesh)
+    cache, c_sharding = S.cache_specs_for(model, cfg, shape, mesh)
+    step = S.make_decode_step(model)
+    fn = jax.jit(
+        step,
+        in_shardings=(p_sharding, b_sharding["tokens"], c_sharding),
+        out_shardings=(None, c_sharding),
+        donate_argnums=(2,),
+    )
+    with jax.set_mesh(mesh):
+        lowered = fn.lower(p_shape, batch["tokens"], cache)
+    return lowered, {"kind": "decode"}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, remat=True,
+             loss_chunks=8, hlo_collectives=True, policy="2d",
+             flash=False, cca_opts=None) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, mesh, remat=remat,
+                                   loss_chunks=loss_chunks, policy=policy,
+                                   flash=flash, cca_opts=cca_opts)
+    except Exception as e:  # lowering failure = bug, record it loudly
+        return {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "lower_error", "error": f"{type(e).__name__}: {e}",
+        }
+    if lowered is None:
+        return {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "skipped", "reason": meta["skipped"],
+        }
+    t_lower = time.time() - t0
+    t0 = time.time()
+    try:
+        compiled = lowered.compile()
+    except Exception as e:
+        return {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "compile_error", "error": f"{type(e).__name__}: {e}",
+            "lower_s": round(t_lower, 1),
+        }
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    out = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok", "kind": meta["kind"], "devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+    }
+    if hlo_collectives:
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        out["collectives"] = collective_stats(hlo)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--loss-chunks", type=int, default=8)
+    ap.add_argument("--policy", default="2d", choices=["2d", "dp"])
+    ap.add_argument("--flash", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = model_archs() if args.arch == "all" else [args.arch]
+    shapes = list(S.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    ok = True
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch}__{shape}__{mesh_kind}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[dryrun] {tag}: cached", flush=True)
+                    continue
+                print(f"[dryrun] {tag}: lowering...", flush=True)
+                res = run_cell(arch, shape, mesh_kind,
+                               remat=not args.no_remat,
+                               loss_chunks=args.loss_chunks,
+                               policy=args.policy, flash=args.flash)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=2)
+                status = res["status"]
+                extra = res.get("error", res.get("reason", ""))
+                print(f"[dryrun] {tag}: {status} {extra}", flush=True)
+                if status.endswith("error"):
+                    ok = False
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

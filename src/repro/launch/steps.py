@@ -1,0 +1,313 @@
+"""Step builders + assigned input shapes.
+
+Everything the dry-run, trainer and server share:
+
+- SHAPES: the four assigned (seq, batch) cells per LM arch;
+- fit_specs: drop mesh axes that don't divide a dim (e.g. batch=1 on
+  long_500k) so one logical spec tree serves every mesh;
+- make_train_step: chunked-CE loss (never materializes (B,S,V)),
+  AdamW, MoE aux loss, donated params/opt;
+- make_decode_step / make_prefill_step: serving paths with donated
+  caches;
+- input_specs: ShapeDtypeStruct stand-ins for every model input.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import EncDecModel, LMModel, build_model
+from repro.models.common import BATCH_AXES, MODEL_AXIS
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+# --------------------------------------------------------------------------
+# assigned shapes
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def shape_applicable(cfg, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped) — DESIGN.md §long_500k policy."""
+    if shape.name == "long_500k":
+        if not cfg.sub_quadratic:
+            return False, "pure full-attention arch at 500k (no sub-quadratic path)"
+        if cfg.kind == "encdec":
+            return False, "enc-dec audio: inputs are ≤30s clips by construction"
+    return True, ""
+
+
+# --------------------------------------------------------------------------
+# spec fitting
+# --------------------------------------------------------------------------
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+    return n
+
+
+def fit_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop spec axes that are absent from the mesh or don't divide the
+    corresponding dim.  Keeps one logical spec tree valid on any mesh /
+    any batch size (elastic meshes, long-context batch=1, …)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        # greedy prefix that divides the dim
+        kept = []
+        n = 1
+        for a in axes:
+            sz = _axis_size(mesh, a)
+            if shape[i] % (n * sz) == 0:
+                kept.append(a)
+                n *= sz
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    # pad spec to rank
+    out += [None] * (len(shape) - len(out))
+    return P(*out)
+
+
+def fit_specs(spec_tree, shape_tree, mesh: Mesh):
+    """Tree-wise fit_spec; returns NamedShardings."""
+    def one(spec, like):
+        return NamedSharding(mesh, fit_spec(spec, like.shape, mesh))
+    return jax.tree.map(one, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+
+def chunked_ce_loss(model, params, hidden: jax.Array, labels: jax.Array,
+                    n_chunks: int = 8) -> jax.Array:
+    """Mean CE over (B,S) without materializing (B,S,V) logits: scan
+    over sequence chunks, rematerializing each chunk's logits in bwd."""
+    B, S, D = hidden.shape
+    while S % n_chunks:
+        n_chunks //= 2
+    C = S // n_chunks
+    h = hidden.reshape(B, n_chunks, C, D).swapaxes(0, 1)  # (nc,B,C,D)
+    l = labels.reshape(B, n_chunks, C).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk(carry, hl):
+        hc, lc = hl
+        logits = model.logits(params, hc).astype(jnp.float32)  # (B,C,V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - tgt), None
+
+    total, _ = jax.lax.scan(chunk, jnp.zeros((), jnp.float32), (h, l))
+    return total / (B * S)
+
+
+# --------------------------------------------------------------------------
+# train step
+# --------------------------------------------------------------------------
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, *, loss_chunks: int = 8,
+                    remat: bool = True):
+    """(params, opt_state, batch) → (params, opt_state, metrics).
+
+    batch: {"tokens": (B,S+1)} + optional stub-frontend inputs
+    ("frames" for encdec, "embeds" for vlm).
+    """
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            tokens = batch["tokens"]
+            inner = {**batch, "tokens": tokens[:, :-1]}
+            hidden, aux = model.forward_hidden(p, inner, remat=remat)
+            loss = chunked_ce_loss(model, p, hidden, tokens[:, 1:], loss_chunks)
+            total = loss + aux.get("moe_aux", 0.0)
+            return total, (loss, aux)
+
+        (total, (loss, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = {"loss": loss, "total_loss": total, **opt_metrics}
+        if "moe_aux" in aux:
+            metrics["moe_aux"] = aux["moe_aux"]
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# serve steps
+# --------------------------------------------------------------------------
+
+
+def make_decode_step(model):
+    def decode_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    return decode_step
+
+
+def make_prefill_step(model):
+    if isinstance(model, EncDecModel):
+        def prefill_step(params, frames, tokens, cache):
+            return model.prefill(params, frames, tokens, cache)
+    else:
+        def prefill_step(params, tokens, cache):
+            return model.prefill(params, tokens, cache)
+    return prefill_step
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation)
+# --------------------------------------------------------------------------
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model inputs + their logical PartitionSpecs for a shape cell.
+
+    Returns {"batch": (tree, spec_tree)} for train, or
+    {"tokens"/"frames"/"cache": ...} for serve kinds.
+    """
+    B = shape.batch
+    dspec = P(BATCH_AXES, None)
+
+    if shape.kind == "train":
+        S = shape.seq
+        batch = {"tokens": sds((B, S + 1), jnp.int32)}
+        spec = {"tokens": dspec}
+        if cfg.kind == "encdec":
+            from repro.configs.whisper_small import N_FRAMES
+            batch["frames"] = sds((B, N_FRAMES, cfg.d_model), jnp.float32)
+            spec["frames"] = P(BATCH_AXES, None, None)
+        elif cfg.frontend == "vision_patches":
+            from repro.configs.qwen2_vl_2b import N_PATCHES
+            # patches replace part of the text budget: total positions = S
+            batch["tokens"] = sds((B, S + 1 - N_PATCHES), jnp.int32)
+            batch["embeds"] = sds((B, N_PATCHES, cfg.d_model), jnp.float32)
+            spec["embeds"] = P(BATCH_AXES, None, None)
+        return batch, spec
+
+    if shape.kind == "prefill":
+        S = shape.seq
+        batch = {"tokens": sds((B, S), jnp.int32)}
+        spec = {"tokens": dspec}
+        if cfg.kind == "encdec":
+            from repro.configs.whisper_small import N_FRAMES
+            batch["frames"] = sds((B, N_FRAMES, cfg.d_model), jnp.float32)
+            spec["frames"] = P(BATCH_AXES, None, None)
+        return batch, spec
+
+    # decode: one new token against a seq-long cache
+    batch = {"tokens": sds((B, 1), jnp.int32)}
+    spec = {"tokens": dspec}
+    return batch, spec
+
+
+def cache_specs_for(model, cfg, shape: ShapeSpec, mesh: Mesh):
+    """(cache ShapeDtypeStruct tree, NamedSharding tree) for serve cells."""
+    B = shape.batch
+    long_ctx = shape.name == "long_500k" or B < _axis_size(mesh, BATCH_AXES)
+    if isinstance(model, EncDecModel):
+        from repro.configs.whisper_small import N_FRAMES
+        cache = jax.eval_shape(
+            lambda: model.init_cache(B, shape.seq + 8, enc_len=N_FRAMES)
+        )
+        specs = model.cache_specs(long_ctx=long_ctx)
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(B, shape.seq + 8))
+        specs = model.cache_specs(long_ctx=long_ctx)
+    return cache, fit_specs(specs, cache, mesh)
+
+
+def _fsdp_spec(spec: P, shape: Tuple[int, ...], min_elems: int,
+               axes=BATCH_AXES) -> P:
+    """Add a data-axes shard to the largest unsharded dim of a large
+    param (ZeRO/FSDP).  fit_spec later drops non-dividing axes."""
+    import math
+
+    if math.prod(shape) < min_elems:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    free = [i for i, e in enumerate(entries) if e is None and shape[i] > 1]
+    if not free:
+        return spec
+    i = max(free, key=lambda j: shape[j])
+    entries[i] = axes
+    return P(*entries)
+
+
+def param_shardings(model, mesh: Mesh, params_shape=None, *, fsdp: str = "auto",
+                    policy: str = "2d"):
+    """NamedShardings for the param tree (eval_shape'd if not given).
+
+    fsdp: "on" | "off" | "auto" — auto enables ZeRO-style param/optimizer
+    sharding over the data axes when TP-only residency would exceed
+    ~8 GB/device (DESIGN.md §5: a 1T-param MoE cannot be data-replicated).
+    policy: "2d" (DP×TP) | "dp" (pure data parallel; model axis joins the
+    batch axes, params fully FSDP-sharded — §Perf iteration for
+    collective-bound small-model training).
+    """
+    from repro.models.common import apply_policy_tree, sharding_policy
+
+    if params_shape is None:
+        params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    with sharding_policy(policy):
+        specs = apply_policy_tree(model.specs())
+    if policy == "dp":
+        fsdp = "on"
+    if fsdp != "off":
+        n_bytes = sum(
+            x.size * x.dtype.itemsize for x in jax.tree.leaves(params_shape)
+        )
+        tp = _axis_size(mesh, MODEL_AXIS) if policy != "dp" else 1
+        # params + f32 mu/nu ≈ 5× param bytes, TP-sharded only
+        resident = 5 * n_bytes / max(tp, 1)
+        if fsdp == "on" or resident > 8 * 2**30:
+            fs_axes = BATCH_AXES + (MODEL_AXIS,) if policy == "dp" else BATCH_AXES
+            specs = jax.tree.map(
+                lambda s, x: _fsdp_spec(s, x.shape, 2**18, axes=fs_axes),
+                specs, params_shape, is_leaf=lambda x: isinstance(x, P),
+            )
+    return fit_specs(specs, params_shape, mesh), params_shape
+
+
+def opt_shardings(mesh: Mesh, p_shard_tree):
+    """Optimizer state shards exactly like its mirrored params."""
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(step=NamedSharding(mesh, P()), mu=p_shard_tree, nu=p_shard_tree)

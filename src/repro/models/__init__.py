@@ -1,0 +1,34 @@
+"""Model zoo: all assigned architectures as composable JAX modules."""
+
+from .config import (
+    AttnConfig,
+    FFNConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    XLSTMConfig,
+    repeat_pattern,
+)
+from .encdec import EncDecModel
+from .transformer import LMModel
+
+
+def build_model(cfg: ModelConfig):
+    """Instantiate the right model class for a config."""
+    return EncDecModel(cfg) if cfg.kind == "encdec" else LMModel(cfg)
+
+
+__all__ = [
+    "AttnConfig",
+    "FFNConfig",
+    "MLAConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "XLSTMConfig",
+    "repeat_pattern",
+    "EncDecModel",
+    "LMModel",
+    "build_model",
+]

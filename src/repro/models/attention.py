@@ -1,0 +1,524 @@
+"""Attention blocks: GQA (full / sliding-window / M-RoPE) and
+DeepSeek-V2 MLA — train, prefill and absorbed-decode paths.
+
+Sharding: heads over "model"; KV caches (B, S, kv_heads, hd) with batch
+over ("pod","data") and kv heads over "model" (MLA caches are per-token
+latent vectors, replicated over "model", batch-sharded).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import (
+    BATCH_AXES,
+    MODEL_AXIS,
+    apply_mrope,
+    apply_rope,
+    dense_init,
+    init_rmsnorm,
+    rmsnorm,
+    shard,
+    softcap,
+)
+from .config import AttnConfig
+
+NEG_INF = -1e30
+
+
+# ==========================================================================
+# GQA
+# ==========================================================================
+
+
+def init_gqa(key, cfg: AttnConfig, d_model: int, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    H, Kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], d_model, H * hd, dtype),
+        "wk": dense_init(ks[1], d_model, Kv * hd, dtype),
+        "wv": dense_init(ks[2], d_model, Kv * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def gqa_specs(cfg: AttnConfig, d_model: int) -> Dict[str, Any]:
+    s = {
+        "wq": P(None, MODEL_AXIS),
+        "wk": P(None, MODEL_AXIS),
+        "wv": P(None, MODEL_AXIS),
+        "wo": P(MODEL_AXIS, None),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = P(None)
+        s["k_norm"] = P(None)
+    return s
+
+
+def _sdpa(q, k, v, mask, softcap_val=None):
+    """q: (B,S,H,hd), k/v: (B,T,Kv,hd) — grouped attention.
+
+    mask: (B,1,S,T) or (1,1,S,T) additive-compatible boolean (True=keep).
+    """
+    B, S, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    q = q.reshape(B, S, Kv, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k, preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    scores = softcap(scores, softcap_val)
+    scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, S, H * hd)
+
+
+def _flash_fwd_scan(q, k, v, mask, kv_chunk):
+    """Online-softmax forward over KV chunks.  Returns (out_unnormalized
+    accumulator, running max m, running denom l) — shared by the
+    inference path and the custom-VJP residual computation."""
+    B, S, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    nc = T // kv_chunk
+    qh = q.reshape(B, S, Kv, G, hd)
+    k_c = k.reshape(B, nc, kv_chunk, Kv, hd).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(B, nc, kv_chunk, Kv, hd).transpose(1, 0, 2, 3, 4)
+    m_b = jnp.broadcast_to(mask, (mask.shape[0], 1, S, T))
+    m_c = m_b.reshape(m_b.shape[0], 1, S, nc, kv_chunk).transpose(3, 0, 1, 2, 4)
+    scale = 1.0 / math.sqrt(hd)
+
+    def body(carry, inp):
+        acc, m_run, l_run = carry
+        kc, vc, mc = inp
+        s = jnp.einsum("bskgh,btkh->bkgst", qh, kc,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mc[:, :, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkh->bkgsh", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Kv, G, S, hd), jnp.float32)
+    m0 = jnp.full((B, Kv, G, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Kv, G, S), jnp.float32)
+    (acc, m_run, l_run), _ = jax.lax.scan(body, (acc0, m0, l0), (k_c, v_c, m_c))
+    return acc, m_run, l_run
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def flash_attention(q, k, v, mask, kv_chunk=512):
+    """FlashAttention with a HAND-WRITTEN backward: per-KV-chunk scores
+    are RECOMPUTED in bwd, so neither pass ever materializes (…,S,T) —
+    jax autodiff of the fwd scan would save every chunk's p-matrix
+    (≈S² over the stack), which is what §Perf iterations 1.3/2.7
+    measured and refuted.  No softcap support (callers fall back).
+    Returns (B, S, H·hd)."""
+    out, _ = _flash_fwd(q, k, v, mask, kv_chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, mask, kv_chunk):
+    B, S, H, hd = q.shape
+    acc, m_run, l_run = _flash_fwd_scan(q, k, v, mask, kv_chunk)
+    out = (acc / jnp.maximum(l_run, 1e-30)[..., None])
+    out_flat = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H * hd).astype(v.dtype)
+    L = m_run + jnp.log(jnp.maximum(l_run, 1e-30))  # logsumexp per query
+    return out_flat, (q, k, v, mask, out.astype(v.dtype), L)
+
+
+def _flash_bwd(kv_chunk, res, dout_flat):
+    import numpy as _np
+    from jax import dtypes as _dtypes
+
+    q, k, v, mask, out, L = res
+    B, S, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    nc = T // kv_chunk
+    scale = 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, S, Kv, G, hd)
+    dout = dout_flat.reshape(B, S, Kv, G, hd).transpose(0, 2, 3, 1, 4)  # (B,Kv,G,S,hd)
+    # D_i = Σ_h dout_i·out_i  (flash-bwd identity)
+    Dv = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+
+    k_c = k.reshape(B, nc, kv_chunk, Kv, hd).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(B, nc, kv_chunk, Kv, hd).transpose(1, 0, 2, 3, 4)
+    m_b = jnp.broadcast_to(mask, (mask.shape[0], 1, S, T))
+    m_c = m_b.reshape(m_b.shape[0], 1, S, nc, kv_chunk).transpose(3, 0, 1, 2, 4)
+
+    def body(dq_acc, inp):
+        kc, vc, mc = inp
+        s = jnp.einsum("bskgh,btkh->bkgst", qh, kc,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mc[:, :, None], s, NEG_INF)
+        p = jnp.exp(s - L[..., None])  # exact softmax weights, recomputed
+        dp = jnp.einsum("bkgsh,btkh->bkgst", dout, vc,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - Dv[..., None])  # (B,Kv,G,S,Tc)
+        dq_acc = dq_acc + jnp.einsum("bkgst,btkh->bskgh", ds, kc,
+                                     preferred_element_type=jnp.float32) * scale
+        dk_j = jnp.einsum("bkgst,bskgh->btkh", ds, qh,
+                          preferred_element_type=jnp.float32) * scale
+        dv_j = jnp.einsum("bkgst,bkgsh->btkh", p, dout,
+                          preferred_element_type=jnp.float32)
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, S, Kv, G, hd), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(body, dq0, (k_c, v_c, m_c))
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(B, T, Kv, hd)
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(B, T, Kv, hd)
+    d_mask = _np.zeros(mask.shape, _dtypes.float0)  # boolean: zero cotangent
+    return (dq.reshape(B, S, H, hd).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype), d_mask)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _sdpa_chunked(q, k, v, mask, softcap_val=None, kv_chunk: int = 512):
+    """Flash-style attention: lax.scan over KV chunks with an online
+    softmax, so the live score buffer is (…, S, kv_chunk) instead of
+    (…, S, T) — S²·f32 never exists in HBM.  Exact (same math as
+    _sdpa); §Perf iteration 1 for the memory-bound train cells.
+    """
+    B, S, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    if T % kv_chunk:
+        return _sdpa(q, k, v, mask, softcap_val)
+    G = H // Kv
+    nc = T // kv_chunk
+    qh = q.reshape(B, S, Kv, G, hd)
+    k_c = k.reshape(B, nc, kv_chunk, Kv, hd).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(B, nc, kv_chunk, Kv, hd).transpose(1, 0, 2, 3, 4)
+    m_b = jnp.broadcast_to(mask, (mask.shape[0], 1, S, T))
+    m_c = m_b.reshape(m_b.shape[0], 1, S, nc, kv_chunk).transpose(3, 0, 1, 2, 4)
+    scale = 1.0 / math.sqrt(hd)
+
+    def body(carry, inp):
+        acc, m_run, l_run = carry  # (B,Kv,G,S,hd) f32, (B,Kv,G,S), (B,Kv,G,S)
+        kc, vc, mc = inp
+        s = jnp.einsum("bskgh,btkh->bkgst", qh, kc,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, softcap_val)
+        s = jnp.where(mc[:, :, None] if mc.ndim == 4 else mc, s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkh->bkgsh", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Kv, G, S, hd), jnp.float32)
+    m0 = jnp.full((B, Kv, G, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Kv, G, S), jnp.float32)
+    (acc, m_run, l_run), _ = jax.lax.scan(body, (acc0, m0, l0), (k_c, v_c, m_c))
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4)  # (B,S,Kv,G,hd)
+    return out.reshape(B, S, H * hd).astype(v.dtype)
+
+
+def make_mask(S: int, T: int, *, causal: bool, window: Optional[int], offset: int = 0):
+    """(1, 1, S, T) boolean mask. ``offset`` = absolute position of query 0."""
+    qpos = offset + jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    m = jnp.ones((S, T), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+def gqa_forward(
+    p: Dict[str, Any],
+    x: jax.Array,
+    cfg: AttnConfig,
+    *,
+    window: Optional[int] = None,
+    rope_theta=None,  # float or traced scalar (scanned per-layer theta)
+    positions: Optional[jax.Array] = None,  # (B,S) or (B,S,3) for mrope
+    cache: Optional[Dict[str, jax.Array]] = None,
+    kv_x: Optional[jax.Array] = None,  # cross-attention source
+    causal: bool = True,
+    mask: Optional[jax.Array] = None,  # explicit (1,1,S,T) override
+    chunked: bool = False,  # flash-style online-softmax attention
+) -> tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Returns (output, updated_cache).
+
+    - train/prefill: cache=None or fresh cache dict to fill
+    - decode: cache with "pos" scalar; S==1 expected (any S works)
+    - ``mask`` overrides internal mask construction — used by the scan
+      bodies to select local/global masks per layer without running the
+      attention twice.
+    """
+    B, S, D = x.shape
+    H, Kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    theta = cfg.rope_theta if rope_theta is None else rope_theta
+
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    src = x if kv_x is None else kv_x
+    Skv = src.shape[1]
+    k = (src @ p["wk"]).reshape(B, Skv, Kv, hd)
+    v = (src @ p["wv"]).reshape(B, Skv, Kv, hd)
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+
+    if positions is None:
+        base = 0 if cache is None else cache["pos"]
+        positions = base + jnp.arange(S)[None, :]
+        kv_positions = jnp.arange(Skv)[None, :] if cache is None else positions
+    else:
+        kv_positions = positions
+
+    # no rope on cross-attention; static theta == 0 disables (whisper)
+    use_rope = kv_x is None and not (isinstance(theta, (int, float)) and theta == 0.0)
+    if use_rope:
+        if cfg.mrope:
+            if positions.ndim == 2:
+                positions = jnp.broadcast_to(positions[..., None], (*positions.shape, 3))
+                kv_positions = positions
+            q = apply_mrope(q.swapaxes(1, 2), positions[:, None], theta).swapaxes(1, 2)
+            k = apply_mrope(k.swapaxes(1, 2), kv_positions[:, None], theta).swapaxes(1, 2)
+        else:
+            q = apply_rope(q.swapaxes(1, 2), positions[:, None], theta).swapaxes(1, 2)
+            k = apply_rope(k.swapaxes(1, 2), kv_positions[:, None], theta).swapaxes(1, 2)
+
+    new_cache = None
+    if cache is not None and kv_x is None:
+        pos = cache["pos"]
+        if S == 1:
+            # iota-masked update: elementwise, so GSPMD keeps a
+            # sequence-sharded cache sharded (DUS would gather it).
+            sel = (jnp.arange(cache["k"].shape[1]) == pos)[None, :, None, None]
+            ck = jnp.where(sel, k.astype(cache["k"].dtype), cache["k"])
+            cv = jnp.where(sel, v.astype(cache["v"].dtype), cache["v"])
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        new_cache = {"k": ck, "v": cv, "pos": pos + S}
+        k, v = ck, cv
+        if mask is None:
+            T = k.shape[1]
+            kpos = jnp.arange(T)[None, :]
+            qpos = pos + jnp.arange(S)[:, None]
+            m = kpos <= qpos
+            if window is not None:
+                m &= kpos > qpos - window
+            mask = m[None, None]
+    elif mask is None and kv_x is not None:
+        mask = jnp.ones((1, 1, S, Skv), bool)
+    elif mask is None:
+        mask = make_mask(S, Skv, causal=causal, window=window)
+
+    use_flash = (
+        chunked and q.shape[1] >= 1024 and cfg.logit_softcap is None
+        and k.shape[1] % 512 == 0 and mask.shape[0] == 1
+    )
+    if use_flash:
+        out = flash_attention(q, k, v, mask, 512)
+    else:
+        out = _sdpa(q, k, v, mask, cfg.logit_softcap)
+    out = shard(out, P(BATCH_AXES, None, MODEL_AXIS))
+    return out @ p["wo"], new_cache
+
+
+def init_gqa_cache(cfg: AttnConfig, B: int, max_seq: int, dtype) -> Dict[str, jax.Array]:
+    Kv, hd = cfg.n_kv, cfg.head_dim
+    return {
+        "k": jnp.zeros((B, max_seq, Kv, hd), dtype),
+        "v": jnp.zeros((B, max_seq, Kv, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def gqa_cache_specs(cfg: AttnConfig, *, long_ctx: bool = False) -> Dict[str, Any]:
+    """long_ctx: batch is tiny (can't shard) → shard the SEQUENCE over
+    the data axes instead, kv heads over model (sequence parallelism
+    for the KV cache).  Axes that don't divide are dropped at launch
+    time by fit_spec."""
+    if long_ctx:
+        kv_spec = P(None, BATCH_AXES, MODEL_AXIS, None)
+    else:
+        kv_spec = P(BATCH_AXES, None, MODEL_AXIS, None)
+    return {"k": kv_spec, "v": kv_spec, "pos": P()}
+
+
+# ==========================================================================
+# MLA (DeepSeek-V2)
+# ==========================================================================
+
+
+def init_mla(key, cfg: AttnConfig, d_model: int, dtype) -> Dict[str, Any]:
+    m = cfg.mla
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], d_model, m.q_lora, dtype),
+        "q_norm": init_rmsnorm(m.q_lora, dtype),
+        "w_uq": dense_init(ks[1], m.q_lora, H * (m.nope_dim + m.rope_dim), dtype),
+        "w_dkv": dense_init(ks[2], d_model, m.kv_lora, dtype),
+        "kv_norm": init_rmsnorm(m.kv_lora, dtype),
+        "w_uk": dense_init(ks[3], m.kv_lora, H * m.nope_dim, dtype),
+        "w_uv": dense_init(ks[4], m.kv_lora, H * m.v_dim, dtype),
+        "w_kr": dense_init(ks[5], d_model, m.rope_dim, dtype),
+        "wo": dense_init(ks[6], H * m.v_dim, d_model, dtype),
+    }
+
+
+def mla_specs(cfg: AttnConfig, d_model: int) -> Dict[str, Any]:
+    return {
+        "w_dq": P(None, None),
+        "q_norm": P(None),
+        "w_uq": P(None, MODEL_AXIS),
+        "w_dkv": P(None, None),
+        "kv_norm": P(None),
+        "w_uk": P(None, MODEL_AXIS),
+        "w_uv": P(None, MODEL_AXIS),
+        "w_kr": P(None, None),
+        "wo": P(MODEL_AXIS, None),
+    }
+
+
+def mla_forward_train(
+    p: Dict[str, Any],
+    x: jax.Array,
+    cfg: AttnConfig,
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,
+) -> tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Training / prefill path: expand latents to per-head k, v."""
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.n_heads
+    nd, rd, vd = m.nope_dim, m.rope_dim, m.v_dim
+
+    q = rmsnorm(x @ p["w_dq"], p["q_norm"]) @ p["w_uq"]
+    q = q.reshape(B, S, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+
+    c_kv = rmsnorm(x @ p["w_dkv"], p["kv_norm"])  # (B,S,kv_lora)
+    k_rope = x @ p["w_kr"]  # (B,S,rd), shared across heads
+
+    base = 0 if cache is None else cache["pos"]
+    positions = base + jnp.arange(S)[None, :]
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), positions[:, None], cfg.rope_theta).swapaxes(1, 2)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)  # (B,S,rd), head-shared
+
+    new_cache = None
+    if cache is not None:
+        pos = cache["pos"]
+        cc = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
+        cr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, pos, 0))
+        new_cache = {"c_kv": cc, "k_rope": cr, "pos": pos + S}
+        # (prefill path: S is large, caches batch-sharded — DUS is fine here)
+
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, nd)
+    v = (c_kv @ p["w_uv"]).reshape(B, S, H, vd)
+
+    scale = 1.0 / math.sqrt(nd + rd)
+    s_nope = jnp.einsum("bshd,bthd->bhst", q_nope, k_nope, preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshd,btd->bhst", q_rope, k_rope, preferred_element_type=jnp.float32)
+    scores = (s_nope + s_rope) * scale
+    mask = make_mask(S, S, causal=True, window=None)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", w, v).reshape(B, S, H * vd)
+    out = shard(out, P(BATCH_AXES, None, MODEL_AXIS))
+    return out @ p["wo"], new_cache
+
+
+def mla_forward_decode(
+    p: Dict[str, Any],
+    x: jax.Array,
+    cfg: AttnConfig,
+    cache: Dict[str, jax.Array],
+) -> tuple[jax.Array, Dict[str, jax.Array]]:
+    """Absorbed decode: attention runs in the kv_lora latent space, so
+    the per-step cost is O(S·(kv_lora+rope_dim)) per head-batch instead
+    of materializing (S, H, nope+v) expanded keys/values — the reason
+    MLA caches stay small (DESIGN.md §3)."""
+    m = cfg.mla
+    B, S, D = x.shape  # S == 1 in steady-state decode
+    H = cfg.n_heads
+    nd, rd, vd = m.nope_dim, m.rope_dim, m.v_dim
+
+    q = rmsnorm(x @ p["w_dq"], p["q_norm"]) @ p["w_uq"]
+    q = q.reshape(B, S, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+
+    c_new = rmsnorm(x @ p["w_dkv"], p["kv_norm"])
+    k_rope_new = x @ p["w_kr"]
+    pos = cache["pos"]
+    positions = pos + jnp.arange(S)[None, :]
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), positions[:, None], cfg.rope_theta).swapaxes(1, 2)
+    k_rope_new = apply_rope(k_rope_new, positions, cfg.rope_theta)
+
+    if S == 1:  # iota-masked update (sequence-shardable; see gqa_forward)
+        sel = (jnp.arange(cache["c_kv"].shape[1]) == pos)[None, :, None]
+        c_kv = jnp.where(sel, c_new.astype(cache["c_kv"].dtype), cache["c_kv"])
+        k_rope = jnp.where(sel, k_rope_new.astype(cache["k_rope"].dtype), cache["k_rope"])
+    else:
+        c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+        k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope, "pos": pos + S}
+
+    # absorb W_uk into the query:  q_eff[b,s,h,l] = Σ_d q_nope[b,s,h,d]·W_uk[l,h,d]
+    w_uk = p["w_uk"].reshape(m.kv_lora, H, nd)
+    q_eff = jnp.einsum("bshd,lhd->bshl", q_nope, w_uk)
+
+    scale = 1.0 / math.sqrt(nd + rd)
+    T = c_kv.shape[1]
+    s_lat = jnp.einsum("bshl,btl->bhst", q_eff, c_kv, preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshd,btd->bhst", q_rope, k_rope, preferred_element_type=jnp.float32)
+    scores = (s_lat + s_rope) * scale
+    kpos = jnp.arange(T)[None, :]
+    qpos = pos + jnp.arange(S)[:, None]
+    scores = jnp.where((kpos <= qpos)[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhst,btl->bshl", w.astype(c_kv.dtype), c_kv)  # latent output
+    w_uv = p["w_uv"].reshape(m.kv_lora, H, vd)
+    out = jnp.einsum("bshl,lhd->bshd", o_lat, w_uv).reshape(B, S, H * vd)
+    out = shard(out, P(BATCH_AXES, None, MODEL_AXIS))
+    return out @ p["wo"], new_cache
+
+
+def init_mla_cache(cfg: AttnConfig, B: int, max_seq: int, dtype) -> Dict[str, jax.Array]:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((B, max_seq, m.kv_lora), dtype),
+        "k_rope": jnp.zeros((B, max_seq, m.rope_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_cache_specs(cfg: AttnConfig, *, long_ctx: bool = False) -> Dict[str, Any]:
+    if long_ctx:
+        return {
+            "c_kv": P(None, BATCH_AXES, None),
+            "k_rope": P(None, BATCH_AXES, None),
+            "pos": P(),
+        }
+    return {
+        "c_kv": P(BATCH_AXES, None, None),
+        "k_rope": P(BATCH_AXES, None, None),
+        "pos": P(),
+    }

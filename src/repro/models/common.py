@@ -1,0 +1,211 @@
+"""Shared building blocks: norms, rotary embeddings, initializers, and
+the (param-tree, spec-tree) convention.
+
+Params are plain nested dicts of jax.Arrays.  Every ``init_*`` has a
+matching ``spec_*`` returning the same tree structure with
+PartitionSpec leaves (logical axes: batch→("pod","data"), tensor→"model").
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+
+BATCH_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def init_rmsnorm(d: int, dtype) -> jax.Array:
+    return jnp.zeros((d,), dtype)  # stored as (gamma - 1), gemma-style
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * gamma + beta).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (incl. 3-section M-RoPE for qwen2-vl)
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Qwen2-VL M-RoPE: head_dim split into 3 sections (temporal, h, w)
+    with independent position streams.  positions: (..., seq, 3); for
+    pure text all three streams are equal, recovering plain RoPE."""
+    hd = x.shape[-1]
+    half = hd // 2
+    # 3 sections over the half-dim frequency bands (t gets the remainder)
+    s = half // 3
+    sections = [half - 2 * s, s, s]
+    freqs = rope_freqs(hd, theta)
+    ang_parts = []
+    off = 0
+    for i, sec in enumerate(sections):
+        f = freqs[off : off + sec]
+        ang_parts.append(positions[..., i : i + 1].astype(jnp.float32) * f)
+        off += sec
+    ang = jnp.concatenate(ang_parts, axis=-1)  # (..., seq, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (seq, d)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# misc
+# --------------------------------------------------------------------------
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# token-dispatch axes: MoE routing spreads tokens over the WHOLE mesh
+DISPATCH_AXES = ("pod", "data", "model")
+
+# ---------------------------------------------------------------------------
+# sharding policy: "2d" = DP×TP (default); "dp" = pure data parallel + FSDP
+# (the model axis joins the batch axes; per-layer TP collectives vanish —
+# the right call for small-model training where TP all-reduces dominate).
+# ---------------------------------------------------------------------------
+
+_POLICY = "2d"
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def sharding_policy(policy: str):
+    global _POLICY
+    old = _POLICY
+    _POLICY = policy
+    try:
+        yield
+    finally:
+        _POLICY = old
+
+
+def apply_policy(spec: P) -> P:
+    """Rewrite one PartitionSpec under the active policy."""
+    if _POLICY != "dp":
+        return spec
+    out = []
+    for e in spec:
+        if e is None:
+            out.append(None)
+        elif e == MODEL_AXIS:
+            out.append(None)
+        elif isinstance(e, tuple):
+            kept = tuple(a for a in e if a != MODEL_AXIS)
+            if set(kept) == set(BATCH_AXES):
+                kept = kept + (MODEL_AXIS,)  # batch spreads over model too
+            out.append(kept if kept else None)
+        else:
+            out.append(e)
+    return P(*out)
+
+
+def apply_policy_tree(tree):
+    return jax.tree.map(apply_policy, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def shard(x: jax.Array, spec: P) -> jax.Array:
+    """Sharding-constraint helper, robust to partial meshes.
+
+    Axes absent from the ambient mesh or not dividing the dim are
+    dropped (greedy prefix), so one logical spec works on any mesh —
+    including the single-device CPU used by smoke tests (no-op there).
+    Honors the active sharding policy (see sharding_policy).
+    """
+    spec = apply_policy(spec)
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        names = set(mesh.axis_names) if mesh is not None else set()
+        if not names:
+            return x
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        entries = []
+        for i, e in enumerate(spec):
+            if e is None or i >= x.ndim:
+                entries.append(None)
+                continue
+            axes = e if isinstance(e, tuple) else (e,)
+            kept, n = [], 1
+            for a in axes:
+                if a in names and x.shape[i] % (n * sizes[a]) == 0:
+                    kept.append(a)
+                    n *= sizes[a]
+            entries.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+        return jax.lax.with_sharding_constraint(x, P(*entries))
+    except Exception:
+        return x

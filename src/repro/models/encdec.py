@@ -1,0 +1,278 @@
+"""Whisper-style encoder-decoder ([audio] backbone).
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs``
+supplies precomputed frame embeddings (B, S_audio, d_model).  The
+transformer backbone is real: bidirectional encoder (sinusoidal
+positions, LayerNorm, plain-GELU MLP) and causal decoder with
+cross-attention (learned positions).  Serving caches both the decoder
+self-attention KV and the per-layer cross-attention KV computed once
+from the encoder output.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn
+from .common import (
+    BATCH_AXES,
+    MODEL_AXIS,
+    dense_init,
+    embed_init,
+    layernorm,
+    shard,
+    sinusoidal_positions,
+)
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def init_ln(d: int, dtype) -> Params:
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def ln(x, p, eps=1e-5):
+    return layernorm(x, p["g"].astype(jnp.float32), p["b"].astype(jnp.float32), eps)
+
+
+def _ln_specs():
+    return {"g": P(None), "b": P(None)}
+
+
+def init_mlp(key, d: int, d_ff: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": dense_init(k1, d, d_ff, dtype),
+        "b1": jnp.zeros((d_ff,), dtype),
+        "w2": dense_init(k2, d_ff, d, dtype),
+        "b2": jnp.zeros((d,), dtype),
+    }
+
+
+def _mlp_specs():
+    return {
+        "w1": P(None, MODEL_AXIS),
+        "b1": P(MODEL_AXIS),
+        "w2": P(MODEL_AXIS, None),
+        "b2": P(None),
+    }
+
+
+def mlp(p, x):
+    h = jax.nn.gelu(x @ p["w1"] + p["b1"])
+    h = shard(h, P(BATCH_AXES, None, MODEL_AXIS))
+    return h @ p["w2"] + p["b2"]
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.scan_unroll = False
+        self.flash_attention = False
+
+    # ---------------- params ----------------
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dt = self.dtype
+        d, dff = cfg.d_model, cfg.ffn.d_ff
+        ke, kd, kx = jax.random.split(key, 3)
+
+        def enc_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "ln1": init_ln(d, dt),
+                "attn": attn.init_gqa(k1, cfg.attn, d, dt),
+                "ln2": init_ln(d, dt),
+                "mlp": init_mlp(k2, d, dff, dt),
+            }
+
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {
+                "ln1": init_ln(d, dt),
+                "self_attn": attn.init_gqa(k1, cfg.attn, d, dt),
+                "ln_x": init_ln(d, dt),
+                "cross_attn": attn.init_gqa(k2, cfg.attn, d, dt),
+                "ln2": init_ln(d, dt),
+                "mlp": init_mlp(k3, d, dff, dt),
+            }
+
+        keys_e = jax.random.split(ke, cfg.n_enc_layers)
+        keys_d = jax.random.split(kd, cfg.n_layers)
+        k1, k2, k3 = jax.random.split(kx, 3)
+        return {
+            "embed": embed_init(k1, cfg.vocab, d, dt),
+            "pos_dec": (jax.random.normal(k2, (cfg.max_seq, d), jnp.float32) * 0.01).astype(dt),
+            "enc_layers": jax.vmap(enc_layer)(keys_e),
+            "dec_layers": jax.vmap(dec_layer)(keys_d),
+            "ln_enc_out": init_ln(d, dt),
+            "ln_dec_out": init_ln(d, dt),
+        }
+
+    def specs(self) -> Params:
+        cfg = self.cfg
+
+        def stack(tree):
+            return jax.tree.map(
+                lambda s: P(None, *s), tree, is_leaf=lambda x: isinstance(x, P)
+            )
+
+        enc = {
+            "ln1": _ln_specs(),
+            "attn": attn.gqa_specs(cfg.attn, cfg.d_model),
+            "ln2": _ln_specs(),
+            "mlp": _mlp_specs(),
+        }
+        dec = {
+            "ln1": _ln_specs(),
+            "self_attn": attn.gqa_specs(cfg.attn, cfg.d_model),
+            "ln_x": _ln_specs(),
+            "cross_attn": attn.gqa_specs(cfg.attn, cfg.d_model),
+            "ln2": _ln_specs(),
+            "mlp": _mlp_specs(),
+        }
+        return {
+            "embed": P(MODEL_AXIS, None),
+            "pos_dec": P(None, None),
+            "enc_layers": stack(enc),
+            "dec_layers": stack(dec),
+            "ln_enc_out": _ln_specs(),
+            "ln_dec_out": _ln_specs(),
+        }
+
+    # ---------------- forward ----------------
+
+    def encode(self, p: Params, frames: jax.Array) -> jax.Array:
+        """frames: (B, S_a, d) precomputed embeddings (conv stub)."""
+        cfg = self.cfg
+        S = frames.shape[1]
+        x = frames.astype(self.dtype) + sinusoidal_positions(S, cfg.d_model).astype(self.dtype)
+        x = shard(x, P(BATCH_AXES, None, None))
+
+        def body(x, lp):
+            h = ln(x, lp["ln1"])
+            out, _ = attn.gqa_forward(lp["attn"], h, cfg.attn, causal=False, rope_theta=0.0)
+            x = x + out
+            h = ln(x, lp["ln2"])
+            return x + mlp(lp["mlp"], h), None
+
+        x, _ = jax.lax.scan(body, x, p["enc_layers"])
+        return ln(x, p["ln_enc_out"]).astype(self.dtype)
+
+    def _dec_embed(self, p, tokens, pos0=0):
+        S = tokens.shape[1]
+        x = p["embed"][tokens]
+        pos = jax.lax.dynamic_slice_in_dim(p["pos_dec"], pos0, S, 0) if isinstance(pos0, int) else (
+            jnp.take(p["pos_dec"], pos0 + jnp.arange(S), axis=0)
+        )
+        return shard(x + pos[None], P(BATCH_AXES, None, None))
+
+    def forward_hidden(self, p: Params, batch: Dict[str, jax.Array], *, remat: bool = True):
+        """Final decoder hiddens (pre output-LN) — see LMModel.forward_hidden."""
+        cfg = self.cfg
+        enc = self.encode(p, batch["frames"])
+        x = self._dec_embed(p, batch["tokens"])
+
+        def body(x, lp):
+            h = ln(x, lp["ln1"])
+            out, _ = attn.gqa_forward(lp["self_attn"], h, cfg.attn, causal=True,
+                                      rope_theta=0.0, chunked=self.flash_attention)
+            x = x + out
+            h = ln(x, lp["ln_x"])
+            out, _ = attn.gqa_forward(lp["cross_attn"], h, cfg.attn, kv_x=enc,
+                                      rope_theta=0.0, chunked=self.flash_attention)
+            x = x + out
+            h = ln(x, lp["ln2"])
+            return x + mlp(lp["mlp"], h), None
+
+        body_fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(body_fn, x, p["dec_layers"])
+        return x, {}
+
+    def logits(self, p: Params, x: jax.Array) -> jax.Array:
+        x = ln(x, p["ln_dec_out"]).astype(self.dtype)
+        lg = jnp.einsum("bsd,vd->bsv", x, p["embed"], preferred_element_type=jnp.float32)
+        return shard(lg, P(BATCH_AXES, None, MODEL_AXIS))
+
+    def forward_train(self, p: Params, batch: Dict[str, jax.Array], *, remat: bool = True):
+        """batch: {"frames": (B,S_a,d), "tokens": (B,S_t)} → (logits, aux)."""
+        x, aux = self.forward_hidden(p, batch, remat=remat)
+        return self.logits(p, x), aux
+
+    # ---------------- serving ----------------
+
+    def init_cache(self, B: int, max_seq: int, enc_len: int) -> Params:
+        cfg = self.cfg
+        dt = self.dtype
+        L = cfg.n_layers
+        Kv, hd = cfg.attn.n_kv, cfg.attn.head_dim
+
+        def one(_):
+            return attn.init_gqa_cache(cfg.attn, B, max_seq, dt)
+
+        return {
+            "self": jax.vmap(one)(jnp.arange(L)),
+            "cross_k": jnp.zeros((L, B, enc_len, Kv, hd), dt),
+            "cross_v": jnp.zeros((L, B, enc_len, Kv, hd), dt),
+        }
+
+    def cache_specs(self, *, long_ctx: bool = False) -> Params:
+        cfg = self.cfg
+        sc = jax.tree.map(
+            lambda s: P(None, *s),
+            attn.gqa_cache_specs(cfg.attn, long_ctx=long_ctx),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        cross = P(None, BATCH_AXES, None, MODEL_AXIS, None)
+        return {"self": sc, "cross_k": cross, "cross_v": cross}
+
+    def prefill(self, p: Params, frames: jax.Array, tokens: jax.Array, cache: Params):
+        """Encode audio, precompute cross KV, prefill decoder self-attn."""
+        cfg = self.cfg
+        enc = self.encode(p, frames)
+        B, Sa, d = enc.shape
+        Kv, hd = cfg.attn.n_kv, cfg.attn.head_dim
+
+        def cross_kv(lp):
+            k = (enc @ lp["cross_attn"]["wk"]).reshape(B, Sa, Kv, hd)
+            v = (enc @ lp["cross_attn"]["wv"]).reshape(B, Sa, Kv, hd)
+            return k.astype(self.dtype), v.astype(self.dtype)
+
+        ck, cv = jax.vmap(cross_kv)(p["dec_layers"])
+        cache = {**cache, "cross_k": ck, "cross_v": cv}
+        return self.decode_step(p, tokens, cache)
+
+    def decode_step(self, p: Params, tokens: jax.Array, cache: Params):
+        cfg = self.cfg
+        pos0 = cache["self"]["pos"][0]
+        x = self._dec_embed(p, tokens, pos0)
+
+        def body(x, inp):
+            lp, c_self, ck, cv = inp
+            h = ln(x, lp["ln1"])
+            out, nc = attn.gqa_forward(
+                lp["self_attn"], h, cfg.attn, cache=c_self, rope_theta=0.0
+            )
+            x = x + out
+            h = ln(x, lp["ln_x"])
+            B, S, _ = h.shape
+            H, Kv, hd = cfg.attn.n_heads, cfg.attn.n_kv, cfg.attn.head_dim
+            q = (h @ lp["cross_attn"]["wq"]).reshape(B, S, H, hd)
+            mask = jnp.ones((1, 1, S, ck.shape[1]), bool)
+            out = attn._sdpa(q, ck, cv, mask)
+            out = shard(out, P(BATCH_AXES, None, MODEL_AXIS))
+            x = x + out @ lp["cross_attn"]["wo"]
+            h = ln(x, lp["ln2"])
+            return x + mlp(lp["mlp"], h), nc
+
+        x, nc = jax.lax.scan(
+            body, x, (p["dec_layers"], cache["self"], cache["cross_k"], cache["cross_v"])
+        )
+        return self.logits(p, x), {**cache, "self": nc}

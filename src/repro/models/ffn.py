@@ -1,0 +1,235 @@
+"""Feed-forward blocks: gated MLP (SwiGLU/GeGLU) and expert-parallel MoE.
+
+MoE uses GShard-style capacity-based dispatch expressed as one-hot
+matmuls so GSPMD can lower the dispatch/combine to all-to-alls over the
+"model" (expert) mesh axis.  Router aux (load-balance) loss is returned
+for the train step.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import BATCH_AXES, DISPATCH_AXES, MODEL_AXIS, act_fn, dense_init, shard
+from .config import FFNConfig, MoEConfig
+
+
+# --------------------------------------------------------------------------
+# dense MLP
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: FFNConfig, d_model: int, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], d_model, cfg.d_ff, dtype),
+        "w_down": dense_init(ks[1], cfg.d_ff, d_model, dtype),
+    }
+    if cfg.gated:
+        p["w_gate"] = dense_init(ks[2], d_model, cfg.d_ff, dtype)
+    return p
+
+
+def mlp_specs(cfg: FFNConfig, d_model: int) -> Dict[str, Any]:
+    s = {"w_up": P(None, MODEL_AXIS), "w_down": P(MODEL_AXIS, None)}
+    if cfg.gated:
+        s["w_gate"] = P(None, MODEL_AXIS)
+    return s
+
+
+def mlp_forward(p: Dict[str, Any], x: jax.Array, cfg: FFNConfig) -> jax.Array:
+    h = x @ p["w_up"]
+    if cfg.gated:
+        h = act_fn(cfg.act)(x @ p["w_gate"]) * h
+    else:
+        h = act_fn(cfg.act)(h)
+    h = shard(h, P(BATCH_AXES, None, MODEL_AXIS))
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------------
+# MoE
+# --------------------------------------------------------------------------
+
+
+def _ep_spec4():
+    return P(BATCH_AXES, MODEL_AXIS, None, None)
+
+
+@jax.custom_vjp
+def _expert_ffn(ex_in, w_gate, w_up, w_down):
+    """SwiGLU over the (G,E,C,D) expert buffer with a HAND-WRITTEN VJP.
+
+    jax's automatic transpose of these einsums emits transposed (E,D,G,C)
+    intermediates whose shardings the SPMD partitioner can only realize
+    by full rematerialization (hundreds of GiB at kimi-k2 scale).  The
+    manual backward keeps every grad a single dot_general with e as the
+    batch dim (→ stays EP-sharded) and (g,c) contracted (→ partial sums
+    + all-reduce over the data axes).
+    """
+    out, _ = _expert_ffn_fwd(ex_in, w_gate, w_up, w_down)
+    return out
+
+
+def _expert_ffn_fwd(ex_in, w_gate, w_up, w_down):
+    a = shard(jnp.einsum("gecd,edf->gecf", ex_in, w_gate), _ep_spec4())
+    h = shard(jnp.einsum("gecd,edf->gecf", ex_in, w_up), _ep_spec4())
+    g_act = jax.nn.silu(a)
+    out = shard(jnp.einsum("gecf,efd->gecd", g_act * h, w_down), _ep_spec4())
+    return out, (ex_in, a, h, w_gate, w_up, w_down)
+
+
+def _expert_ffn_bwd(res, dout):
+    ex_in, a, h, w_gate, w_up, w_down = res
+    dout = shard(dout, _ep_spec4())
+    g_act = jax.nn.silu(a)
+    gh = g_act * h
+    dgh = shard(jnp.einsum("gecd,efd->gecf", dout, w_down), _ep_spec4())
+    dWd = jnp.einsum("gecf,gecd->efd", gh, dout)
+    dh = dgh * g_act
+    # dsilu(a) = σ(a)·(1 + a·(1−σ(a)))
+    sig = jax.nn.sigmoid(a.astype(jnp.float32))
+    dsilu = (sig * (1 + a.astype(jnp.float32) * (1 - sig))).astype(a.dtype)
+    da = dgh * h * dsilu
+    dex = shard(
+        jnp.einsum("gecf,edf->gecd", dh, w_up)
+        + jnp.einsum("gecf,edf->gecd", da, w_gate),
+        _ep_spec4(),
+    )
+    dWu = jnp.einsum("gecd,gecf->edf", ex_in, dh)
+    dWg = jnp.einsum("gecd,gecf->edf", ex_in, da)
+    ws = P(MODEL_AXIS, None, None)
+    return dex, shard(dWg, ws), shard(dWu, ws), shard(dWd, ws)
+
+
+_expert_ffn.defvjp(_expert_ffn_fwd, _expert_ffn_bwd)
+
+
+def init_moe(key, cfg: MoEConfig, d_model: int, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    E, dff = cfg.n_experts, cfg.d_ff_expert
+    scale = 1.0 / jnp.sqrt(d_model)
+    p = {
+        "router": dense_init(ks[0], d_model, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d_model, dff), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d_model, dff), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, dff, d_model), jnp.float32) / jnp.sqrt(dff)).astype(dtype),
+    }
+    if cfg.n_shared:
+        dsh = cfg.d_ff_shared or cfg.d_ff_expert * cfg.n_shared
+        p["shared"] = init_mlp(ks[4], FFNConfig(d_ff=dsh, act="silu", gated=True), d_model, dtype)
+    return p
+
+
+def moe_specs(cfg: MoEConfig, d_model: int) -> Dict[str, Any]:
+    s = {
+        "router": P(None, None),
+        "w_gate": P(MODEL_AXIS, None, None),  # experts sharded (EP)
+        "w_up": P(MODEL_AXIS, None, None),
+        "w_down": P(MODEL_AXIS, None, None),
+    }
+    if cfg.n_shared:
+        s["shared"] = mlp_specs(FFNConfig(d_ff=1, gated=True), d_model)
+    return s
+
+
+def moe_forward(
+    p: Dict[str, Any],
+    x: jax.Array,
+    cfg: MoEConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss).  x: (B, S, D).
+
+    Top-k softmax routing, renormalized gates, capacity truncation
+    (GShard semantics: overflow tokens fall through to the residual).
+
+    Dispatch is SORT-BASED, not one-hot: queue positions come from a
+    stable argsort over the (T·K) assignment list + searchsorted, and
+    tokens are moved with scatter/gather into an (E, C, D) expert
+    buffer.  Peak footprint is O(T·K·D + E·C·D) — the one-hot
+    formulation's (T,K,E) and (T,E,C) tensors (PBs at kimi-k2 scale)
+    never exist.  Expert dim shards over "model" (EP); GSPMD lowers the
+    data↔expert resharding to all-to-alls.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    f32 = jnp.float32
+
+    # pin the residual-stream sharding at the block boundary so the
+    # dispatch resharding below cannot propagate into the attention ops
+    # (whose bwd transposes SPMD can only realize by full replication).
+    x = shard(x, P(BATCH_AXES, None, None))
+
+    # grouped dispatch: G groups, each routed independently.  G shards
+    # over the WHOLE mesh (expert-data parallelism: tokens spread over
+    # model devices too for routing/scatter), so every dispatch tensor
+    # is device-local; the expert einsum below reshards (E → model) —
+    # that resharding IS the EP all-to-all.
+    G = cfg.dispatch_groups
+    while T % G:
+        G //= 2
+    Tg = T // G
+    TgK = Tg * K
+    xg = x.reshape(G, Tg, D)
+    xg = shard(xg, P(DISPATCH_AXES, None, None))
+
+    logits = (xg @ p["router"].astype(x.dtype)).astype(f32)  # (G,Tg,E)
+    probs = jax.nn.softmax(cfg.router_scale * logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (G,Tg,K)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    flat_e = expert_idx.reshape(G, TgK)
+
+    # load-balance aux loss (Switch-style) — scatter-add, no one-hot
+    me = jnp.mean(probs, axis=(0, 1))
+    counts = jnp.zeros((G, E), f32)
+    counts = jax.vmap(lambda c, e: c.at[e].add(1.0))(counts, flat_e)
+    ce = jnp.sum(counts, 0) / (G * TgK)
+    aux = cfg.aux_loss_coef * E * jnp.sum(me * ce)
+
+    C = max(1, int(cfg.capacity_factor * Tg * K / E))
+
+    def route_one(e_flat):
+        """Queue position of each (token, choice) within its expert."""
+        order = jnp.argsort(e_flat, stable=True)  # (TgK,)
+        sorted_e = e_flat[order]
+        rank = jnp.arange(TgK) - jnp.searchsorted(sorted_e, sorted_e, side="left")
+        return jnp.zeros((TgK,), jnp.int32).at[order].set(rank.astype(jnp.int32))
+
+    pos = jax.vmap(route_one)(flat_e)  # (G,TgK)
+    keep = pos < C
+    slot = jnp.where(keep, pos, C)  # C = overflow slot, sliced away below
+    tok = jnp.arange(TgK) // K
+    gates_flat = (gate_vals.reshape(G, TgK) * keep).astype(x.dtype)
+
+    # dispatch: scatter token activations into per-group expert buffers
+    def scatter_one(xt, e_flat, slot_g):
+        buf = jnp.zeros((E, C + 1, D), x.dtype)
+        return buf.at[e_flat, slot_g].add(xt[tok])
+
+    buf = jax.vmap(scatter_one)(xg, flat_e, slot)  # (G,E,C+1,D)
+    buf = shard(buf, P(DISPATCH_AXES, None, None, None))  # scatter stays local
+    ex_in = shard(buf[:, :, :C], _ep_spec4())  # EP all-to-all (g→data, e→model)
+    ex_out = _expert_ffn(ex_in, p["w_gate"], p["w_up"], p["w_down"])
+    ex_out = shard(ex_out, P(DISPATCH_AXES, None, None, None))  # return a2a
+
+    # combine: gather each assignment's expert output, weight, sum over k
+    def gather_one(out_g, e_flat, slot_g, gates_g):
+        y = out_g[e_flat, jnp.minimum(slot_g, C - 1)] * gates_g[:, None]
+        return jnp.sum(y.reshape(Tg, K, D), axis=1)
+
+    out = jax.vmap(gather_one)(ex_out, flat_e, slot, gates_flat)  # (G,Tg,D)
+    out = shard(out, P(DISPATCH_AXES, None, None)).reshape(B, S, D)
+    out = shard(out, P(BATCH_AXES, None, None))
+
+    if "shared" in p:
+        # shared expert runs on the (B,S,D) view — batch stays sharded
+        dsh = p["shared"]["w_up"].shape[1]
+        out = out + mlp_forward(p["shared"], x, FFNConfig(d_ff=dsh, gated=True))
+
+    return out, aux

@@ -1,0 +1,207 @@
+"""Mamba2 (SSD) block — chunked parallel train path + O(1)-state decode.
+
+Train path is the SSD block-decomposition: quadratic attention-like
+computation inside chunks of length ``chunk`` + a sequential scan over
+chunk states (nc = S/chunk steps), all einsums (MXU-friendly).  Decode
+keeps a per-head (head_dim × d_state) state and a (w-1)-deep conv tail:
+cost per token is O(1) in sequence length — this is what makes the
+long_500k cell runnable (DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import BATCH_AXES, MODEL_AXIS, dense_init, init_rmsnorm, rmsnorm, shard
+from .config import SSMConfig
+
+
+def _dims(cfg: SSMConfig, d_model: int):
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    conv_dim = d_inner + 2 * cfg.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba2(key, cfg: SSMConfig, d_model: int, dtype) -> Dict[str, Any]:
+    di, H, cdim = _dims(cfg, d_model)
+    N = cfg.d_state
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, cdim), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((cdim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))),
+        "norm": init_rmsnorm(di, dtype),
+        "out_proj": dense_init(ks[2], di, d_model, dtype),
+    }
+
+
+def mamba2_specs(cfg: SSMConfig, d_model: int) -> Dict[str, Any]:
+    return {
+        "in_proj": P(None, MODEL_AXIS),
+        "conv_w": P(None, MODEL_AXIS),
+        "conv_b": P(MODEL_AXIS),
+        "A_log": P(MODEL_AXIS),
+        "D": P(MODEL_AXIS),
+        "dt_bias": P(MODEL_AXIS),
+        "norm": P(MODEL_AXIS),
+        "out_proj": P(MODEL_AXIS, None),
+    }
+
+
+def _split_proj(h: jax.Array, cfg: SSMConfig, d_model: int):
+    di, H, _ = _dims(cfg, d_model)
+    N = cfg.d_state
+    z, xb, Bm, Cm, dt = jnp.split(h, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    return z, xb, Bm, Cm, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. xbc: (B,S,C), w: (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def mamba2_forward_train(
+    p: Dict[str, Any], x: jax.Array, cfg: SSMConfig, d_model: int,
+    *, return_state: bool = False,
+):
+    """Chunked SSD forward.  With ``return_state`` also returns the
+    decode state after the last token (for prefill → decode handoff)."""
+    B, S, D = x.shape
+    di, H, cdim = _dims(cfg, d_model)
+    N, Pd, L = cfg.d_state, cfg.head_dim, min(cfg.chunk, x.shape[1])
+    S0 = S
+    if S % L:
+        # right-pad to a chunk multiple; causal, so padded tokens cannot
+        # affect real outputs.  (States must not be read off padded runs.)
+        assert not return_state, "return_state requires seq % chunk == 0"
+        pad = L - S % L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // L
+
+    h = x @ p["in_proj"]
+    z, xb, Bm, Cm, dt = _split_proj(h, cfg, d_model)
+    xbc_raw = jnp.concatenate([xb, Bm, Cm], -1)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xb, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+
+    f32 = jnp.float32
+    dt = jax.nn.softplus(dt.astype(f32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    l = dt * A  # per-token log-decay (B,S,H)
+    xh = xb.reshape(B, S, H, Pd).astype(f32)
+    u = xh * dt[..., None]  # dt-weighted input
+    Bm32, Cm32 = Bm.astype(f32), Cm.astype(f32)
+
+    # chunk
+    lc = l.reshape(B, nc, L, H)
+    uc = u.reshape(B, nc, L, H, Pd)
+    Bc = Bm32.reshape(B, nc, L, N)
+    Cc = Cm32.reshape(B, nc, L, N)
+    cum = jnp.cumsum(lc, axis=2)  # inclusive (B,nc,L,H)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    G = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)  # (B,nc,L,L)
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,L,L,H) t,s
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    M = jnp.where(tri[None, None, :, :, None], jnp.exp(dec), 0.0)
+    Y_intra = jnp.einsum("bclm,bclmh,bcmhp->bclhp", G, M, uc)
+
+    # ---- chunk states ----
+    st_dec = jnp.exp(cum[:, :, -1:, :] - cum)  # decay from s to chunk end
+    states = jnp.einsum("bcln,bclh,bclhp->bchnp", Bc, st_dec, uc)  # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1])  # (B,nc,H)
+
+    def scan_body(Hprev, inp):
+        st, cd = inp  # (B,H,N,P), (B,H)
+        Hnew = Hprev * cd[..., None, None] + st
+        return Hnew, Hprev
+
+    H0 = jnp.zeros((B, H, N, Pd), f32)
+    Hlast, Hstates = jax.lax.scan(
+        scan_body, H0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )  # (nc,B,H,N,P) = state at chunk START; Hlast = state after final token
+    Hstates = Hstates.swapaxes(0, 1)  # (B,nc,H,N,P)
+
+    # ---- inter-chunk contribution ----
+    Y_inter = jnp.einsum(
+        "bcln,bclh,bchnp->bclhp", Cc, jnp.exp(cum), Hstates
+    )
+
+    y = (Y_intra + Y_inter).reshape(B, S, H, Pd)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(f32)), p["norm"])
+    y = shard(y.astype(x.dtype), P(BATCH_AXES, None, MODEL_AXIS))
+    out = (y @ p["out_proj"])[:, :S0]
+    if not return_state:
+        return out
+    W = p["conv_w"].shape[0]
+    state = {"h": Hlast, "conv": xbc_raw[:, S - (W - 1) :]}
+    return out, state
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+
+def init_mamba2_state(cfg: SSMConfig, d_model: int, B: int, dtype) -> Dict[str, Any]:
+    di, H, cdim = _dims(cfg, d_model)
+    return {
+        "h": jnp.zeros((B, H, cfg.d_state, cfg.head_dim), jnp.float32),
+        "conv": jnp.zeros((B, cfg.d_conv - 1, cdim), dtype),
+    }
+
+
+def mamba2_state_specs(cfg: SSMConfig) -> Dict[str, Any]:
+    return {
+        "h": P(BATCH_AXES, MODEL_AXIS, None, None),
+        "conv": P(BATCH_AXES, None, MODEL_AXIS),
+    }
+
+
+def mamba2_forward_decode(
+    p: Dict[str, Any], x: jax.Array, cfg: SSMConfig, d_model: int, state: Dict[str, Any]
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """x: (B, 1, D) → (B, 1, D); O(1) state update."""
+    B, S, D = x.shape
+    assert S == 1
+    di, H, cdim = _dims(cfg, d_model)
+    N, Pd = cfg.d_state, cfg.head_dim
+    f32 = jnp.float32
+
+    h = x @ p["in_proj"]
+    z, xb, Bm, Cm, dt = _split_proj(h, cfg, d_model)
+    xbc_new = jnp.concatenate([xb, Bm, Cm], -1)  # (B,1,cdim)
+    conv_buf = jnp.concatenate([state["conv"], xbc_new], axis=1)  # (B,W,cdim)
+    w = p["conv_w"]
+    out = jnp.einsum("bwc,wc->bc", conv_buf.astype(f32), w.astype(f32)) + p["conv_b"].astype(f32)
+    xbc = jax.nn.silu(out)[:, None]  # (B,1,cdim)
+    xb, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(f32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)  # (B,H)
+    xh = xb[:, 0].reshape(B, H, Pd).astype(f32)
+    u = xh * dt[..., None]  # (B,H,P)
+    Bv, Cv = Bm[:, 0].astype(f32), Cm[:, 0].astype(f32)  # (B,N)
+
+    hst = state["h"] * a[..., None, None] + jnp.einsum("bn,bhp->bhnp", Bv, u)
+    y = jnp.einsum("bn,bhnp->bhp", Cv, hst) + p["D"][:, None] * xh  # (B,H,P)
+    y = y.reshape(B, 1, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(f32)), p["norm"])
+    y = y.astype(x.dtype) @ p["out_proj"]
+    return y, {"h": hst, "conv": conv_buf[:, 1:]}

@@ -1,0 +1,682 @@
+"""Generic LM assembly: pattern-driven blocks, scan-over-layers,
+train / prefill / decode paths, and the whisper-style encoder-decoder.
+
+Design notes
+------------
+- Params are stacked per *segment* (a maximal scan-able group of
+  layers) so the HLO is O(segments), not O(layers) — essential for
+  compiling 61-81 layer models on the dry-run host.
+- Attention LMs (incl. gemma3's 5:1 local:global) are ONE segment: all
+  layers share param shapes; per-layer differences (window on/off, rope
+  theta) ride along as scanned arrays.
+- MoE LMs: n_dense_layers unscanned + one MoE segment.
+- xLSTM: scan over (mLSTM, sLSTM) groups.  Zamba2: scan over groups of
+  (shared-attention block [shared params] + 5 Mamba2 layers) + tail.
+- Decode caches mirror the segment structure (stacked along layer dim).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn
+from . import ffn as ffn_mod
+from . import ssm as ssm_mod
+from . import xlstm as xl
+from .common import (
+    BATCH_AXES,
+    MODEL_AXIS,
+    embed_init,
+    init_rmsnorm,
+    rmsnorm,
+    shard,
+    sinusoidal_positions,
+    softcap,
+)
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _stack_init(init_fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def _stack_specs(spec_tree, extra_leading=1):
+    """Prefix every PartitionSpec in the tree with None axes for the
+    stacked layer dim(s)."""
+    def add(spec):
+        return P(*([None] * extra_leading), *spec)
+    return jax.tree.map(add, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+# ==========================================================================
+# decoder-only LM
+# ==========================================================================
+
+
+class LMModel:
+    """Decoder-only language model driven by ModelConfig.layer_pattern."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pattern = cfg.pattern()
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.family = self._family()
+        # full unroll of layer scans — used by the dry-run cost
+        # calibration (XLA cost_analysis counts while bodies once)
+        self.scan_unroll = False
+        # flash-style chunked attention in train/prefill (§Perf iter 1:
+        # removes f32 S² score buffers from HBM)
+        self.flash_attention = False
+
+    def _family(self) -> str:
+        pat = set(self.pattern)
+        if pat <= {"attn", "local"}:
+            return "attn"
+        if pat <= {"attn", "attn_moe"}:
+            return "moe"
+        if pat <= {"mlstm", "slstm"}:
+            return "xlstm"
+        if pat <= {"mamba", "shared_attn"}:
+            return "zamba"
+        raise ValueError(f"unsupported pattern {pat}")
+
+    # ---------------- params ----------------
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dt = self.dtype
+        k_embed, k_layers, k_extra = jax.random.split(key, 3)
+        p: Params = {
+            "embed": embed_init(k_embed, cfg.vocab, cfg.d_model, dt),
+            "final_norm": init_rmsnorm(cfg.d_model, dt),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = embed_init(k_extra, cfg.vocab, cfg.d_model, dt)
+
+        if self.family == "attn":
+            L = cfg.n_layers
+
+            def one(k):
+                k1, k2, k3, k4 = jax.random.split(k, 4)
+                return {
+                    "ln_attn": init_rmsnorm(cfg.d_model, dt),
+                    "attn": attn.init_gqa(k1, cfg.attn, cfg.d_model, dt),
+                    "ln_ffn": init_rmsnorm(cfg.d_model, dt),
+                    "ffn": ffn_mod.init_mlp(k2, cfg.ffn, cfg.d_model, dt),
+                }
+
+            p["layers"] = _stack_init(one, k_layers, L)
+        elif self.family == "moe":
+            nd = cfg.moe.n_dense_layers
+            is_mla = cfg.attn.mla is not None
+            a_init = attn.init_mla if is_mla else attn.init_gqa
+
+            def dense_layer(k):
+                k1, k2 = jax.random.split(k)
+                return {
+                    "ln_attn": init_rmsnorm(cfg.d_model, dt),
+                    "attn": a_init(k1, cfg.attn, cfg.d_model, dt),
+                    "ln_ffn": init_rmsnorm(cfg.d_model, dt),
+                    "ffn": ffn_mod.init_mlp(k2, cfg.ffn, cfg.d_model, dt),
+                }
+
+            def moe_layer(k):
+                k1, k2 = jax.random.split(k)
+                return {
+                    "ln_attn": init_rmsnorm(cfg.d_model, dt),
+                    "attn": a_init(k1, cfg.attn, cfg.d_model, dt),
+                    "ln_ffn": init_rmsnorm(cfg.d_model, dt),
+                    "moe": ffn_mod.init_moe(k2, cfg.moe, cfg.d_model, dt),
+                }
+
+            kd, km = jax.random.split(k_layers)
+            p["dense_layers"] = _stack_init(dense_layer, kd, nd)
+            p["moe_layers"] = _stack_init(moe_layer, km, cfg.n_layers - nd)
+        elif self.family == "xlstm":
+            n_groups = cfg.n_layers // 2
+
+            def group(k):
+                k1, k2 = jax.random.split(k)
+                return {
+                    "ln_m": init_rmsnorm(cfg.d_model, dt),
+                    "mlstm": xl.init_mlstm(k1, cfg.xlstm, cfg.d_model, dt),
+                    "ln_s": init_rmsnorm(cfg.d_model, dt),
+                    "slstm": xl.init_slstm(k2, cfg.xlstm, cfg.d_model, dt),
+                }
+
+            p["groups"] = _stack_init(group, k_layers, n_groups)
+        elif self.family == "zamba":
+            gsize = 6  # 1 shared-attn + 5 mamba per group
+            n_groups = cfg.n_layers // gsize
+            tail = cfg.n_layers - n_groups * gsize
+            ks, kg, kt = jax.random.split(k_layers, 3)
+            k1, k2 = jax.random.split(ks)
+            p["shared_attn"] = {
+                "ln_attn": init_rmsnorm(cfg.d_model, dt),
+                "attn": attn.init_gqa(k1, cfg.attn, cfg.d_model, dt),
+                "ln_ffn": init_rmsnorm(cfg.d_model, dt),
+                "ffn": ffn_mod.init_mlp(k2, cfg.ffn, cfg.d_model, dt),
+            }
+
+            def mamba_layer(k):
+                return {
+                    "ln": init_rmsnorm(cfg.d_model, dt),
+                    "mamba": ssm_mod.init_mamba2(k, cfg.ssm, cfg.d_model, dt),
+                }
+
+            def mgroup(k):
+                return _stack_init(mamba_layer, k, gsize - 1)
+
+            p["mamba_groups"] = _stack_init(mgroup, kg, n_groups)
+            p["mamba_tail"] = _stack_init(mamba_layer, kt, tail) if tail else {}
+        return p
+
+    def specs(self) -> Params:
+        cfg = self.cfg
+        s: Params = {
+            "embed": P(MODEL_AXIS, None),
+            "final_norm": P(None),
+        }
+        if not cfg.tie_embeddings:
+            s["lm_head"] = P(MODEL_AXIS, None)
+
+        if self.family == "attn":
+            layer = {
+                "ln_attn": P(None),
+                "attn": attn.gqa_specs(cfg.attn, cfg.d_model),
+                "ln_ffn": P(None),
+                "ffn": ffn_mod.mlp_specs(cfg.ffn, cfg.d_model),
+            }
+            s["layers"] = _stack_specs(layer)
+        elif self.family == "moe":
+            is_mla = cfg.attn.mla is not None
+            a_specs = attn.mla_specs if is_mla else attn.gqa_specs
+            dense = {
+                "ln_attn": P(None),
+                "attn": a_specs(cfg.attn, cfg.d_model),
+                "ln_ffn": P(None),
+                "ffn": ffn_mod.mlp_specs(cfg.ffn, cfg.d_model),
+            }
+            moe = {
+                "ln_attn": P(None),
+                "attn": a_specs(cfg.attn, cfg.d_model),
+                "ln_ffn": P(None),
+                "moe": ffn_mod.moe_specs(cfg.moe, cfg.d_model),
+            }
+            s["dense_layers"] = _stack_specs(dense)
+            s["moe_layers"] = _stack_specs(moe)
+        elif self.family == "xlstm":
+            group = {
+                "ln_m": P(None),
+                "mlstm": xl.mlstm_specs(cfg.xlstm, cfg.d_model),
+                "ln_s": P(None),
+                "slstm": xl.slstm_specs(cfg.xlstm, cfg.d_model),
+            }
+            s["groups"] = _stack_specs(group)
+        elif self.family == "zamba":
+            s["shared_attn"] = {
+                "ln_attn": P(None),
+                "attn": attn.gqa_specs(cfg.attn, cfg.d_model),
+                "ln_ffn": P(None),
+                "ffn": ffn_mod.mlp_specs(cfg.ffn, cfg.d_model),
+            }
+            mamba_layer = {
+                "ln": P(None),
+                "mamba": ssm_mod.mamba2_specs(cfg.ssm, cfg.d_model),
+            }
+            s["mamba_groups"] = _stack_specs(mamba_layer, extra_leading=2)
+            gsize = 6
+            tail = cfg.n_layers - (cfg.n_layers // gsize) * gsize
+            s["mamba_tail"] = _stack_specs(mamba_layer) if tail else {}
+        return s
+
+    # ---------------- scanned flags (attn family) ----------------
+
+    def _attn_layer_flags(self):
+        cfg = self.cfg
+        is_local = jnp.array([t == "local" for t in self.pattern], bool)
+        theta_g = cfg.attn.rope_theta
+        theta_l = cfg.attn.local_rope_theta or theta_g
+        thetas = jnp.where(is_local, theta_l, theta_g).astype(jnp.float32)
+        return is_local, thetas
+
+    # ---------------- forward ----------------
+
+    def embed_tokens(self, p: Params, tokens: jax.Array) -> jax.Array:
+        x = p["embed"][tokens]
+        if self.cfg.embed_scale:
+            x = x * jnp.sqrt(jnp.asarray(self.cfg.d_model, jnp.float32)).astype(x.dtype)
+        return shard(x, P(BATCH_AXES, None, None))
+
+    def logits(self, p: Params, x: jax.Array) -> jax.Array:
+        x = rmsnorm(x, p["final_norm"], self.cfg.norm_eps)
+        head = p["embed"] if self.cfg.tie_embeddings else p["lm_head"]
+        lg = jnp.einsum("bsd,vd->bsv", x, head, preferred_element_type=jnp.float32)
+        lg = softcap(lg, self.cfg.final_logit_softcap)
+        return shard(lg, P(BATCH_AXES, None, MODEL_AXIS))
+
+    def forward_hidden(
+        self, p: Params, batch: Dict[str, jax.Array], *, remat: bool = True
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Final pre-norm hidden states (B,S,D) — the train step computes
+        the loss from these via seq-chunked logits (never materializing
+        the full (B,S,V) tensor)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self.embed_tokens(p, tokens)
+        if batch.get("embeds") is not None:
+            x = jnp.concatenate([batch["embeds"].astype(x.dtype), x], axis=1)
+        aux = {"moe_aux": jnp.zeros((), jnp.float32)}
+        x, aux = self._run_layers_train(p, x, aux, remat=remat)
+        if batch.get("embeds") is not None:
+            x = x[:, batch["embeds"].shape[1] :]
+        return x, aux
+
+    def forward_train(
+        self, p: Params, batch: Dict[str, jax.Array], *, remat: bool = True
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """batch: {"tokens": (B,S)} (+ "embeds" (B,Se,D) for stub frontends).
+        Returns (logits, aux) where aux carries MoE losses."""
+        x, aux = self.forward_hidden(p, batch, remat=remat)
+        return self.logits(p, x), aux
+
+    def _run_layers_train(self, p, x, aux, *, remat):
+        fam = self.family
+        cfg = self.cfg
+
+        if fam == "attn":
+            is_local, thetas = self._attn_layer_flags()
+            S = x.shape[1]
+            has_local = cfg.attn.window is not None and any(
+                t == "local" for t in self.pattern
+            )
+            mask_g = attn.make_mask(S, S, causal=cfg.attn.causal, window=None)
+            mask_l = (
+                attn.make_mask(S, S, causal=cfg.attn.causal, window=cfg.attn.window)
+                if has_local
+                else None
+            )
+
+            def body(carry, inp):
+                x = carry
+                lp, loc, th = inp
+                h = rmsnorm(x, lp["ln_attn"], cfg.norm_eps)
+                # select the (cheap, boolean) mask per layer — ONE attention
+                # call regardless of local/global, so HLO FLOPs stay honest.
+                mask = jnp.where(loc, mask_l, mask_g) if has_local else mask_g
+                out, _ = attn.gqa_forward(
+                    lp["attn"], h, cfg.attn, rope_theta=th, mask=mask,
+                    chunked=self.flash_attention,
+                )
+                x = x + out
+                h = rmsnorm(x, lp["ln_ffn"], cfg.norm_eps)
+                x = x + ffn_mod.mlp_forward(lp["ffn"], h, cfg.ffn)
+                return x, None
+
+            body_fn = jax.checkpoint(body) if remat else body
+            x, _ = jax.lax.scan(body_fn, x, (p["layers"], is_local, thetas))
+            return x, aux
+
+        if fam == "moe":
+            is_mla = cfg.attn.mla is not None
+
+            def attn_fwd(lp, h):
+                if is_mla:
+                    out, _ = attn.mla_forward_train(lp["attn"], h, cfg.attn)
+                else:
+                    out, _ = attn.gqa_forward(lp["attn"], h, cfg.attn,
+                                              chunked=self.flash_attention)
+                return out
+
+            def dense_body(carry, lp):
+                x = carry
+                h = rmsnorm(x, lp["ln_attn"], cfg.norm_eps)
+                x = x + attn_fwd(lp, h)
+                h = rmsnorm(x, lp["ln_ffn"], cfg.norm_eps)
+                x = x + ffn_mod.mlp_forward(lp["ffn"], h, cfg.ffn)
+                return x, None
+
+            def moe_body(carry, lp):
+                x, aux_sum = carry
+                x = x.astype(self.dtype)  # keep the remat-saved carry bf16
+                h = rmsnorm(x, lp["ln_attn"], cfg.norm_eps)
+                x = x + attn_fwd(lp, h)
+                h = rmsnorm(x, lp["ln_ffn"], cfg.norm_eps)
+                out, a = ffn_mod.moe_forward(lp["moe"], h, cfg.moe)
+                return ((x + out).astype(self.dtype), aux_sum + a), None
+
+            db = jax.checkpoint(dense_body) if remat else dense_body
+            mb = jax.checkpoint(moe_body) if remat else moe_body
+            x, _ = jax.lax.scan(db, x, p["dense_layers"])
+            (x, moe_aux), _ = jax.lax.scan(mb, (x, aux["moe_aux"]), p["moe_layers"])
+            aux = {**aux, "moe_aux": moe_aux}
+            return x, aux
+
+        if fam == "xlstm":
+            def body(carry, gp):
+                x = carry
+                h = rmsnorm(x, gp["ln_m"], cfg.norm_eps)
+                x = x + xl.mlstm_forward_train(gp["mlstm"], h, cfg.xlstm, cfg.d_model)
+                h = rmsnorm(x, gp["ln_s"], cfg.norm_eps)
+                x = x + xl.slstm_forward_train(gp["slstm"], h, cfg.xlstm, cfg.d_model)
+                return x, None
+
+            body_fn = jax.checkpoint(body) if remat else body
+            x, _ = jax.lax.scan(body_fn, x, p["groups"])
+            return x, aux
+
+        if fam == "zamba":
+            sp = p["shared_attn"]
+
+            def shared_block(x):
+                h = rmsnorm(x, sp["ln_attn"], cfg.norm_eps)
+                out, _ = attn.gqa_forward(sp["attn"], h, cfg.attn,
+                                          chunked=self.flash_attention)
+                x = x + out
+                h = rmsnorm(x, sp["ln_ffn"], cfg.norm_eps)
+                return x + ffn_mod.mlp_forward(sp["ffn"], h, cfg.ffn)
+
+            def mamba_body(carry, lp):
+                x = carry
+                h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+                x = x + ssm_mod.mamba2_forward_train(lp["mamba"], h, cfg.ssm, cfg.d_model)
+                return x, None
+
+            mbody = jax.checkpoint(mamba_body) if remat else mamba_body
+
+            def group_body(carry, gp):
+                x = carry
+                x = shared_block(x)
+                x, _ = jax.lax.scan(mbody, x, gp)
+                return x, None
+
+            gbody = jax.checkpoint(group_body) if remat else group_body
+            x, _ = jax.lax.scan(gbody, x, p["mamba_groups"])
+            if p.get("mamba_tail"):
+                x, _ = jax.lax.scan(mbody, x, p["mamba_tail"])
+            return x, aux
+
+        raise ValueError(self.family)
+
+    # ---------------- serving: cache init / prefill / decode ----------------
+
+    def init_cache(self, B: int, max_seq: int) -> Params:
+        cfg = self.cfg
+        dt = self.dtype
+        fam = self.family
+        if fam == "attn":
+            L = cfg.n_layers
+
+            def one(_):
+                return attn.init_gqa_cache(cfg.attn, B, max_seq, dt)
+
+            return {"layers": jax.vmap(one)(jnp.arange(L))}
+        if fam == "moe":
+            is_mla = cfg.attn.mla is not None
+            mk = attn.init_mla_cache if is_mla else attn.init_gqa_cache
+            nd = cfg.moe.n_dense_layers
+
+            def one(_):
+                return mk(cfg.attn, B, max_seq, dt)
+
+            return {
+                "dense_layers": jax.vmap(one)(jnp.arange(nd)),
+                "moe_layers": jax.vmap(one)(jnp.arange(cfg.n_layers - nd)),
+            }
+        if fam == "xlstm":
+            ng = cfg.n_layers // 2
+
+            def one(_):
+                return {
+                    "mlstm": xl.init_mlstm_state(cfg.xlstm, cfg.d_model, B, dt),
+                    "slstm": xl.init_slstm_state(cfg.xlstm, cfg.d_model, B, dt),
+                }
+
+            return {"groups": jax.vmap(one)(jnp.arange(ng))}
+        if fam == "zamba":
+            gsize = 6
+            ng = cfg.n_layers // gsize
+            tail = cfg.n_layers - ng * gsize
+
+            def m_one(_):
+                return ssm_mod.init_mamba2_state(cfg.ssm, cfg.d_model, B, dt)
+
+            def g_one(_):
+                return jax.vmap(m_one)(jnp.arange(gsize - 1))
+
+            # shared attn block is invoked ng times per token → its KV
+            # cache is per-invocation: (ng, B, S, ...)
+            c = {
+                "shared_attn": jax.vmap(lambda _: attn.init_gqa_cache(cfg.attn, B, max_seq, dt))(
+                    jnp.arange(ng)
+                ),
+                "shared_pos": jnp.zeros((), jnp.int32),
+                "mamba_groups": jax.vmap(g_one)(jnp.arange(ng)),
+            }
+            if tail:
+                c["mamba_tail"] = jax.vmap(m_one)(jnp.arange(tail))
+            return c
+        raise ValueError(fam)
+
+    def cache_specs(self, *, long_ctx: bool = False) -> Params:
+        cfg = self.cfg
+        fam = self.family
+        if fam == "attn":
+            return {"layers": _stack_specs(attn.gqa_cache_specs(cfg.attn, long_ctx=long_ctx))}
+        if fam == "moe":
+            is_mla = cfg.attn.mla is not None
+            cs = attn.mla_cache_specs if is_mla else attn.gqa_cache_specs
+            return {
+                "dense_layers": _stack_specs(cs(cfg.attn, long_ctx=long_ctx)),
+                "moe_layers": _stack_specs(cs(cfg.attn, long_ctx=long_ctx)),
+            }
+        if fam == "xlstm":
+            g = {
+                "mlstm": xl.mlstm_state_specs(cfg.xlstm),
+                "slstm": xl.slstm_state_specs(cfg.xlstm),
+            }
+            return {"groups": _stack_specs(g)}
+        if fam == "zamba":
+            gsize = 6
+            tail = cfg.n_layers - (cfg.n_layers // gsize) * gsize
+            c = {
+                "shared_attn": _stack_specs(attn.gqa_cache_specs(cfg.attn, long_ctx=long_ctx)),
+                "shared_pos": P(),
+                "mamba_groups": _stack_specs(ssm_mod.mamba2_state_specs(cfg.ssm), extra_leading=2),
+            }
+            if tail:
+                c["mamba_tail"] = _stack_specs(ssm_mod.mamba2_state_specs(cfg.ssm))
+            return c
+        raise ValueError(fam)
+
+    def decode_step(
+        self, p: Params, tokens: jax.Array, cache: Params
+    ) -> Tuple[jax.Array, Params]:
+        """One serving step: tokens (B, S) with small S (1 for decode);
+        uses and updates the KV/state caches."""
+        cfg = self.cfg
+        fam = self.family
+        x = self.embed_tokens(p, tokens)
+
+        if fam == "attn":
+            is_local, thetas = self._attn_layer_flags()
+            has_local = cfg.attn.window is not None and any(
+                t == "local" for t in self.pattern
+            )
+            S = tokens.shape[1]
+            T = cache["layers"]["k"].shape[2]  # (L, B, T, Kv, hd)
+            pos0 = cache["layers"]["pos"][0]
+            kpos = jnp.arange(T)[None, :]
+            qpos = pos0 + jnp.arange(S)[:, None]
+            mask_g = (kpos <= qpos)[None, None]
+            mask_l = (
+                (mask_g & (kpos > qpos - cfg.attn.window)[None, None])
+                if has_local
+                else None
+            )
+
+            def body(x, inp):
+                lp, c, loc, th = inp
+                h = rmsnorm(x, lp["ln_attn"], cfg.norm_eps)
+                mask = jnp.where(loc, mask_l, mask_g) if has_local else mask_g
+                out, nc = attn.gqa_forward(
+                    lp["attn"], h, cfg.attn, rope_theta=th, cache=c, mask=mask
+                )
+                x = x + out
+                h = rmsnorm(x, lp["ln_ffn"], cfg.norm_eps)
+                x = x + ffn_mod.mlp_forward(lp["ffn"], h, cfg.ffn)
+                return x, nc
+
+            x, new_caches = jax.lax.scan(
+                body, x, (p["layers"], cache["layers"], is_local, thetas)
+            )
+            return self.logits(p, x), {"layers": new_caches}
+
+        if fam == "moe":
+            is_mla = cfg.attn.mla is not None
+
+            def attn_step(lp, h, c):
+                if is_mla:
+                    return attn.mla_forward_decode(lp["attn"], h, cfg.attn, c)
+                return attn.gqa_forward(lp["attn"], h, cfg.attn, cache=c)
+
+            def dense_body(x, inp):
+                lp, c = inp
+                h = rmsnorm(x, lp["ln_attn"], cfg.norm_eps)
+                out, nc = attn_step(lp, h, c)
+                x = x + out
+                h = rmsnorm(x, lp["ln_ffn"], cfg.norm_eps)
+                x = x + ffn_mod.mlp_forward(lp["ffn"], h, cfg.ffn)
+                return x, nc
+
+            def moe_body(x, inp):
+                lp, c = inp
+                h = rmsnorm(x, lp["ln_attn"], cfg.norm_eps)
+                out, nc = attn_step(lp, h, c)
+                x = x + out
+                h = rmsnorm(x, lp["ln_ffn"], cfg.norm_eps)
+                out, _ = ffn_mod.moe_forward(lp["moe"], h, cfg.moe)
+                return x + out, nc
+
+            x, nc_d = jax.lax.scan(dense_body, x, (p["dense_layers"], cache["dense_layers"]))
+            x, nc_m = jax.lax.scan(moe_body, x, (p["moe_layers"], cache["moe_layers"]))
+            return self.logits(p, x), {"dense_layers": nc_d, "moe_layers": nc_m}
+
+        if fam == "xlstm":
+            def body(x, inp):
+                gp, c = inp
+                h = rmsnorm(x, gp["ln_m"], cfg.norm_eps)
+                out, ms = xl.mlstm_forward_decode(gp["mlstm"], h, cfg.xlstm, cfg.d_model, c["mlstm"])
+                x = x + out
+                h = rmsnorm(x, gp["ln_s"], cfg.norm_eps)
+                out, ss = xl.slstm_forward_decode(gp["slstm"], h, cfg.xlstm, cfg.d_model, c["slstm"])
+                return x + out, {"mlstm": ms, "slstm": ss}
+
+            x, nc = jax.lax.scan(body, x, (p["groups"], cache["groups"]))
+            return self.logits(p, x), {"groups": nc}
+
+        if fam == "zamba":
+            sp = p["shared_attn"]
+
+            def mamba_body(x, inp):
+                lp, c = inp
+                h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+                out, ns = ssm_mod.mamba2_forward_decode(lp["mamba"], h, cfg.ssm, cfg.d_model, c)
+                return x + out, ns
+
+            def group_body(x, inp):
+                gp, c = inp
+                h = rmsnorm(x, sp["ln_attn"], cfg.norm_eps)
+                out, nac = attn.gqa_forward(sp["attn"], h, cfg.attn, cache=c["shared_attn"])
+                x = x + out
+                h = rmsnorm(x, sp["ln_ffn"], cfg.norm_eps)
+                x = x + ffn_mod.mlp_forward(sp["ffn"], h, cfg.ffn)
+                x, nmc = jax.lax.scan(mamba_body, x, (gp, c["mamba"]))
+                return x, {"shared_attn": nac, "mamba": nmc}
+
+            x, nc_g = jax.lax.scan(
+                group_body, x,
+                (p["mamba_groups"], {"shared_attn": cache["shared_attn"], "mamba": cache["mamba_groups"]}),
+            )
+            new_cache = {
+                "shared_attn": nc_g["shared_attn"],
+                "shared_pos": cache["shared_pos"] + tokens.shape[1],
+                "mamba_groups": nc_g["mamba"],
+            }
+            if "mamba_tail" in cache:
+                x, nt = jax.lax.scan(mamba_body, x, (p["mamba_tail"], cache["mamba_tail"]))
+                new_cache["mamba_tail"] = nt
+            return self.logits(p, x), new_cache
+
+        raise ValueError(fam)
+
+    def prefill(self, p: Params, tokens: jax.Array, cache: Params):
+        """Fill caches/states from a prompt; returns (logits, cache).
+
+        Attention families reuse decode_step (S = prompt length).
+        Recurrent families run the chunked/parallel train path with
+        ``return_state`` so prefill stays parallel over the sequence.
+        """
+        cfg = self.cfg
+        fam = self.family
+        if fam in ("attn", "moe"):
+            return self.decode_step(p, tokens, cache)
+
+        x = self.embed_tokens(p, tokens)
+
+        if fam == "xlstm":
+            def body(x, gp):
+                h = rmsnorm(x, gp["ln_m"], cfg.norm_eps)
+                out, ms = xl.mlstm_forward_train(
+                    gp["mlstm"], h, cfg.xlstm, cfg.d_model, return_state=True
+                )
+                x = x + out
+                h = rmsnorm(x, gp["ln_s"], cfg.norm_eps)
+                out, ss = xl.slstm_forward_train(
+                    gp["slstm"], h, cfg.xlstm, cfg.d_model, return_state=True
+                )
+                return x + out, {"mlstm": ms, "slstm": ss}
+
+            x, states = jax.lax.scan(body, x, p["groups"])
+            return self.logits(p, x[:, -1:]), {"groups": states}
+
+        if fam == "zamba":
+            sp = p["shared_attn"]
+
+            def mamba_body(x, lp):
+                h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+                out, ns = ssm_mod.mamba2_forward_train(
+                    lp["mamba"], h, cfg.ssm, cfg.d_model, return_state=True
+                )
+                return x + out, ns
+
+            def group_body(x, inp):
+                gp, c_attn = inp
+                h = rmsnorm(x, sp["ln_attn"], cfg.norm_eps)
+                out, nac = attn.gqa_forward(sp["attn"], h, cfg.attn, cache=c_attn)
+                x = x + out
+                h = rmsnorm(x, sp["ln_ffn"], cfg.norm_eps)
+                x = x + ffn_mod.mlp_forward(sp["ffn"], h, cfg.ffn)
+                x, nmc = jax.lax.scan(mamba_body, x, gp)
+                return x, {"shared_attn": nac, "mamba": nmc}
+
+            x, st = jax.lax.scan(group_body, x, (p["mamba_groups"], cache["shared_attn"]))
+            new_cache = {
+                "shared_attn": st["shared_attn"],
+                "shared_pos": cache["shared_pos"] + tokens.shape[1],
+                "mamba_groups": st["mamba"],
+            }
+            if "mamba_tail" in cache:
+                x, nt = jax.lax.scan(mamba_body, x, p["mamba_tail"])
+                new_cache["mamba_tail"] = nt
+            return self.logits(p, x[:, -1:]), new_cache
+
+        raise ValueError(fam)

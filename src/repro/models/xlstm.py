@@ -1,0 +1,298 @@
+"""xLSTM blocks (Beck et al., 2024): mLSTM (matrix memory, parallel
+quadratic train form) and sLSTM (scalar memory, sequential recurrence
+with recurrent head-local mixing).
+
+Both use exponential gating with the paper's max-stabilizer; both have
+O(1)-per-token decode states, so xlstm configs qualify for long_500k.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import BATCH_AXES, MODEL_AXIS, dense_init, init_rmsnorm, rmsnorm, shard
+from .config import XLSTMConfig
+
+NEG_INF = -1e30
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+
+
+def _mdims(cfg: XLSTMConfig, d_model: int):
+    di = int(cfg.proj_factor_m * d_model)
+    di -= di % cfg.n_heads
+    return di, cfg.n_heads, di // cfg.n_heads
+
+
+def init_mlstm(key, cfg: XLSTMConfig, d_model: int, dtype) -> Dict[str, Any]:
+    di, H, Pd = _mdims(cfg, d_model)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d_model, 2 * di, dtype),  # [x, z]
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, di), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": dense_init(ks[2], di, di, dtype),
+        "wk": dense_init(ks[3], di, di, dtype),
+        "wv": dense_init(ks[4], di, di, dtype),
+        "w_if": dense_init(ks[5], di, 2 * H, dtype),  # input & forget gates
+        "norm": init_rmsnorm(di, dtype),
+        "w_down": dense_init(ks[6], di, d_model, dtype),
+    }
+
+
+def mlstm_specs(cfg: XLSTMConfig, d_model: int) -> Dict[str, Any]:
+    return {
+        "w_up": P(None, MODEL_AXIS),
+        "conv_w": P(None, MODEL_AXIS),
+        "conv_b": P(MODEL_AXIS),
+        "wq": P(None, MODEL_AXIS),
+        "wk": P(None, MODEL_AXIS),
+        "wv": P(None, MODEL_AXIS),
+        "w_if": P(None, MODEL_AXIS),
+        "norm": P(MODEL_AXIS),
+        "w_down": P(MODEL_AXIS, None),
+    }
+
+
+def _conv_silu(x, w, b):
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def mlstm_forward_train(
+    p: Dict[str, Any], x: jax.Array, cfg: XLSTMConfig, d_model: int,
+    *, return_state: bool = False,
+):
+    B, S, D = x.shape
+    di, H, Pd = _mdims(cfg, d_model)
+    f32 = jnp.float32
+
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc = _conv_silu(xm, p["conv_w"], p["conv_b"])  # (B,S,di)
+    q = (xc @ p["wq"]).reshape(B, S, H, Pd).astype(f32)
+    k = (xc @ p["wk"]).reshape(B, S, H, Pd).astype(f32) / jnp.sqrt(Pd)
+    v = (xm @ p["wv"]).reshape(B, S, H, Pd).astype(f32)
+    gates = (xc @ p["w_if"]).astype(f32).reshape(B, S, 2, H)
+    i_pre, f_pre = gates[:, :, 0], gates[:, :, 1]  # (B,S,H)
+
+    logf = jax.nn.log_sigmoid(f_pre)
+    cumF = jnp.cumsum(logf, axis=1)  # (B,S,H)
+    # D[t,s] = cumF_t − cumF_s + i_s   (decay from s→t plus input gate)
+    Dm = cumF[:, :, None, :] - cumF[:, None, :, :] + i_pre[:, None, :, :]
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    Dm = jnp.where(tri[None, :, :, None], Dm, NEG_INF)
+    m = jnp.max(Dm, axis=2, keepdims=True)  # (B,S,1,H) stabilizer
+    Sm = jnp.einsum("bshp,bthp->bsth", q, k) * jnp.exp(Dm - m)
+    denom = jnp.maximum(jnp.abs(jnp.sum(Sm, axis=2, keepdims=True)), jnp.exp(-m))
+    y = jnp.einsum("bsth,bthp->bshp", Sm / denom, v)  # (B,S,H,P)
+
+    y = rmsnorm(y.reshape(B, S, di), p["norm"])
+    y = y * jax.nn.silu(z.astype(f32))
+    y = shard(y.astype(x.dtype), P(BATCH_AXES, None, MODEL_AXIS))
+    out = y @ p["w_down"]
+    if not return_state:
+        return out
+    # closed-form final recurrent state (= what decode would have built)
+    cumF_S = cumF[:, -1]  # (B,H)
+    Ds = cumF_S[:, None] - cumF + i_pre  # (B,S,H)
+    m_last = jnp.max(Ds, axis=1)  # (B,H)
+    w_s = jnp.exp(Ds - m_last[:, None])
+    C = jnp.einsum("bsh,bshp,bshq->bhpq", w_s, k, v)
+    n = jnp.einsum("bsh,bshp->bhp", w_s, k)
+    W = p["conv_w"].shape[0]
+    state = {"C": C, "n": n, "m": m_last, "conv": xm[:, S - (W - 1) :]}
+    return out, state
+
+
+def init_mlstm_state(cfg: XLSTMConfig, d_model: int, B: int, dtype) -> Dict[str, Any]:
+    di, H, Pd = _mdims(cfg, d_model)
+    return {
+        "C": jnp.zeros((B, H, Pd, Pd), jnp.float32),
+        "n": jnp.zeros((B, H, Pd), jnp.float32),
+        "m": jnp.full((B, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((B, cfg.conv_width - 1, di), dtype),
+    }
+
+
+def mlstm_state_specs(cfg: XLSTMConfig) -> Dict[str, Any]:
+    return {
+        "C": P(BATCH_AXES, MODEL_AXIS, None, None),
+        "n": P(BATCH_AXES, MODEL_AXIS, None),
+        "m": P(BATCH_AXES, MODEL_AXIS),
+        "conv": P(BATCH_AXES, None, MODEL_AXIS),
+    }
+
+
+def mlstm_forward_decode(
+    p: Dict[str, Any], x: jax.Array, cfg: XLSTMConfig, d_model: int, state: Dict[str, Any]
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    B, S, D = x.shape
+    assert S == 1
+    di, H, Pd = _mdims(cfg, d_model)
+    f32 = jnp.float32
+
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_buf = jnp.concatenate([state["conv"], xm], axis=1)
+    w = p["conv_w"]
+    xc = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", conv_buf.astype(f32), w.astype(f32)) + p["conv_b"].astype(f32)
+    )[:, None].astype(x.dtype)
+
+    q = (xc @ p["wq"]).reshape(B, H, Pd).astype(f32)
+    k = (xc @ p["wk"]).reshape(B, H, Pd).astype(f32) / jnp.sqrt(Pd)
+    v = (xm @ p["wv"]).reshape(B, H, Pd).astype(f32)
+    gates = (xc @ p["w_if"]).astype(f32).reshape(B, 2, H)
+    i_pre, f_pre = gates[:, 0], gates[:, 1]  # (B,H)
+
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    fdec = jnp.exp(logf + state["m"] - m_new)[..., None]
+    iamp = jnp.exp(i_pre - m_new)[..., None]
+    C = state["C"] * fdec[..., None] + iamp[..., None] * jnp.einsum("bhp,bhq->bhpq", k, v)
+    n = state["n"] * fdec + iamp * k
+    num = jnp.einsum("bhp,bhpq->bhq", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n)), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(B, 1, di)
+
+    y = rmsnorm(y, p["norm"]) * jax.nn.silu(z.astype(f32))
+    y = y.astype(x.dtype) @ p["w_down"]
+    return y, {"C": C, "n": n, "m": m_new, "conv": conv_buf[:, 1:]}
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+
+
+def _sdims(cfg: XLSTMConfig, d_model: int):
+    H = cfg.n_heads
+    return d_model, H, d_model // H
+
+
+def init_slstm(key, cfg: XLSTMConfig, d_model: int, dtype) -> Dict[str, Any]:
+    di, H, Pd = _sdims(cfg, d_model)
+    ks = jax.random.split(key, 8)
+    dff = int(cfg.proj_factor_s * d_model)
+    return {
+        "conv_w": (jax.random.normal(ks[0], (cfg.conv_width, di), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_gates": dense_init(ks[1], di, 4 * di, dtype),  # z,i,f,o input paths
+        "r_gates": (jax.random.normal(ks[2], (4, H, Pd, Pd), jnp.float32) / jnp.sqrt(Pd)).astype(dtype),
+        "b_gates": jnp.zeros((4, di), dtype),
+        "norm": init_rmsnorm(di, dtype),
+        "w_ff_gate": dense_init(ks[3], di, dff, dtype),
+        "w_ff_up": dense_init(ks[4], di, dff, dtype),
+        "w_ff_down": dense_init(ks[5], dff, di, dtype),
+    }
+
+
+def slstm_specs(cfg: XLSTMConfig, d_model: int) -> Dict[str, Any]:
+    return {
+        "conv_w": P(None, None),
+        "conv_b": P(None),
+        "w_gates": P(None, MODEL_AXIS),
+        "r_gates": P(None, MODEL_AXIS, None, None),  # heads over model
+        "b_gates": P(None, MODEL_AXIS),
+        "norm": P(None),
+        "w_ff_gate": P(None, MODEL_AXIS),
+        "w_ff_up": P(None, MODEL_AXIS),
+        "w_ff_down": P(MODEL_AXIS, None),
+    }
+
+
+def _slstm_step(p, cfg, d_model, carry, wx_t):
+    """One sLSTM time step. carry: (h, c, n, m) each (B,H,P) / (B,H,P)."""
+    di, H, Pd = _sdims(cfg, d_model)
+    h, c, n, m = carry
+    f32 = jnp.float32
+    # recurrent head-local contribution: (B,H,P) × (4,H,P,P) → (B,4,H,P)
+    r = jnp.einsum("bhp,ghpq->bghq", h, p["r_gates"].astype(f32))
+    pre = wx_t.reshape(-1, 4, H, Pd).astype(f32) + r + p["b_gates"].astype(f32).reshape(4, H, Pd)
+    z_pre, i_pre, f_pre, o_pre = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def slstm_forward_train(
+    p: Dict[str, Any], x: jax.Array, cfg: XLSTMConfig, d_model: int,
+    *, return_state: bool = False,
+):
+    B, S, D = x.shape
+    di, H, Pd = _sdims(cfg, d_model)
+    f32 = jnp.float32
+    xc = _conv_silu(x, p["conv_w"], p["conv_b"])
+    wx = xc @ p["w_gates"]  # (B,S,4di)
+
+    def body(carry, wx_t):
+        return _slstm_step(p, cfg, d_model, carry, wx_t)
+
+    z0 = jnp.zeros((B, H, Pd), f32)
+    carry0 = (z0, z0, z0, jnp.full((B, H, Pd), -1e30, f32))
+    carry_f, hs = jax.lax.scan(body, carry0, wx.swapaxes(0, 1))  # (S,B,H,P)
+    y = hs.swapaxes(0, 1).reshape(B, S, di)
+    y = rmsnorm(y, p["norm"]).astype(x.dtype)
+    # gated FFN tail (proj factor 4/3)
+    ff = jax.nn.silu(y @ p["w_ff_gate"]) * (y @ p["w_ff_up"])
+    ff = shard(ff, P(BATCH_AXES, None, MODEL_AXIS))
+    out = ff @ p["w_ff_down"]
+    if not return_state:
+        return out
+    h, c, n, m = carry_f
+    W = p["conv_w"].shape[0]
+    state = {"h": h, "c": c, "n": n, "m": m, "conv": x[:, S - (W - 1) :]}
+    return out, state
+
+
+def init_slstm_state(cfg: XLSTMConfig, d_model: int, B: int, dtype) -> Dict[str, Any]:
+    di, H, Pd = _sdims(cfg, d_model)
+    z = jnp.zeros((B, H, Pd), jnp.float32)
+    return {
+        "h": z, "c": z, "n": z,
+        "m": jnp.full((B, H, Pd), -1e30, jnp.float32),
+        "conv": jnp.zeros((B, cfg.conv_width - 1, di), dtype),
+    }
+
+
+def slstm_state_specs(cfg: XLSTMConfig) -> Dict[str, Any]:
+    s3 = P(BATCH_AXES, MODEL_AXIS, None)
+    return {"h": s3, "c": s3, "n": s3, "m": s3, "conv": P(BATCH_AXES, None, None)}
+
+
+def slstm_forward_decode(
+    p: Dict[str, Any], x: jax.Array, cfg: XLSTMConfig, d_model: int, state: Dict[str, Any]
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    B, S, D = x.shape
+    assert S == 1
+    di, H, Pd = _sdims(cfg, d_model)
+    f32 = jnp.float32
+    conv_buf = jnp.concatenate([state["conv"], x], axis=1)
+    w = p["conv_w"]
+    xc = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", conv_buf.astype(f32), w.astype(f32)) + p["conv_b"].astype(f32)
+    ).astype(x.dtype)
+    wx = xc @ p["w_gates"]  # (B,4di)
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    (h, c, n, m), _ = _slstm_step(p, cfg, d_model, carry, wx)
+    y = rmsnorm(h.reshape(B, 1, di), p["norm"]).astype(x.dtype)
+    ff = jax.nn.silu(y @ p["w_ff_gate"]) * (y @ p["w_ff_up"])
+    out = ff @ p["w_ff_down"]
+    return out, {"h": h, "c": c, "n": n, "m": m, "conv": conv_buf[:, 1:]}

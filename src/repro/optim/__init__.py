@@ -1,0 +1,11 @@
+"""Optimizer substrate (no optax in the container — built from scratch)."""
+
+from .adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule, global_norm
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "global_norm",
+]

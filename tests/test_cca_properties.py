@@ -1,0 +1,89 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import exact_cca, randomized_cca
+from repro.core.linalg import orth
+from repro.core.rcca import RCCAConfig
+from repro.distributed import int8_decode, int8_encode
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(min_value=2, max_value=24)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seeds, st.integers(8, 40), st.integers(2, 8), st.floats(0.0, 6.0))
+def test_orth_orthonormal(seed, rows, cols, log_cond):
+    """orth() returns orthonormal columns for ANY conditioning —
+    power iteration squares κ, so this must hold over a wide range."""
+    rng = np.random.default_rng(seed)
+    rows = max(rows, cols)
+    Y = rng.standard_normal((rows, cols)).astype(np.float32)
+    # impose condition number ~ 10^log_cond
+    scales = np.logspace(0, -log_cond, cols).astype(np.float32)
+    Q = orth(jnp.asarray(Y * scales))
+    G = np.asarray(Q.T @ Q)
+    np.testing.assert_allclose(G, np.eye(cols), atol=5e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seeds, dims, dims)
+def test_cca_correlations_bounded(seed, da, db):
+    """Canonical correlations always lie in [0, 1] (λ > 0 ⇒ < 1)."""
+    rng = np.random.default_rng(seed)
+    n, k = 200, 2
+    A = jnp.asarray(rng.standard_normal((n, da)).astype(np.float32))
+    B = jnp.asarray(rng.standard_normal((n, db)).astype(np.float32))
+    sol = exact_cca(A, B, k, 1e-2, 1e-2)
+    rho = np.asarray(sol.rho)
+    assert np.all(rho >= -1e-5) and np.all(rho <= 1.0 + 1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seeds)
+def test_cca_invariance_under_invertible_transforms(seed):
+    """CCA (λ=0) is invariant to invertible per-view linear maps."""
+    rng = np.random.default_rng(seed)
+    n, da, db, k = 400, 8, 6, 3
+    A = rng.standard_normal((n, da)).astype(np.float32)
+    B = rng.standard_normal((n, db)).astype(np.float32)
+    M = rng.standard_normal((da, da)).astype(np.float32) + 3 * np.eye(da, dtype=np.float32)
+    N = rng.standard_normal((db, db)).astype(np.float32) + 3 * np.eye(db, dtype=np.float32)
+    r1 = exact_cca(jnp.asarray(A), jnp.asarray(B), k)
+    r2 = exact_cca(jnp.asarray(A @ M), jnp.asarray(B @ N), k)
+    np.testing.assert_allclose(np.asarray(r1.rho), np.asarray(r2.rho), atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seeds)
+def test_rcca_seed_stability(seed):
+    """With ample oversampling the sketch seed barely matters."""
+    rng = np.random.default_rng(seed)
+    n, da, db, k = 500, 16, 12, 3
+    Z = rng.standard_normal((n, k)).astype(np.float32)
+    A = jnp.asarray(Z @ rng.standard_normal((k, da)).astype(np.float32)
+                    + 0.3 * rng.standard_normal((n, da)).astype(np.float32))
+    B = jnp.asarray(Z @ rng.standard_normal((k, db)).astype(np.float32)
+                    + 0.3 * rng.standard_normal((n, db)).astype(np.float32))
+    cfg = RCCAConfig(k=k, p=8, q=2, lam_a=1e-3, lam_b=1e-3)
+    r1 = randomized_cca(A, B, cfg, jax.random.PRNGKey(seed % 97))
+    r2 = randomized_cca(A, B, cfg, jax.random.PRNGKey(seed % 89 + 1))
+    np.testing.assert_allclose(np.asarray(r1.rho), np.asarray(r2.rho), atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seeds, st.integers(1, 4), st.integers(3, 300))
+def test_int8_roundtrip_error_bound(seed, lead, d):
+    """Blockwise int8: |x − dec(enc(x))| ≤ scale/2 elementwise."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.standard_normal((lead, d)) * 10 ** rng.uniform(-3, 3)).astype(np.float32))
+    q, scale = int8_encode(x, block=64)
+    xr = int8_decode(q, scale, d)
+    nb = q.shape[-2]
+    bound = np.repeat(np.asarray(scale), 64, axis=-1)[..., :d] * 0.5 + 1e-12
+    assert np.all(np.abs(np.asarray(x - xr)) <= bound * 1.001)

@@ -1,0 +1,98 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, pallas_matmul, projgram, ref
+
+SHAPES_NN = [
+    (64, 64, 64),
+    (128, 257, 96),     # unaligned K/N
+    (300, 200, 130),
+    (512, 512, 256),
+    (1, 700, 130),      # single row
+    (1024, 96, 1024),
+]
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dt):
+    return dict(atol=3e-2, rtol=3e-2) if dt == jnp.bfloat16 else dict(atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES_NN)
+@pytest.mark.parametrize("dt", DTYPES, ids=["f32", "bf16"])
+def test_matmul_nn(m, k, n, dt):
+    kx, ky = jax.random.split(jax.random.PRNGKey(m * 7 + n))
+    x = jax.random.normal(kx, (m, k), dt)
+    y = jax.random.normal(ky, (k, n), dt)
+    out = pallas_matmul(x, y, interpret=True)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **_tol(dt))
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES_NN)
+@pytest.mark.parametrize("dt", DTYPES, ids=["f32", "bf16"])
+def test_matmul_tn(m, k, n, dt):
+    kx, ky = jax.random.split(jax.random.PRNGKey(m * 13 + n))
+    x = jax.random.normal(kx, (k, m), dt)  # contraction over dim 0
+    y = jax.random.normal(ky, (k, n), dt)
+    out = pallas_matmul(x, y, transpose_lhs=True, interpret=True)
+    want = ref.matmul_ref(x, y, transpose_lhs=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **_tol(dt))
+
+
+@pytest.mark.parametrize("n,d,kt", [
+    (128, 128, 128),
+    (300, 260, 96),     # unaligned everything
+    (512, 1024, 512),
+    (256, 64, 1024),    # k̃ at the fused-kernel VMEM limit
+    (256, 64, 1100),    # k̃ > 1024 → unfused fallback path
+])
+@pytest.mark.parametrize("dt", DTYPES, ids=["f32", "bf16"])
+def test_projgram(n, d, kt, dt):
+    kx, kq = jax.random.split(jax.random.PRNGKey(n + kt))
+    x = jax.random.normal(kx, (n, d), dt)
+    q = jax.random.normal(kq, (d, kt), dt)
+    p, c = projgram(x, q, interpret=True)
+    pw, cw = ref.projgram_ref(x, q)
+    tol = _tol(dt)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(pw), **tol)
+    # Gram accumulates n terms — scale tolerance
+    np.testing.assert_allclose(np.asarray(c) / n, np.asarray(cw) / n, **tol)
+
+
+def test_power_pass_chunk_matches_ref():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (384, 300))
+    b = jax.random.normal(jax.random.PRNGKey(1), (384, 200))
+    Qa = jax.random.normal(jax.random.PRNGKey(2), (300, 160))
+    Qb = jax.random.normal(jax.random.PRNGKey(3), (200, 160))
+    dYa, dYb = ops.power_pass_chunk(a, b, Qa, Qb, interpret=True)
+    rYa, rYb = ref.power_pass_ref(a, b, Qa, Qb)
+    np.testing.assert_allclose(np.asarray(dYa), np.asarray(rYa), atol=1e-2)
+    np.testing.assert_allclose(np.asarray(dYb), np.asarray(rYb), atol=1e-2)
+
+
+def test_final_pass_chunk_matches_ref():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (384, 300))
+    b = jax.random.normal(jax.random.PRNGKey(1), (384, 200))
+    Qa = jax.random.normal(jax.random.PRNGKey(2), (300, 160))
+    Qb = jax.random.normal(jax.random.PRNGKey(3), (200, 160))
+    Ca, Cb, F = ops.final_pass_chunk(a, b, Qa, Qb, interpret=True)
+    rCa, rCb, rF = ref.final_pass_ref(a, b, Qa, Qb)
+    for got, want in [(Ca, rCa), (Cb, rCb), (F, rF)]:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-2)
+
+
+def test_gram_symmetry():
+    """PᵀP from the fused kernel is exactly symmetric."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 192))
+    q = jax.random.normal(jax.random.PRNGKey(1), (192, 256))
+    _, c = projgram(x, q, interpret=True)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c.T), rtol=1e-5, atol=1e-3)

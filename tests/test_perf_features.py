@@ -1,0 +1,161 @@
+"""Tests for the §Perf machinery: flash-attention custom VJP, sharding
+policies, grouped MoE dispatch, CCA pass reduction options."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models.common import apply_policy, sharding_policy
+from jax.sharding import PartitionSpec as P
+
+
+@pytest.mark.parametrize("window", [None, 24])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16], ids=["f32", "bf16"])
+def test_flash_attention_matches_sdpa(window, dt):
+    key = jax.random.PRNGKey(0)
+    B, S, H, Kv, hd = 2, 128, 8, 2, 32
+    q = jax.random.normal(key, (B, S, H, hd), dt)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Kv, hd), dt)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Kv, hd), dt)
+    mask = A.make_mask(S, S, causal=True, window=window)
+    o_ref = A._sdpa(q, k, v, mask)
+    o_fl = A.flash_attention(q, k, v, mask, 32)
+    tol = 3e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_fl, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol)
+
+
+def test_flash_attention_grads_match():
+    key = jax.random.PRNGKey(0)
+    B, S, H, Kv, hd = 2, 96, 4, 2, 16
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Kv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Kv, hd))
+    mask = A.make_mask(S, S, causal=True, window=None)
+
+    def loss(fn):
+        return lambda args: jnp.sum(jnp.sin(fn(*args, mask)))
+
+    g_ref = jax.grad(loss(lambda q_, k_, v_, m: A._sdpa(q_, k_, v_, m)))((q, k, v))
+    g_fl = jax.grad(loss(lambda q_, k_, v_, m: A.flash_attention(q_, k_, v_, m, 32)))((q, k, v))
+    for name, a, b in zip("qkv", g_ref, g_fl):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_flash_in_model_train_path():
+    """A full train forward with flash attention matches the dense path."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    import dataclasses
+
+    cfg = dataclasses.replace(get_config("granite-3-2b", smoke=True), dtype="float32")
+    model = build_model(cfg)
+    p = model.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 2048), 0, cfg.vocab)
+    lg0, _ = model.forward_train(p, {"tokens": tok}, remat=False)
+    model.flash_attention = True
+    lg1, _ = model.forward_train(p, {"tokens": tok}, remat=False)
+    np.testing.assert_allclose(np.asarray(lg0), np.asarray(lg1), atol=2e-4)
+
+
+def test_sharding_policy_rewrite():
+    with sharding_policy("dp"):
+        assert apply_policy(P(None, "model")) == P(None, None)
+        assert apply_policy(P(("pod", "data"), None)) == P(("pod", "data", "model"), None)
+        assert apply_policy(P(("pod", "data", "model"), None)) == P(("pod", "data", "model"), None)
+    # default policy: untouched
+    assert apply_policy(P(None, "model")) == P(None, "model")
+
+
+def test_moe_group_consistency():
+    """Grouped dispatch must be invariant to the number of groups when
+    capacity is lossless."""
+    import dataclasses
+    from repro.models.config import MoEConfig
+    from repro.models import ffn as F
+
+    base = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, n_shared=0,
+                     capacity_factor=100.0, dispatch_groups=1)
+    p = F.init_moe(jax.random.PRNGKey(0), base, 64, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 64))
+    outs = []
+    for g in [1, 2, 4]:
+        cfg = dataclasses.replace(base, dispatch_groups=g)
+        out, _ = F.moe_forward(p, x, cfg)
+        outs.append(np.asarray(out))
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    """With a tight capacity, overflow tokens fall through (output is the
+    residual-free partial sum, never NaN/garbage)."""
+    from repro.models.config import MoEConfig
+    from repro.models import ffn as F
+
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=16, n_shared=0,
+                    capacity_factor=0.25, dispatch_groups=1)
+    p = F.init_moe(jax.random.PRNGKey(0), cfg, 32, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    out, aux = F.moe_forward(p, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # tighter capacity ⇒ smaller output norm than lossless
+    cfg2 = MoEConfig(n_experts=4, top_k=2, d_ff_expert=16, n_shared=0,
+                     capacity_factor=100.0, dispatch_groups=1)
+    out2, _ = F.moe_forward(p, x, cfg2)
+    assert float(jnp.linalg.norm(out)) < float(jnp.linalg.norm(out2)) + 1e-3
+
+
+def test_expert_ffn_custom_vjp_matches_autodiff():
+    from repro.models.ffn import _expert_ffn
+
+    key = jax.random.PRNGKey(0)
+    G, E, C, D, F_ = 2, 4, 8, 16, 32
+    ex = jax.random.normal(key, (G, E, C, D))
+    wg = jax.random.normal(jax.random.PRNGKey(1), (E, D, F_)) * 0.1
+    wu = jax.random.normal(jax.random.PRNGKey(2), (E, D, F_)) * 0.1
+    wd = jax.random.normal(jax.random.PRNGKey(3), (E, F_, D)) * 0.1
+
+    def ref(ex, wg, wu, wd):
+        a = jnp.einsum("gecd,edf->gecf", ex, wg)
+        h = jnp.einsum("gecd,edf->gecf", ex, wu)
+        return jnp.einsum("gecf,efd->gecd", jax.nn.silu(a) * h, wd)
+
+    out = _expert_ffn(ex, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref(ex, wg, wu, wd)),
+                               atol=1e-5)
+    loss = lambda f: lambda *a: jnp.sum(jnp.sin(f(*a)))
+    g1 = jax.grad(loss(_expert_ffn), argnums=(0, 1, 2, 3))(ex, wg, wu, wd)
+    g2 = jax.grad(loss(ref), argnums=(0, 1, 2, 3))(ex, wg, wu, wd)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_cca_reduce_options_equivalent():
+    """bf16/bucketed reduction options stay within sketch tolerance."""
+    import functools
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    # runs in-process: single device → psums are identity; the numerics
+    # of the dtype cast path still execute
+    from repro.core.rcca_dist import power_pass_local
+
+    a = jax.random.normal(jax.random.PRNGKey(0), (256, 32))
+    b = jax.random.normal(jax.random.PRNGKey(1), (256, 24))
+    Qa = jax.random.normal(jax.random.PRNGKey(2), (32, 16))
+    Qb = jax.random.normal(jax.random.PRNGKey(3), (24, 16))
+    ref = np.asarray(a.T @ (b @ Qb))
+
+    def run(**kw):
+        Ya, *_ = power_pass_local(a, b, Qa, Qb, row_axes=(), col_axis=None,
+                                  microbatch=64, compute_dtype=jnp.float32, **kw)
+        return np.asarray(Ya)
+
+    np.testing.assert_allclose(run(), ref, rtol=1e-4, atol=1e-3)
+    bf = run(reduce_dtype=jnp.bfloat16)
+    assert np.linalg.norm(bf - ref) / np.linalg.norm(ref) < 0.02
