@@ -1,0 +1,15 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify verify-quick bench-kernels
+
+# full tier-1 suite + the interpret-mode kernel-parity subset
+verify:
+	bash scripts/verify.sh
+
+# only the kernel-parity subset (fast pre-commit check)
+verify-quick:
+	bash scripts/verify.sh --quick
+
+# engine-comparison BENCH json (results/kernel_bench.json)
+bench-kernels:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.kernel_bench

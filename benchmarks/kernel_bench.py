@@ -1,8 +1,18 @@
 """Pallas kernel micro-benchmarks (interpret mode on CPU — numbers are
 CPU-emulation timings; the real signal is the allclose check and the
-derived arithmetic-intensity / roofline terms for the TPU target)."""
+derived arithmetic-intensity / roofline terms for the TPU target).
+
+Also emits a BENCH json comparing the two data-pass engines (fused
+Pallas kernels vs the pure-jnp oracle path) per chunk op:
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench --out results/kernel_bench.json
+"""
 
 from __future__ import annotations
+
+import argparse
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -49,3 +59,74 @@ def kernel_benchmarks(rows):
     qb = jax.random.normal(jax.random.PRNGKey(4), (d // 2, kt), jnp.float32)
     us = time_us(lambda: ops.final_pass_chunk(x, b, q, qb, interpret=True))
     rows.append(("kernel_final_pass_chunk", us, "Ca+Cb+F one X/B read each"))
+
+    # fused power-pass chunk (2 pallas_calls; A/B one HBM read each)
+    us = time_us(lambda: ops.power_pass_chunk(x, b, q, qb, interpret=True))
+    rows.append(("kernel_power_pass_chunk", us, "dYa+dYb fused, P stays in VMEM"))
+
+
+def engine_comparison(out_path: str = "results/kernel_bench.json",
+                      rows: list | None = None) -> dict:
+    """Time the per-chunk data-pass updates under both engines and write
+    a BENCH json.  On CPU the kernel engine runs in interpret mode, so
+    the jnp column wins on wall clock — the json's purpose is tracking
+    both engines' timings per backend plus the max engine disagreement."""
+    key = jax.random.PRNGKey(0)
+    n, da, db, kt = 1024, 512, 384, 256
+    a = jax.random.normal(key, (n, da), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, db), jnp.float32)
+    qa = jax.random.normal(jax.random.PRNGKey(2), (da, kt), jnp.float32)
+    qb = jax.random.normal(jax.random.PRNGKey(3), (db, kt), jnp.float32)
+
+    power_jnp = jax.jit(ref.power_pass_ref)
+    final_jnp = jax.jit(ref.final_pass_ref)
+    cases = [
+        ("power_pass_chunk", lambda: ops.power_pass_chunk(a, b, qa, qb),
+         lambda: power_jnp(a, b, qa, qb)),
+        ("final_pass_chunk", lambda: ops.final_pass_chunk(a, b, qa, qb),
+         lambda: final_jnp(a, b, qa, qb)),
+    ]
+    results = []
+    for name, run_k, run_j in cases:
+        out_k = jax.tree.leaves(run_k())
+        out_j = jax.tree.leaves(run_j())
+        err = max(
+            float(jnp.linalg.norm(gk - gj) / jnp.maximum(jnp.linalg.norm(gj), 1e-30))
+            for gk, gj in zip(out_k, out_j)
+        )
+        us_k = time_us(run_k)
+        us_j = time_us(run_j)
+        results.append({"name": name, "shape": [n, da, db, kt],
+                        "kernels_us": round(us_k, 1), "jnp_us": round(us_j, 1),
+                        "max_rel_err": err})
+        if rows is not None:
+            rows.append((f"engine_{name}_kernels", us_k, f"rel_err_vs_jnp={err:.2e}"))
+            rows.append((f"engine_{name}_jnp", us_j, "oracle path"))
+
+    bench = {
+        "bench": "cca_data_pass_engines",
+        "backend": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "results": results,
+    }
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+    print("BENCH " + json.dumps(bench))
+    return bench
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="results/kernel_bench.json")
+    args = ap.parse_args(argv)
+    rows: list = []
+    kernel_benchmarks(rows)
+    engine_comparison(args.out, rows)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 verification entry point (also: `make verify`).
+#
+#   scripts/verify.sh          # full tier-1 suite + kernel-parity subset
+#   scripts/verify.sh --quick  # only the interpret-mode kernel-parity subset
+#
+# Extra args after the mode flag are forwarded to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+quick=0
+if [[ "${1:-}" == "--quick" ]]; then
+  quick=1
+  shift
+fi
+
+# interpret-mode kernel parity: every Pallas kernel against its jnp
+# oracle, plus the engine-parity sweep of the data-pass drivers
+parity() {
+  python -m pytest -q tests/test_kernels.py tests/test_engine_parity.py "$@"
+}
+
+if [[ "$quick" == 1 ]]; then
+  parity "$@"
+else
+  python -m pytest -x -q "$@"
+  parity
+fi

@@ -146,28 +146,53 @@ class StreamingGrams:
         self.passes = 0
         self.n = None
 
-    def cross(self, Xa, Xb):
-        """One pass → (AᵀB·Xb, BᵀA·Xa)."""
+    def gram_a(self, V):
+        """One pass → AᵀA·V (the view-A CG matvec)."""
         self.passes += 1
-        Ra = Rb = None
+        G = None
+        for a, _ in self.source_factory():
+            u = a.T @ (a @ V)
+            G = u if G is None else G + u
+        return G
+
+    def gram_b(self, V):
+        """One pass → BᵀB·V."""
+        self.passes += 1
+        G = None
+        for _, b in self.source_factory():
+            u = b.T @ (b @ V)
+            G = u if G is None else G + u
+        return G
+
+    def norm_cross_a(self, Wa):
+        """One pass → (AᵀA·Wa, BᵀA·Wa): everything the A-side metric
+        normalization AND the follow-up B-side cross product need —
+        both are linear in Wa, so one pass serves both."""
+        self.passes += 1
+        U = V = None
         n = 0
         for a, b in self.source_factory():
-            ua, ub = a.T @ (b @ Xb), b.T @ (a @ Xa)
-            Ra = ua if Ra is None else Ra + ua
-            Rb = ub if Rb is None else Rb + ub
+            p = a @ Wa
+            u, v = a.T @ p, b.T @ p
+            U = u if U is None else U + u
+            V = v if V is None else V + v
             n += a.shape[0]
         self.n = n
-        return Ra, Rb
+        return U, V
 
-    def gram(self, Va, Vb):
-        """One pass → (AᵀA·Va, BᵀB·Vb) — the CG matvec for both views."""
+    def norm_cross_b(self, Wb):
+        """One pass → (BᵀB·Wb, AᵀB·Wb)."""
         self.passes += 1
-        Ga = Gb = None
+        U = V = None
+        n = 0
         for a, b in self.source_factory():
-            ua, ub = a.T @ (a @ Va), b.T @ (b @ Vb)
-            Ga = ua if Ga is None else Ga + ua
-            Gb = ub if Gb is None else Gb + ub
-        return Ga, Gb
+            p = b @ Wb
+            u, v = b.T @ p, a.T @ p
+            U = u if U is None else U + u
+            V = v if V is None else V + v
+            n += a.shape[0]
+        self.n = n
+        return U, V
 
 
 def horst_cca_streaming(
@@ -184,75 +209,80 @@ def horst_cca_streaming(
     """Horst iteration with every matrix product a streamed data pass
     (paper §2: the multiplication step runs directly in the X coordinate
     system; AᵀA is never materialized).  The regularized LS solves use a
-    few CG iterations whose matvecs are shared data passes — the paper's
+    few CG iterations whose matvecs are data passes — the paper's
     footnote-5 regime (approximate solves still converge).
 
-    Pass cost per Horst iteration: 1 (cross products) + cg_iters (CG
-    matvecs, both views jointly) + 1 (metric normalization).  The total
-    is in ``result.passes`` terms via the StreamingGrams counter; use
+    The update order is Gauss-Seidel, matching :func:`horst_cca`: the
+    B-side solve uses the FRESH Xa.  (A simultaneous/Jacobi update of
+    both views is not monotone for the Horst iteration and stalls in a
+    limit cycle well below the optimum.)  Passes are shared where the
+    dependency structure allows: each view's metric normalization and
+    the other view's next cross product are both linear in the solved W,
+    so one combined pass (norm_cross_*) serves both.  CG solves warm-
+    start from the previous iteration's W.
+
+    Pass cost per Horst iteration: 2·(cg_iters + warm-start residual)
+    CG matvecs + 2 combined normalize+cross passes.  The total is in
+    ``objective_history[0]`` via the StreamingGrams counter; use
     ``init_Xb`` from RandomizedCCA for the Horst+rcca warm start and
     compare pass counts with Alg. 1's q+1 (Table 2b).
     """
     k = cfg.k
     if init_Xb is None:
         assert key is not None
-        ka, kb = jax.random.split(key)
-        Xb = jax.random.normal(kb, (db, k), jnp.float32)
-        Xa = jax.random.normal(ka, (da, k), jnp.float32)
+        Xb = jax.random.normal(jax.random.split(key)[1], (db, k), jnp.float32)
     else:
         Xb = jnp.asarray(init_Xb, jnp.float32)
-        Xa = (jnp.asarray(init_Xa, jnp.float32) if init_Xa is not None
-              else jax.random.normal(jax.random.PRNGKey(0), (da, k), jnp.float32))
     grams = StreamingGrams(source_factory)
-    eye = jnp.eye(k)
-    objs = []
 
-    def cg_joint(Ra, Rb, Wa0, Wb0):
-        """CG on (Ca+λa)Wa=Ra and (Cb+λb)Wb=Rb with shared passes."""
-        Wa, Wb = Wa0, Wb0
-        Ga0, Gb0 = grams.gram(Wa, Wb)
-        ra = Ra - (Ga0 + lam_a * Wa)
-        rb = Rb - (Gb0 + lam_b * Wb)
-        pa, pb = ra, rb
-        rs_a = jnp.sum(ra * ra, 0)
-        rs_b = jnp.sum(rb * rb, 0)
+    def cg_view(gram_fn, lam, R, W0):
+        """CG on (G + λ)W = R; W0=None starts from zero (saves the
+        warm-start residual pass)."""
+        if W0 is None:
+            W, r = jnp.zeros_like(R), R
+        else:
+            W = W0
+            r = R - (gram_fn(W0) + lam * W0)
+        p, rs = r, jnp.sum(r * r, 0)
         for _ in range(cfg.cg_iters):
-            Gpa, Gpb = grams.gram(pa, pb)
-            Gpa = Gpa + lam_a * pa
-            Gpb = Gpb + lam_b * pb
-            aa = rs_a / jnp.maximum(jnp.sum(pa * Gpa, 0), 1e-30)
-            ab = rs_b / jnp.maximum(jnp.sum(pb * Gpb, 0), 1e-30)
-            Wa, Wb = Wa + pa * aa, Wb + pb * ab
-            ra, rb = ra - Gpa * aa, rb - Gpb * ab
-            rs_a2 = jnp.sum(ra * ra, 0)
-            rs_b2 = jnp.sum(rb * rb, 0)
-            pa = ra + pa * (rs_a2 / jnp.maximum(rs_a, 1e-30))
-            pb = rb + pb * (rs_b2 / jnp.maximum(rs_b, 1e-30))
-            rs_a, rs_b = rs_a2, rs_b2
-        return Wa, Wb
+            Gp = gram_fn(p) + lam * p
+            alpha = rs / jnp.maximum(jnp.sum(p * Gp, 0), 1e-30)
+            W = W + p * alpha
+            r = r - Gp * alpha
+            rs2 = jnp.sum(r * r, 0)
+            p = r + p * (rs2 / jnp.maximum(rs, 1e-30))
+            rs = rs2
+        return W
 
-    Wa_prev = jnp.zeros((da, k), jnp.float32)
-    Wb_prev = Xb * 0.0
-    for _ in range(cfg.iters):
-        Ra, Rb = grams.cross(Xa if jnp.any(Xa != 0) else jnp.zeros_like(Xa), Xb)
-        n = grams.n
-        Wa, Wb = cg_joint(Ra, Rb, jnp.zeros((da, k), jnp.float32),
-                          jnp.zeros((db, k), jnp.float32))
-        # exact metric normalization (one pass)
-        GaW, GbW = grams.gram(Wa, Wb)
-        Ma = sym(Wa.T @ GaW) + lam_a * sym(Wa.T @ Wa)
-        Mb = sym(Wb.T @ GbW) + lam_b * sym(Wb.T @ Wb)
-        Xa = jnp.sqrt(n) * (Wa @ inv_sqrt_psd(Ma, eps=1e-12))
-        Xb = jnp.sqrt(n) * (Wb @ inv_sqrt_psd(Mb, eps=1e-12))
-        objs.append(float(jnp.trace(Xa.T @ Ra @ jnp.linalg.inv(
-            sym(Wb.T @ Wb) + 1e-30 * eye)) ) if False else 0.0)
-
-    # canonical rotation + objective from one final cross pass
-    Ra, Rb = grams.cross(Xa, Xb)
+    # bootstrap: normalize the initial Xb in the B metric and produce the
+    # first A-side RHS Ra = AᵀB·Xb — one combined pass
+    Ub, Va = grams.norm_cross_b(Xb)
     n = grams.n
-    F = Xa.T @ Ra / n  # = Xaᵀ AᵀB Xb / n  (both sides already normalized)
+    Tb = inv_sqrt_psd(sym(Xb.T @ Ub) + lam_b * sym(Xb.T @ Xb), eps=1e-12)
+    Xb = jnp.sqrt(n) * (Xb @ Tb)
+    Ra = jnp.sqrt(n) * (Va @ Tb)
 
-    # wait: Ra = AᵀB·Xb ⇒ Xaᵀ·Ra = Xaᵀ AᵀB Xb  ✓
+    Wa = jnp.asarray(init_Xa, jnp.float32) if init_Xa is not None else None
+    Wb = None
+    # iters=0 (warm-start evaluation only): the loop never assigns Xa
+    Xa = Wa if Wa is not None else jax.random.normal(
+        key if key is not None else jax.random.PRNGKey(0), (da, k), jnp.float32)
+    for _ in range(cfg.iters):
+        # view A: LS solve, then one pass for (normalization, B-side RHS)
+        Wa = cg_view(grams.gram_a, lam_a, Ra, Wa)
+        Ua, Vb = grams.norm_cross_a(Wa)
+        Ta = inv_sqrt_psd(sym(Wa.T @ Ua) + lam_a * sym(Wa.T @ Wa), eps=1e-12)
+        Xa = jnp.sqrt(n) * (Wa @ Ta)
+        Rb = jnp.sqrt(n) * (Vb @ Ta)  # = BᵀA·Xa — Gauss-Seidel: fresh Xa
+        # view B likewise; its combined pass yields the next Ra
+        Wb = cg_view(grams.gram_b, lam_b, Rb, Wb)
+        Ub, Va = grams.norm_cross_b(Wb)
+        Tb = inv_sqrt_psd(sym(Wb.T @ Ub) + lam_b * sym(Wb.T @ Wb), eps=1e-12)
+        Xb = jnp.sqrt(n) * (Wb @ Tb)
+        Ra = jnp.sqrt(n) * (Va @ Tb)
+
+    # canonical rotation + objective: Ra is already AᵀB·Xb for the final Xb
+    F = Xa.T @ Ra / n
     U, S, Vt = jnp.linalg.svd(F)
     return HorstResult(Xa=Xa @ U, Xb=Xb @ Vt.T, rho=S,
                        objective_history=jnp.asarray([grams.passes], jnp.float32))

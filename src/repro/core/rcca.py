@@ -32,6 +32,21 @@ from jax.scipy.linalg import solve_triangular
 # configuration
 # --------------------------------------------------------------------------
 
+#: Production default of the data-pass engine.  "kernels" = Pallas
+#: (Mosaic on TPU, interpret mode elsewhere); "jnp" = the pure-jnp
+#: oracle path the kernels are validated against.
+DEFAULT_ENGINE = "kernels"
+
+
+def resolve_engine(engine: str, use_kernels: Optional[bool] = None) -> str:
+    """Normalize the engine knob; ``use_kernels`` is the legacy boolean
+    spelling and wins when passed explicitly."""
+    if use_kernels is not None:
+        engine = "kernels" if use_kernels else "jnp"
+    if engine not in ("kernels", "jnp"):
+        raise ValueError(f"unknown engine {engine!r}; expected 'kernels' or 'jnp'")
+    return engine
+
 
 @dataclasses.dataclass(frozen=True)
 class RCCAConfig:
@@ -345,14 +360,19 @@ def randomized_cca_streaming(
     cfg: RCCAConfig,
     key: jax.Array,
     *,
-    use_kernels: bool = False,
+    engine: str = DEFAULT_ENGINE,
+    use_kernels: Optional[bool] = None,
 ) -> RCCAResult:
     """Algorithm 1 where every data pass is a scan over row chunks.
 
     This is the single-device form of the production data pass: the
     distributed version (rcca_dist) wraps the same updates in shard_map
-    and psums the accumulators.
+    and psums the accumulators.  ``engine`` selects the per-chunk update
+    implementation: ``"kernels"`` (default) runs the fused Pallas data
+    passes (interpret mode off-TPU), ``"jnp"`` the pure-jnp oracle.
+    ``use_kernels`` is the legacy boolean spelling of the same knob.
     """
+    engine = resolve_engine(engine, use_kernels)
     nc, c, da = A_chunks.shape
     db = B_chunks.shape[-1]
     kt = cfg.sketch
@@ -361,8 +381,9 @@ def randomized_cca_streaming(
     Qa = jax.random.normal(ka, (da, kt), dt)
     Qb = jax.random.normal(kb, (db, kt), dt)
 
-    upd_pow = update_power_stats_kernel if use_kernels else update_power_stats
-    upd_fin = update_final_stats_kernel if use_kernels else update_final_stats
+    kernels = engine == "kernels"
+    upd_pow = update_power_stats_kernel if kernels else update_power_stats
+    upd_fin = update_final_stats_kernel if kernels else update_final_stats
 
     for _ in range(cfg.q):
         stats = init_power_stats(da, db, kt, jnp.float32)
@@ -394,21 +415,27 @@ def randomized_cca_iterator(
     *,
     resume_state: Optional[dict] = None,
     on_pass_end=None,
+    engine: str = DEFAULT_ENGINE,
+    use_kernels: Optional[bool] = None,
 ) -> RCCAResult:
     """True out-of-core driver: ``source_factory()`` yields (a, b) row
     chunks (e.g. from disk / a distributed FS).  Per-chunk updates are
     jitted; pass state is a plain pytree so the caller can checkpoint it
     between chunks (fault tolerance: resume a killed pass mid-stream via
     ``resume_state`` = {"pass_idx", "chunk_idx", "stats", "Qa", "Qb"}).
+    ``engine`` selects the per-chunk update implementation (see
+    :func:`randomized_cca_streaming`).
     """
+    engine = resolve_engine(engine, use_kernels)
     kt = cfg.sketch
     dt = cfg.dtype
     ka, kb = jax.random.split(key)
     Qa = jax.random.normal(ka, (da, kt), dt)
     Qb = jax.random.normal(kb, (db, kt), dt)
 
-    upd_pow = jax.jit(update_power_stats)
-    upd_fin = jax.jit(update_final_stats)
+    kernels = engine == "kernels"
+    upd_pow = jax.jit(update_power_stats_kernel if kernels else update_power_stats)
+    upd_fin = jax.jit(update_final_stats_kernel if kernels else update_final_stats)
 
     start_pass, start_chunk, stats0 = 0, 0, None
     if resume_state is not None:

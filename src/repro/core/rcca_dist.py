@@ -30,7 +30,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .linalg import sym, topk_svd, tri_solve_right
-from .rcca import RCCAConfig, RCCAResult, finish
+from .rcca import DEFAULT_ENGINE, RCCAConfig, RCCAResult, finish, resolve_engine
 
 
 # --------------------------------------------------------------------------
@@ -77,11 +77,16 @@ def _microbatches(a: jax.Array, mb: Optional[int]):
 
 def power_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
                      compute_dtype=jnp.bfloat16, int8_reduce=False,
-                     reduce_buckets=1, reduce_dtype=None):
+                     reduce_buckets=1, reduce_dtype=None, engine="jnp"):
     """One range-finder pass over the local shard → global (Ya, Yb, stats).
 
     Returns Ya/Yb sharded like Qa/Qb (features over col_axis, replicated
     over rows) plus centering/λ statistics.
+
+    ``engine="kernels"`` runs the per-microbatch matmuls as Pallas
+    kernels on the local shards: fully fused project+accumulate when
+    features are unsharded (col_axis None — P stays in VMEM), and the
+    unfused kernel pair around the per-microbatch P psum otherwise.
 
     §Perf knobs: ``int8_reduce`` — compress the end-of-pass Y psum with
     blockwise int8 (4× fewer bytes on the row axes; randomized range
@@ -95,6 +100,9 @@ def power_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
     db_l = Qb.shape[0]
     f32 = jnp.float32
     cd = compute_dtype
+    kernels = engine == "kernels"
+    if kernels:
+        from repro.kernels import ops as kops
 
     a_r = a.reshape(nb, mb, da_l)
     b_r = b.reshape(nb, mb, db_l)
@@ -104,14 +112,27 @@ def power_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
         Ya, Yb, sa, sb, tra, trb, n = carry
         am, bm = ab
         am_c, bm_c = am.astype(cd), bm.astype(cd)
-        # projected activations: the ONLY per-microbatch collectives
-        pb = bm_c @ Qb_c
-        pa = am_c @ Qa_c
-        if col_axis is not None:
-            pb = _psum(pb, col_axis)
-            pa = _psum(pa, col_axis)
-        Ya = Ya + jnp.einsum("md,mk->dk", am_c, pb, preferred_element_type=f32)
-        Yb = Yb + jnp.einsum("md,mk->dk", bm_c, pa, preferred_element_type=f32)
+        if kernels and col_axis is None:
+            # features unsharded → the fused chunk update applies as-is
+            dYa, dYb = kops.power_pass_chunk(am_c, bm_c, Qa_c, Qb_c)
+            Ya, Yb = Ya + dYa, Yb + dYb
+        else:
+            # projected activations: the ONLY per-microbatch collectives
+            if kernels:
+                pb = kops.project(bm_c, Qb_c).astype(cd)
+                pa = kops.project(am_c, Qa_c).astype(cd)
+            else:
+                pb = bm_c @ Qb_c
+                pa = am_c @ Qa_c
+            if col_axis is not None:
+                pb = _psum(pb, col_axis)
+                pa = _psum(pa, col_axis)
+            if kernels:
+                Ya = Ya + kops.accumulate_tn(am_c, pb)
+                Yb = Yb + kops.accumulate_tn(bm_c, pa)
+            else:
+                Ya = Ya + jnp.einsum("md,mk->dk", am_c, pb, preferred_element_type=f32)
+                Yb = Yb + jnp.einsum("md,mk->dk", bm_c, pa, preferred_element_type=f32)
         sa = sa + jnp.sum(am, axis=0, dtype=f32)
         sb = sb + jnp.sum(bm, axis=0, dtype=f32)
         tra = tra + jnp.sum(am.astype(f32) ** 2)
@@ -158,13 +179,21 @@ def power_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
 
 
 def final_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
-                     compute_dtype=jnp.bfloat16):
-    """Final pass: projected covariances Ca, Cb, F (paper lines 14-18)."""
+                     compute_dtype=jnp.bfloat16, engine="jnp"):
+    """Final pass: projected covariances Ca, Cb, F (paper lines 14-18).
+
+    ``engine="kernels"``: with unsharded features the fused
+    project+gram kernel reads each local shard from HBM once per
+    microbatch; with a col_axis the kernel matmul pair brackets the
+    per-microbatch P psum."""
     nb, mb = _microbatches(a, microbatch)
     da_l, kt = Qa.shape
     db_l = Qb.shape[0]
     f32 = jnp.float32
     cd = compute_dtype
+    kernels = engine == "kernels"
+    if kernels:
+        from repro.kernels import ops as kops
     a_r = a.reshape(nb, mb, da_l)
     b_r = b.reshape(nb, mb, db_l)
     Qa_c, Qb_c = Qa.astype(cd), Qb.astype(cd)
@@ -173,14 +202,27 @@ def final_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
         Ca, Cb, F, sa, sb, tra, trb, n = carry
         am, bm = ab
         am_c, bm_c = am.astype(cd), bm.astype(cd)
-        pa = am_c @ Qa_c
-        pb = bm_c @ Qb_c
-        if col_axis is not None:
-            pa = _psum(pa, col_axis)
-            pb = _psum(pb, col_axis)
-        Ca = Ca + jnp.einsum("mi,mj->ij", pa, pa, preferred_element_type=f32)
-        Cb = Cb + jnp.einsum("mi,mj->ij", pb, pb, preferred_element_type=f32)
-        F = F + jnp.einsum("mi,mj->ij", pa, pb, preferred_element_type=f32)
+        if kernels and col_axis is None:
+            dCa, dCb, dF = kops.final_pass_chunk(am_c, bm_c, Qa_c, Qb_c)
+            Ca, Cb, F = Ca + dCa, Cb + dCb, F + dF
+        else:
+            if kernels:
+                pa = kops.project(am_c, Qa_c).astype(cd)
+                pb = kops.project(bm_c, Qb_c).astype(cd)
+            else:
+                pa = am_c @ Qa_c
+                pb = bm_c @ Qb_c
+            if col_axis is not None:
+                pa = _psum(pa, col_axis)
+                pb = _psum(pb, col_axis)
+            if kernels:
+                Ca = Ca + kops.accumulate_tn(pa, pa)
+                Cb = Cb + kops.accumulate_tn(pb, pb)
+                F = F + kops.accumulate_tn(pa, pb)
+            else:
+                Ca = Ca + jnp.einsum("mi,mj->ij", pa, pa, preferred_element_type=f32)
+                Cb = Cb + jnp.einsum("mi,mj->ij", pb, pb, preferred_element_type=f32)
+                F = F + jnp.einsum("mi,mj->ij", pa, pb, preferred_element_type=f32)
         sa = sa + jnp.sum(am, axis=0, dtype=f32)
         sb = sb + jnp.sum(bm, axis=0, dtype=f32)
         tra = tra + jnp.sum(am.astype(f32) ** 2)
@@ -217,13 +259,18 @@ def dist_randomized_cca(
     col_axis: Optional[str] = "model",
     microbatch: Optional[int] = None,
     compute_dtype=jnp.float32,
+    engine: str = DEFAULT_ENGINE,
+    use_kernels: Optional[bool] = None,
 ) -> RCCAResult:
     """Run Algorithm 1 on row+feature-sharded A (n×da), B (n×db).
 
     A/B must be shardable as P(row_axes, col_axis).  All q+1 data passes
     execute as shard_map programs; the finish (lines 19-25) is computed
     redundantly on every device (replicated, no host round-trip).
+    ``engine`` selects the per-microbatch update implementation inside
+    the shard_map bodies (see rcca.randomized_cca_streaming).
     """
+    engine = resolve_engine(engine, use_kernels)
     row_axes = tuple(ax for ax in row_axes if ax in mesh.axis_names)
     if col_axis is not None and col_axis not in mesh.axis_names:
         col_axis = None
@@ -258,7 +305,7 @@ def dist_randomized_cca(
     def power_step(a, b, Qa, Qb):
         Ya, Yb, sa, sb, tra, trb, nn = power_pass_local(
             a, b, Qa, Qb, row_axes=row_axes, col_axis=col_axis,
-            microbatch=microbatch, compute_dtype=compute_dtype,
+            microbatch=microbatch, compute_dtype=compute_dtype, engine=engine,
         )
         if cfg.center:
             mu_bQ = (sb / nn) @ Qb.astype(jnp.float32)
@@ -284,7 +331,7 @@ def dist_randomized_cca(
     def final_step(a, b, Qa, Qb):
         Ca, Cb, F, sa, sb, tra, trb, nn = final_pass_local(
             a, b, Qa, Qb, row_axes=row_axes, col_axis=col_axis,
-            microbatch=microbatch, compute_dtype=compute_dtype,
+            microbatch=microbatch, compute_dtype=compute_dtype, engine=engine,
         )
         Qa32 = Qa.astype(jnp.float32)
         Qb32 = Qb.astype(jnp.float32)

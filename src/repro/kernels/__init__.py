@@ -1,13 +1,48 @@
 """Pallas TPU kernels for the CCA data-pass hot spots.
 
-matmul.py   — MXU-tiled NN/TN matmul (f32 VMEM accumulator)
-projgram.py — fused project+gram (one HBM read of X per final pass)
-ops.py      — jitted public wrappers (interpret-mode on CPU)
-ref.py      — pure-jnp oracles
+compat.py    — jax-version shim (compiler params, ambient mesh)
+matmul.py    — MXU-tiled NN/TN matmul (f32 VMEM accumulator)
+powerpass.py — fused project+accumulate (one HBM read of A and B per
+               range-finder update; 2 pallas_calls per chunk, not 4)
+projgram.py  — fused project+gram (one HBM read of X per final pass)
+autotune.py  — persistent block-size autotuner
+ops.py       — jitted public wrappers (interpret-mode on CPU)
+ref.py       — pure-jnp oracles
+
+Engine selection
+----------------
+This package is the production default of the data-pass engine: the
+drivers (``randomized_cca_streaming``, ``randomized_cca_iterator``,
+``dist_randomized_cca``, ``launch.cca_fit``) take
+``engine="kernels" | "jnp"`` and default to ``"kernels"``.  On hosts
+without a TPU the kernels run in Pallas interpret mode (same kernel
+bodies, executed on CPU), so parity against the ``ref.py`` /
+``rcca.py`` jnp oracles is testable everywhere; on TPU the identical
+code lowers to Mosaic.  ``engine="jnp"`` selects the pure-jnp update
+path — the oracle the kernels are validated against.
+
+Autotune cache
+--------------
+``pallas_matmul`` block caps resolve from a persistent JSON cache keyed
+by (backend, op, dtype, padded shape); run
+``autotune.autotune_matmul(x, y)`` once per hot shape on the target
+hardware to populate it (``$RCCA_AUTOTUNE_CACHE`` overrides the cache
+path).  Unswept shapes fall back to the 512³ heuristic.  Caps bind at
+trace time: sweep before a shape's first jitted use in the process, or
+the already-compiled blocks stay live until restart.
 """
 
-from . import ops, ref
+from . import autotune, compat, ops, ref
 from .matmul import pallas_matmul
+from .powerpass import power_project_accumulate
 from .projgram import projgram
 
-__all__ = ["ops", "ref", "pallas_matmul", "projgram"]
+__all__ = [
+    "autotune",
+    "compat",
+    "ops",
+    "ref",
+    "pallas_matmul",
+    "power_project_accumulate",
+    "projgram",
+]

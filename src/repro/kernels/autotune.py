@@ -1,0 +1,161 @@
+"""Block-size autotuner for the Pallas data-pass kernels.
+
+``pallas_matmul``'s (block_m, block_n, block_k) caps were hardcoded at
+512³; they now resolve per (backend, op, dtype, padded shape) from a
+persistent JSON cache, so a one-off sweep on the target hardware sets
+the production tile sizes:
+
+    from repro.kernels import autotune
+    autotune.autotune_matmul(x, y)     # sweep candidates, persist winner
+    pallas_matmul(x, y)                # subsequent calls pick up the caps
+
+Cache location: ``$RCCA_AUTOTUNE_CACHE``, else
+``~/.cache/repro/pallas_autotune.json``.  A missing or corrupt cache —
+or an unswept shape — falls back to the :data:`DEFAULT_CAPS` heuristic,
+so autotuning is always optional and never required for correctness.
+
+NOTE on ordering: block caps are resolved at TRACE time, and the jitted
+wrappers cache compiled executables per shape — a shape already run in
+this process keeps its compiled blocks.  Sweep before first use of a
+shape (or restart the process) for new entries to take effect.
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+# caps applied to (block_m, block_n, block_k) when no tuned entry exists
+DEFAULT_CAPS = (512, 512, 512)
+_CANDIDATE_CAPS = (128, 256, 512, 1024)
+
+_cache: dict | None = None
+_cache_file: str | None = None
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "RCCA_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "pallas_autotune.json"),
+    )
+
+
+def _load() -> dict:
+    global _cache, _cache_file
+    path = cache_path()
+    if _cache is None or _cache_file != path:
+        try:
+            with open(path) as f:
+                _cache = json.load(f)
+        except (OSError, ValueError):
+            _cache = {}
+        _cache_file = path
+    return _cache
+
+
+def _persist() -> None:
+    path = cache_path()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(_cache, f, indent=2, sort_keys=True)
+    except OSError:
+        pass  # read-only FS — keep the in-memory entry only
+
+
+def reset() -> None:
+    """Drop the in-memory cache (forces a re-read of the cache file)."""
+    global _cache, _cache_file
+    _cache = None
+    _cache_file = None
+
+
+def shape_key(op: str, M: int, K: int, N: int, dtype, backend: str | None = None) -> str:
+    backend = backend or jax.default_backend()
+    return f"{backend}|{op}|{jnp.dtype(dtype).name}|{M}x{K}x{N}"
+
+
+def lookup(op: str, M: int, K: int, N: int, dtype) -> tuple[int, int, int]:
+    """Tuned (bm, bn, bk) caps for a padded problem, else DEFAULT_CAPS.
+    Malformed entries (hand-edited / stale-format caches) also fall
+    back — a bad cache must never break the engine."""
+    ent = _load().get(shape_key(op, M, K, N, dtype))
+    try:
+        bm, bn, bk = (int(b) for b in ent["blocks"])
+        return bm, bn, bk
+    except (TypeError, KeyError, ValueError):
+        return DEFAULT_CAPS
+
+
+def record(op, M, K, N, dtype, blocks, us: float | None = None,
+           backend: str | None = None) -> None:
+    entry = {"blocks": [int(b) for b in blocks]}
+    if us is not None:
+        entry["us"] = round(float(us), 1)
+    _load()[shape_key(op, M, K, N, dtype, backend)] = entry
+    _persist()
+
+
+def candidates(Mp: int, Kp: int, Np: int) -> list[tuple[int, int, int]]:
+    """Distinct effective (bm, bn, bk) triples for a padded problem —
+    cap combinations that resolve to the same dividing blocks are
+    swept once."""
+    from .matmul import _pick_block
+
+    seen, out = set(), []
+    for cm, cn, ck in itertools.product(_CANDIDATE_CAPS, repeat=3):
+        eff = (_pick_block(Mp, cm), _pick_block(Np, cn), _pick_block(Kp, ck))
+        if eff not in seen:
+            seen.add(eff)
+            out.append(eff)
+    return out
+
+
+def autotune_matmul(x: jax.Array, y: jax.Array, *, transpose_lhs: bool = False,
+                    interpret: bool | None = None, iters: int = 2,
+                    op: str | None = None) -> tuple[int, int, int]:
+    """Sweep block caps for one matmul shape; persist and return the winner.
+
+    Candidates that fail to compile (e.g. exceed VMEM) are skipped; if
+    every candidate fails, DEFAULT_CAPS is returned and nothing is
+    recorded.
+    """
+    from .matmul import _round_up, pallas_matmul
+    from .ops import _default_interpret
+
+    interpret = _default_interpret() if interpret is None else interpret
+    if transpose_lhs:
+        K, M = x.shape
+    else:
+        M, K = x.shape
+    N = y.shape[1]
+    Mp, Kp, Np = _round_up(M, 128), _round_up(K, 128), _round_up(N, 128)
+    op = op or ("matmul_tn" if transpose_lhs else "matmul_nn")
+
+    best, best_us = None, float("inf")
+    for bm, bn, bk in candidates(Mp, Kp, Np):
+        def run():
+            return pallas_matmul(x, y, transpose_lhs=transpose_lhs,
+                                 block_m=bm, block_n=bn, block_k=bk,
+                                 interpret=interpret)
+        try:
+            jax.block_until_ready(run())  # compile + warm up
+            t0 = time.perf_counter()
+            out = None
+            for _ in range(iters):
+                out = run()
+            jax.block_until_ready(out)
+        except Exception:
+            continue
+        us = (time.perf_counter() - t0) / iters * 1e6
+        if us < best_us:
+            best, best_us = (bm, bn, bk), us
+    if best is None:
+        return DEFAULT_CAPS
+    record(op, Mp, Kp, Np, x.dtype, best, us=best_us)
+    return best

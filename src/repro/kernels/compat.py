@@ -1,0 +1,60 @@
+"""Single jax-version shim for the data-pass engine.
+
+jax renames a handful of names the kernel and launch layers depend on;
+every version-specific spelling is resolved HERE, once, so
+``matmul.py``, ``projgram.py``, ``powerpass.py`` and the launch drivers
+never touch them directly:
+
+- ``tpu_compiler_params(...)`` — ``pltpu.CompilerParams`` (jax ≥ 0.5)
+  vs ``pltpu.TPUCompilerParams`` (jax 0.4.x).
+- ``set_mesh(mesh)`` — context manager making ``mesh`` ambient:
+  ``jax.set_mesh`` (jax ≥ 0.5) vs the ``with mesh:`` thread-resources
+  context (jax 0.4.x).
+- ``cost_analysis(compiled)`` — dict (jax ≥ 0.5) vs single-element
+  list of dicts (jax 0.4.x).
+
+Both helpers resolve the spelling at call time (not import time) so a
+jax upgrade — or a test monkeypatching one spelling — is picked up
+without reloading this module.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(*, dimension_semantics=None, **kwargs):
+    """Build Mosaic compiler params under either jax spelling.
+
+    Accepts the keywords shared by both classes (``dimension_semantics``,
+    ``vmem_limit_bytes``, ...) and returns an instance suitable for
+    ``pl.pallas_call(compiler_params=...)``.
+    """
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(dimension_semantics=dimension_semantics, **kwargs)
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()`` — always a (possibly
+    empty) dict, whichever container this jax returns."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Make ``mesh`` the ambient device mesh for the enclosed block."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        with setter(mesh):
+            yield
+    else:
+        with mesh:
+            yield

@@ -22,6 +22,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import autotune
+from .compat import tpu_compiler_params
+
 
 # --------------------------------------------------------------------------
 # kernel bodies
@@ -102,9 +105,9 @@ def pallas_matmul(
     y: jax.Array,
     *,
     transpose_lhs: bool = False,
-    block_m: int = 512,
-    block_n: int = 512,
-    block_k: int = 512,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
     out_dtype=jnp.float32,
     interpret: bool = False,
 ) -> jax.Array:
@@ -114,6 +117,10 @@ def pallas_matmul(
             TN — x (K, M), y (K, N) → (M, N)  (contraction = dim 0).
     Inputs are zero-padded to multiples of 128; the result is sliced
     back, so any shape is accepted.
+
+    Block caps left as ``None`` resolve from the autotune cache for this
+    (backend, op, dtype, padded shape) — see :mod:`repro.kernels.autotune`
+    — falling back to the 512³ heuristic for unswept shapes.
     """
     if transpose_lhs:
         K, M = x.shape
@@ -124,6 +131,12 @@ def pallas_matmul(
     assert K == K2, f"contraction mismatch {K} vs {K2}"
 
     Mp, Np, Kp = _round_up(M, 128), _round_up(N, 128), _round_up(K, 128)
+    if block_m is None or block_n is None or block_k is None:
+        op = "matmul_tn" if transpose_lhs else "matmul_nn"
+        tuned = autotune.lookup(op, Mp, Kp, Np, x.dtype)
+        block_m = tuned[0] if block_m is None else block_m
+        block_n = tuned[1] if block_n is None else block_n
+        block_k = tuned[2] if block_k is None else block_k
     bm, bn, bk = _pick_block(Mp, block_m), _pick_block(Np, block_n), _pick_block(Kp, block_k)
     gm, gn, gk = Mp // bm, Np // bn, Kp // bk
 
@@ -145,7 +158,7 @@ def pallas_matmul(
         out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(xp, yp)

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from .matmul import pallas_matmul
+from .powerpass import power_project_accumulate
 from .projgram import projgram
 
 # interpret=True on CPU hosts (including the dry-run container), False on TPU.
@@ -38,12 +39,12 @@ def accumulate_tn(x: jax.Array, p: jax.Array, *, interpret: bool | None = None) 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def power_pass_chunk(a, b, Qa, Qb, *, interpret: bool | None = None):
     """Fused chunk update of Algorithm 1 lines 7-8:
-    ΔYa = Aᵀ(B Qb), ΔYb = Bᵀ(A Qa)."""
+    ΔYa = Aᵀ(B Qb), ΔYb = Bᵀ(A Qa) — one fused project+accumulate
+    kernel per view (powerpass.py), so A and B are each read from HBM
+    once per update and P never makes an HBM round-trip."""
     interpret = _default_interpret() if interpret is None else interpret
-    pb = pallas_matmul(b, Qb, out_dtype=jnp.float32, interpret=interpret)
-    pa = pallas_matmul(a, Qa, out_dtype=jnp.float32, interpret=interpret)
-    dYa = pallas_matmul(a, pb, transpose_lhs=True, out_dtype=jnp.float32, interpret=interpret)
-    dYb = pallas_matmul(b, pa, transpose_lhs=True, out_dtype=jnp.float32, interpret=interpret)
+    dYa = power_project_accumulate(a, b, Qb, interpret=interpret)
+    dYb = power_project_accumulate(b, a, Qa, interpret=interpret)
     return dYa, dYb
 
 

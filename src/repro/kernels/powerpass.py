@@ -1,0 +1,118 @@
+"""Fused project+accumulate Pallas kernel for the range-finder pass.
+
+The dominant data pass of Algorithm 1 (lines 7-8) updates, per row
+chunk, ``ΔYa = Aᵀ(B Qb)`` and ``ΔYb = Bᵀ(A Qa)``.  Issued as separate
+matmuls that is four ``pallas_call``s per chunk, with each view read
+from HBM twice and the projected activations P making an HBM
+round-trip.  This kernel fuses one view's update — the projection tile
+``P = B Qb`` stays in a VMEM scratch accumulator and ``ΔYa = AᵀP`` is
+emitted directly — the same fusion :mod:`repro.kernels.projgram`
+applies to the final pass.  A full ``power_pass_chunk`` is then two
+``pallas_call``s, each reading A and B exactly once.
+
+Grid (n_t, db_t), contraction (db) innermost:
+
+- per row tile, P = Σ_db B_tile Qb_tile accumulates in VMEM;
+- on the last db step, ΔY += AᵀP lands in the (dap, k̃p) output block,
+  whose index map is constant, so it stays VMEM-resident across row
+  steps and is written back to HBM once.
+
+VMEM budget per grid step (bn=256, bdb=512, f32):
+  B tile 0.5 MB + Qb tile 2 MB + P scratch 1 MB + A tile bn·dap
+  + ΔY block dap·k̃p.  The wrapper falls back to the unfused matmul
+  pair when dap·k̃p or bn·dap exceeds 2^20 (block over 4 MB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .compat import tpu_compiler_params
+from .matmul import _pad2, _pick_block, _round_up, pallas_matmul
+
+
+def _powerpass_kernel(a_ref, b_ref, q_ref, y_ref, p_acc, *, n_k_steps: int):
+    """y += aᵀ(b q); grid (n_t, db_t) with the b-feature dim innermost."""
+    n_step = pl.program_id(0)
+    k_step = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(n_step == 0, k_step == 0))
+    def _init_y():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    @pl.when(k_step == 0)
+    def _init_p():
+        p_acc[...] = jnp.zeros_like(p_acc)
+
+    p_acc[...] += jax.lax.dot_general(
+        b_ref[...], q_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k_step == n_k_steps - 1)
+    def _accumulate():
+        y_ref[...] += jax.lax.dot_general(  # aᵀ p without materializing aᵀ
+            a_ref[...], p_acc[...], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_db", "interpret")
+)
+def power_project_accumulate(
+    a: jax.Array,
+    b: jax.Array,
+    q: jax.Array,
+    *,
+    block_n: int = 256,
+    block_db: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Return ΔY = aᵀ (b @ q) with a and b each read from HBM once.
+
+    a: (n, da), b: (n, db), q: (db, k̃) → (da, k̃) in f32.
+    """
+    n, da = a.shape
+    n2, db = b.shape
+    db2, kt = q.shape
+    assert n == n2, f"row mismatch {n} vs {n2}"
+    assert db == db2, f"contraction mismatch {db} vs {db2}"
+
+    dap = _round_up(da, 128)
+    ktp = _round_up(kt, 128)
+    np_, dbp = _round_up(n, 128), _round_up(db, 128)
+    bn, bdb = _pick_block(np_, block_n), _pick_block(dbp, block_db)
+    # ΔY block (dap·k̃p) or A tile (bn·dap) over ~4 MB f32 → VMEM blows;
+    # fall back to the unfused matmul pair
+    if dap * ktp > 1 << 20 or bn * dap > 1 << 20:
+        p = pallas_matmul(b, q, out_dtype=jnp.float32, interpret=interpret)
+        return pallas_matmul(a, p, transpose_lhs=True, out_dtype=jnp.float32,
+                             interpret=interpret)
+    gn, gk = np_ // bn, dbp // bdb
+    ap = _pad2(a, np_, dap)
+    bp = _pad2(b, np_, dbp)
+    qp = _pad2(q, dbp, ktp)
+
+    out = pl.pallas_call(
+        functools.partial(_powerpass_kernel, n_k_steps=gk),
+        grid=(gn, gk),
+        in_specs=[
+            pl.BlockSpec((bn, dap), lambda i, k: (i, 0)),
+            pl.BlockSpec((bn, bdb), lambda i, k: (i, k)),
+            pl.BlockSpec((bdb, ktp), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((dap, ktp), lambda i, k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((dap, ktp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, ktp), jnp.float32)],
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(ap, bp, qp)
+    return out[:da, :kt]

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import tpu_compiler_params
 from .matmul import _pad2, _pick_block, _round_up, pallas_matmul
 
 
@@ -96,7 +97,7 @@ def projgram(
         ],
         scratch_shapes=[pltpu.VMEM((bn, ktp), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
     )(xp, qp)

@@ -30,7 +30,7 @@ from repro.ckpt import CheckpointManager
 from repro.configs.europarl_cca import config as europarl_config
 from repro.configs.europarl_cca import smoke_config as europarl_smoke
 from repro.core import exact_cca, feasibility_errors
-from repro.core.rcca import RCCAConfig, randomized_cca_iterator
+from repro.core.rcca import DEFAULT_ENGINE, RCCAConfig, randomized_cca_iterator
 from repro.core.rcca_dist import dist_randomized_cca
 from repro.data import PlantedCCAData
 from repro.launch.mesh import make_host_mesh
@@ -40,6 +40,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--mode", default="dist", choices=["dist", "stream"])
+    ap.add_argument("--engine", default=DEFAULT_ENGINE, choices=["kernels", "jnp"],
+                    help="data-pass engine: fused Pallas kernels (default; "
+                         "interpret-mode off-TPU) or the pure-jnp oracle path")
     ap.add_argument("--k", type=int, default=None)
     ap.add_argument("--p", type=int, default=None)
     ap.add_argument("--q", type=int, default=None)
@@ -67,9 +70,11 @@ def main(argv=None):
     if args.mode == "dist":
         A, B = data.materialize()
         mesh = make_host_mesh()
-        print(f"[cca] dist mode, mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}, "
+        print(f"[cca] dist mode, engine={args.engine}, "
+              f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}, "
               f"n={wl.n} da={wl.da} db={wl.db} k={rcca.k} p={rcca.p} q={rcca.q}")
-        res = dist_randomized_cca(jnp.asarray(A), jnp.asarray(B), rcca, key, mesh)
+        res = dist_randomized_cca(jnp.asarray(A), jnp.asarray(B), rcca, key, mesh,
+                                  engine=args.engine)
     else:
         mgr = CheckpointManager(args.ckpt_dir, keep=2) if args.ckpt_dir else None
         state = {"count": 0}
@@ -83,9 +88,10 @@ def main(argv=None):
                     metadata={"pass_idx": pass_idx, "chunk_idx": chunk_idx},
                 )
 
-        print(f"[cca] stream mode, n={wl.n} chunks={data.n_chunks}")
+        print(f"[cca] stream mode, engine={args.engine}, n={wl.n} chunks={data.n_chunks}")
         res = randomized_cca_iterator(
-            lambda: iter(data), wl.da, wl.db, rcca, key, on_pass_end=on_chunk
+            lambda: iter(data), wl.da, wl.db, rcca, key, on_pass_end=on_chunk,
+            engine=args.engine,
         )
         A, B = data.materialize()  # for evaluation only
 

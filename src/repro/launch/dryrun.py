@@ -25,6 +25,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import get_config, model_archs  # noqa: E402
+from repro.kernels.compat import cost_analysis, set_mesh  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch import steps as S  # noqa: E402
 from repro.models import EncDecModel, build_model  # noqa: E402
@@ -138,7 +139,7 @@ def lower_cca_cell(shape_name: str, mesh, *, microbatch: int = 512,
     ns = lambda s: NamedSharding(mesh, s)
     fn = jax.jit(pass_step,
                  in_shardings=(ns(data_spec), ns(data_spec), ns(q_spec), ns(q_spec)))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = fn.lower(a_sds, b_sds, q_a, q_b)
     return lowered, {"kind": f"cca_{kind}"}
 
@@ -184,7 +185,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, remat: bool = True,
             out_shardings=(p_sharding, o_sharding, None),
             donate_argnums=(0, 1),
         )
-        with jax.set_mesh(mesh), sharding_policy(policy):
+        with set_mesh(mesh), sharding_policy(policy):
             lowered = fn.lower(p_shape, opt_shape, batch)
         return lowered, {"kind": "train"}
 
@@ -203,7 +204,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, remat: bool = True,
             donate = (2,)
         fn = jax.jit(step, in_shardings=in_sh,
                      out_shardings=(None, c_sharding), donate_argnums=donate)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = fn.lower(*args)
         return lowered, {"kind": "prefill"}
 
@@ -218,7 +219,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, remat: bool = True,
         out_shardings=(None, c_sharding),
         donate_argnums=(2,),
     )
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = fn.lower(p_shape, batch["tokens"], cache)
     return lowered, {"kind": "decode"}
 
@@ -256,7 +257,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, remat=True,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis(compiled)
     out = {
         "arch": arch, "shape": shape_name, "mesh": mesh_kind,
         "status": "ok", "kind": meta["kind"], "devices": n_dev,

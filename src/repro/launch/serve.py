@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.kernels.compat import set_mesh
 from repro.launch import steps as S
 from repro.launch.mesh import make_host_mesh
 from repro.models import EncDecModel, build_model
@@ -35,7 +36,7 @@ def main(argv=None):
     max_seq = min(cfg.max_seq, args.prompt_len + args.gen + 8)
 
     p_sharding, p_shape = S.param_shardings(model, mesh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = jax.jit(model.init, out_shardings=p_sharding)(jax.random.PRNGKey(0))
 
     rng = np.random.default_rng(0)

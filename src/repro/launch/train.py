@@ -22,6 +22,7 @@ import numpy as np
 from repro.ckpt import CheckpointManager
 from repro.configs import get_config
 from repro.data import SyntheticTokenStream
+from repro.kernels.compat import set_mesh
 from repro.launch import steps as S
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
@@ -52,7 +53,7 @@ def main(argv=None):
     p_sharding, p_shape = S.param_shardings(model, mesh)
     o_sharding = S.opt_shardings(mesh, p_sharding)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = jax.jit(model.init, out_shardings=p_sharding)(jax.random.PRNGKey(0))
         opt_state = jax.jit(adamw_init, out_shardings=o_sharding)(params)
 
@@ -96,7 +97,7 @@ def main(argv=None):
                 rng.standard_normal((args.batch, npz, cfg.d_model), np.float32)
             )
         t0 = time.time()
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             params, opt_state, metrics = jit_step(params, opt_state, batch)
         loss = float(metrics["loss"])
         dt = time.time() - t0

@@ -1,8 +1,16 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+hypothesis is an optional dev dependency (see requirements-dev.txt);
+this module skips cleanly — instead of aborting collection — when it
+is not installed.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import exact_cca, randomized_cca

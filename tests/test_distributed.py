@@ -120,6 +120,7 @@ def test_dryrun_machinery_small_mesh():
     run_with_devices("""
         import jax
         from repro.configs import get_config
+        from repro.kernels.compat import cost_analysis
         from repro.launch import steps as S
         import repro.launch.dryrun as D
 
@@ -134,6 +135,6 @@ def test_dryrun_machinery_small_mesh():
             for shape in ["train_4k", "decode_32k"]:
                 lowered, meta = D.lower_cell(arch, shape, mesh, loss_chunks=4)
                 compiled = lowered.compile()
-                assert compiled.cost_analysis().get("flops", 0) > 0, (arch, shape)
+                assert cost_analysis(compiled).get("flops", 0) > 0, (arch, shape)
         print("OK")
     """, timeout=1800)
