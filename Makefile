@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-quick bench-kernels
+.PHONY: verify verify-quick bench-kernels sweep-blocks
 
 # full tier-1 suite + the interpret-mode kernel-parity subset
 verify:
@@ -13,3 +13,8 @@ verify-quick:
 # engine-comparison BENCH json (results/kernel_bench.json)
 bench-kernels:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.kernel_bench
+
+# autotune sweep for the fused bucketed kernels (powerpass/projgram
+# block+bucket caps) + results/BENCH_bucketed.json
+sweep-blocks:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.sweep_blocks --out results/BENCH_bucketed.json

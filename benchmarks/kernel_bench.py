@@ -6,6 +6,13 @@ Also emits a BENCH json comparing the two data-pass engines (fused
 Pallas kernels vs the pure-jnp oracle path) per chunk op:
 
     PYTHONPATH=src python -m benchmarks.kernel_bench --out results/kernel_bench.json
+
+and, via :func:`bucketed_report` (also driven by
+``benchmarks/sweep_blocks.py`` / ``make sweep-blocks``), a
+BENCH_bucketed json for the column-bucketed fused kernels: timings on a
+past-threshold shape plus the traced pallas_call count of the paper's
+Europarl-scale chunk — the HBM-read regression guard (2 fused calls per
+power-pass chunk, no unfused fallback).
 """
 
 from __future__ import annotations
@@ -116,13 +123,110 @@ def engine_comparison(out_path: str = "results/kernel_bench.json",
     return bench
 
 
+def bucketed_report(out_path: str = "results/BENCH_bucketed.json",
+                    rows: list | None = None) -> dict:
+    """BENCH json for the column-bucketed fused kernels.
+
+    Two parts: (1) run+time the bucketed powerpass/projgram on a
+    past-threshold shape that is still CPU-interpret-feasible, checking
+    parity against the jnp oracle; (2) trace (no compute) the paper's
+    Europarl-scale chunk (8192 × 2^19, k̃ = 2060) and report its
+    pallas_call count — 2 fused calls per power-pass chunk, same as the
+    small-shape fused path, i.e. one HBM read of each view per update.
+    """
+    from repro.configs.europarl_cca import config as europarl_config
+    from repro.kernels import autotune
+    from repro.kernels.compat import count_pallas_calls
+    from repro.kernels.matmul import _round_up
+    from repro.kernels.ops import _default_interpret
+    from repro.kernels.powerpass import power_project_accumulate
+    from repro.kernels.powerpass import resolve_blocks as resolve_pp
+    from repro.kernels.projgram import projgram as projgram_fused
+    from repro.kernels.projgram import resolve_blocks as resolve_pg
+
+    interpret = _default_interpret()  # Mosaic on TPU, interpreter elsewhere
+    key = jax.random.PRNGKey(0)
+    # dap·k̃p = 2^24 ≫ the 2^20 per-block budget → multiple ΔY buckets
+    n, da, db, kt = 512, 1 << 14, 384, 1024
+    a = jax.random.normal(key, (n, da), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, db), jnp.float32)
+    q = jax.random.normal(jax.random.PRNGKey(2), (db, kt), jnp.float32)
+
+    run = lambda: power_project_accumulate(a, b, q, interpret=interpret)
+    got = run()
+    want = ref.matmul_ref(a, ref.matmul_ref(b, q), transpose_lhs=True)
+    err_pp = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    us_pp = time_us(run)
+    # bucket count as the kernel actually resolved it (autotune cache
+    # entries change it — don't hardcode what was timed)
+    np_, dap = _round_up(n, 128), _round_up(da, 128)
+    dbp, ktp = _round_up(db, 128), _round_up(kt, 128)
+    caps = autotune.lookup("powerpass", np_, dbp, ktp, jnp.float32, extra=dap)
+    buckets_pp = dap // resolve_pp(np_, dap, dbp, ktp, *caps)[2]
+
+    # k̃ past the old 1024 projgram limit → multiple C-column buckets
+    ktg = 2176
+    qg = jax.random.normal(jax.random.PRNGKey(3), (db, ktg), jnp.float32)
+    rung = lambda: projgram_fused(b, qg, interpret=interpret)
+    p, c = rung()
+    pw, cw = ref.projgram_ref(b, qg)
+    err_pg = float(jnp.linalg.norm(c - cw) / jnp.linalg.norm(cw))
+    us_pg = time_us(rung)
+    caps = autotune.lookup("projgram", np_, dbp, ktg, jnp.float32)
+    buckets_pg = ktg // resolve_pg(np_, dbp, ktg, *caps)[2]
+
+    wl = europarl_config()
+    skt = wl.rcca.sketch
+    sds = jax.ShapeDtypeStruct
+    jaxpr = jax.make_jaxpr(lambda *xs: ops.power_pass_chunk(*xs, interpret=interpret))(
+        sds((wl.chunk, wl.da), jnp.float32), sds((wl.chunk, wl.db), jnp.float32),
+        sds((wl.da, skt), jnp.float32), sds((wl.db, skt), jnp.float32))
+    europarl_calls = count_pallas_calls(jaxpr)
+    jaxpr_f = jax.make_jaxpr(lambda *xs: ops.final_pass_chunk(*xs, interpret=interpret))(
+        sds((wl.chunk, wl.da), jnp.float32), sds((wl.chunk, wl.db), jnp.float32),
+        sds((wl.da, skt), jnp.float32), sds((wl.db, skt), jnp.float32))
+    europarl_final_calls = count_pallas_calls(jaxpr_f)
+
+    bench = {
+        "bench": "cca_bucketed_fused_kernels",
+        "backend": jax.default_backend(),
+        "interpret": interpret,
+        "results": [
+            {"name": "powerpass_bucketed", "shape": [n, da, db, kt],
+             "us": round(us_pp, 1), "rel_err_vs_jnp": err_pp,
+             "buckets": buckets_pp},
+            {"name": "projgram_bucketed", "shape": [n, db, ktg],
+             "us": round(us_pg, 1), "rel_err_vs_jnp": err_pg,
+             "buckets": buckets_pg},
+            {"name": "power_pass_chunk_europarl_trace",
+             "shape": [wl.chunk, wl.da, wl.db, skt],
+             "pallas_calls": europarl_calls,
+             "fused": europarl_calls == 2},
+            {"name": "final_pass_chunk_europarl_trace",
+             "shape": [wl.chunk, wl.da, wl.db, skt],
+             "pallas_calls": europarl_final_calls,
+             "fused": europarl_final_calls == 3},
+        ],
+    }
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+    print("BENCH " + json.dumps(bench))
+    if rows is not None:
+        rows.append(("bucketed_powerpass_16bkt", us_pp, f"rel_err={err_pp:.2e}"))
+        rows.append(("bucketed_projgram_17bkt", us_pg, f"rel_err={err_pg:.2e}"))
+    return bench
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="results/kernel_bench.json")
+    ap.add_argument("--bucketed-out", default="results/BENCH_bucketed.json")
     args = ap.parse_args(argv)
     rows: list = []
     kernel_benchmarks(rows)
     engine_comparison(args.out, rows)
+    bucketed_report(args.bucketed_out, rows)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,88 @@
+"""Block/bucket-size autotune sweep for the fused data-pass kernels.
+
+    PYTHONPATH=src python -m benchmarks.sweep_blocks
+    make sweep-blocks
+
+Sweeps the autotune candidates for ``op="powerpass"`` and
+``op="projgram"`` (see repro.kernels.autotune) over a set of chunk
+shapes, persists the winning (block_n, block_contraction, bucket) caps
+to the autotune cache, then emits the bucketed-kernel BENCH json
+(``results/BENCH_bucketed.json``) via
+:func:`benchmarks.kernel_bench.bucketed_report`.
+
+The default shapes are CPU-interpret-feasible stand-ins that cross the
+old 2^20 fused-block threshold; ``--europarl`` sweeps the paper's real
+chunk shape (8192 × 2^19, k̃ = 2060) — run that on the TPU target,
+where the timings are Mosaic, not interpreter emulation, and commit the
+resulting cache (see ROADMAP).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import autotune
+
+# (n, da, db, k̃) power-pass chunk shapes; the projgram sweep reuses
+# (n, da, k̃).  Both defaults cross the old single-block VMEM limit
+# while staying small enough for CPU interpret mode — production
+# shapes belong on the TPU target (--europarl).
+DEFAULT_SHAPES = [
+    (256, 4096, 384, 256),
+    (256, 1 << 13, 256, 1024),
+]
+EUROPARL_SHAPE = (8192, 1 << 19, 1 << 19, 2060)
+
+
+def sweep(shapes, iters: int = 2) -> list[dict]:
+    results = []
+    for n, da, db, kt in shapes:
+        # zeros suffice — block timing is data-independent
+        a = jnp.zeros((n, da), jnp.float32)
+        b = jnp.zeros((n, db), jnp.float32)
+        qb = jnp.zeros((db, kt), jnp.float32)
+        qa = jnp.zeros((da, kt), jnp.float32)
+        pp = autotune.autotune_powerpass(a, b, qb, iters=iters)
+        print(f"[sweep] powerpass n={n} da={da} db={db} kt={kt} -> blocks={pp}")
+        pg = autotune.autotune_projgram(a, qa, iters=iters)
+        print(f"[sweep] projgram  n={n} d={da} kt={kt} -> blocks={pg}")
+        if da != db:
+            # the drivers call both view directions — distinct cache keys
+            pp_b = autotune.autotune_powerpass(b, a, qa, iters=iters)
+            print(f"[sweep] powerpass n={n} da={db} db={da} kt={kt} -> blocks={pp_b}")
+            pg_b = autotune.autotune_projgram(b, qb, iters=iters)
+            print(f"[sweep] projgram  n={n} d={db} kt={kt} -> blocks={pg_b}")
+        else:
+            pp_b, pg_b = pp, pg
+        results.append({"shape": [n, da, db, kt],
+                        "powerpass_blocks": list(pp),
+                        "powerpass_blocks_b": list(pp_b),
+                        "projgram_blocks": list(pg),
+                        "projgram_blocks_b": list(pg_b)})
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="results/BENCH_bucketed.json")
+    ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--europarl", action="store_true",
+                    help="sweep the paper's real chunk shape (needs ~TPU-"
+                         "scale memory; the default shapes run anywhere)")
+    args = ap.parse_args(argv)
+
+    shapes = [EUROPARL_SHAPE] if args.europarl else DEFAULT_SHAPES
+    sweep(shapes, iters=args.iters)
+    print(f"[sweep] cache: {autotune.cache_path()} "
+          f"(backend={jax.default_backend()})")
+
+    from .kernel_bench import bucketed_report
+
+    bucketed_report(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,9 +16,11 @@ if [[ "${1:-}" == "--quick" ]]; then
 fi
 
 # interpret-mode kernel parity: every Pallas kernel against its jnp
-# oracle, plus the engine-parity sweep of the data-pass drivers
+# oracle, the engine-parity sweep of the data-pass drivers, and the
+# column-bucketed fused-kernel parity/regression suite
 parity() {
-  python -m pytest -q tests/test_kernels.py tests/test_engine_parity.py "$@"
+  python -m pytest -q tests/test_kernels.py tests/test_engine_parity.py \
+    tests/test_bucketed_kernels.py tests/test_bucketed_properties.py "$@"
 }
 
 if [[ "$quick" == 1 ]]; then

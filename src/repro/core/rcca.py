@@ -167,7 +167,10 @@ def update_power_stats_kernel(
     s: PowerStats, a: jax.Array, b: jax.Array, Qa: jax.Array, Qb: jax.Array
 ) -> PowerStats:
     """Pallas-kernel-backed version of :func:`update_power_stats`
-    (fused MXU matmuls; interpret-mode on CPU)."""
+    (fused MXU matmuls; interpret-mode on CPU).  The fused kernels
+    bucket their output columns over a third grid axis, so this path
+    holds at any feature width — Europarl's da = db = 2^19 included —
+    rather than silently degrading to the unfused matmul pair."""
     from repro.kernels import ops as kops
 
     f32 = jnp.float32

@@ -87,6 +87,14 @@ def power_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
     kernels on the local shards: fully fused project+accumulate when
     features are unsharded (col_axis None — P stays in VMEM), and the
     unfused kernel pair around the per-microbatch P psum otherwise.
+    The fused kernel buckets its ΔY output columns, so the fused path
+    holds for ANY local feature width da_l·k̃ — each local shard's
+    accumulator block is just a sequence of VMEM-sized buckets (the
+    driver collapses a size-1 col_axis to None so trivial model axes
+    take this path too).  Only a genuinely sharded feature axis — which
+    needs the P psum BETWEEN projection and accumulation — still uses
+    the unfused pair; fusing across that collective (psum inside the
+    Pallas pipeline via RDMA) is the remaining ROADMAP item.
 
     §Perf knobs: ``int8_reduce`` — compress the end-of-pass Y psum with
     blockwise int8 (4× fewer bytes on the row axes; randomized range
@@ -184,8 +192,10 @@ def final_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
 
     ``engine="kernels"``: with unsharded features the fused
     project+gram kernel reads each local shard from HBM once per
-    microbatch; with a col_axis the kernel matmul pair brackets the
-    per-microbatch P psum."""
+    C-column bucket per microbatch (C-column bucketing keeps this
+    fused for sketches past k̃p = 1024; single bucket ⇒ one read);
+    with a genuinely sharded col_axis the kernel matmul pair brackets
+    the per-microbatch P psum."""
     nb, mb = _microbatches(a, microbatch)
     da_l, kt = Qa.shape
     db_l = Qb.shape[0]
@@ -273,6 +283,11 @@ def dist_randomized_cca(
     engine = resolve_engine(engine, use_kernels)
     row_axes = tuple(ax for ax in row_axes if ax in mesh.axis_names)
     if col_axis is not None and col_axis not in mesh.axis_names:
+        col_axis = None
+    if col_axis is not None and mesh.shape[col_axis] == 1:
+        # a trivial model axis shards nothing: drop it so the local
+        # passes take the fused bucketed kernels (no mid-update psum)
+        # instead of the unfused pair around a no-op collective.
         col_axis = None
     n, da = A.shape
     db = B.shape[1]

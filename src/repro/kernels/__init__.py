@@ -1,11 +1,16 @@
 """Pallas TPU kernels for the CCA data-pass hot spots.
 
 compat.py    — jax-version shim (compiler params, ambient mesh)
-matmul.py    — MXU-tiled NN/TN matmul (f32 VMEM accumulator)
+matmul.py    — MXU-tiled NN/TN matmul (f32 VMEM accumulator) + the
+               shared per-buffer VMEM budget (VMEM_BLOCK_ELEMS)
 powerpass.py — fused project+accumulate (one HBM read of A and B per
-               range-finder update; 2 pallas_calls per chunk, not 4)
-projgram.py  — fused project+gram (one HBM read of X per final pass)
-autotune.py  — persistent block-size autotuner
+               range-finder update; 2 pallas_calls per chunk, not 4);
+               column-bucketed third grid axis keeps it fused at any
+               da (Europarl d = 2^19 included)
+projgram.py  — fused project+gram (one HBM read of X per final pass);
+               C-column bucketing covers sketches past k̃p = 1024
+autotune.py  — persistent block-size autotuner (matmuls + the fused
+               kernels' block/bucket caps; benchmarks/sweep_blocks.py)
 ops.py       — jitted public wrappers (interpret-mode on CPU)
 ref.py       — pure-jnp oracles
 

@@ -9,6 +9,12 @@ the production tile sizes:
     autotune.autotune_matmul(x, y)     # sweep candidates, persist winner
     pallas_matmul(x, y)                # subsequent calls pick up the caps
 
+The fused bucketed kernels tune the same way (``autotune_powerpass``,
+``autotune_projgram`` — swept in bulk by ``benchmarks/sweep_blocks.py``):
+their cache entries carry (block_n, block_contraction, bucket) caps
+under op="powerpass"/"projgram", and unswept shapes default to
+buckets as large as the shared VMEM budget allows (DEFAULT_OP_CAPS).
+
 Cache location: ``$RCCA_AUTOTUNE_CACHE``, else
 ``~/.cache/repro/pallas_autotune.json``.  A missing or corrupt cache —
 or an unswept shape — falls back to the :data:`DEFAULT_CAPS` heuristic,
@@ -33,6 +39,16 @@ import jax.numpy as jnp
 # caps applied to (block_m, block_n, block_k) when no tuned entry exists
 DEFAULT_CAPS = (512, 512, 512)
 _CANDIDATE_CAPS = (128, 256, 512, 1024)
+
+# Fused bucketed kernels: caps are (block_n, block_contraction,
+# output-column bucket).  The bucket default is intentionally huge so
+# the shared VMEM budget (matmul.VMEM_BLOCK_ELEMS), not the cache,
+# sizes unswept buckets — i.e. buckets default to as-large-as-fits.
+DEFAULT_OP_CAPS = {
+    "powerpass": (256, 512, 1 << 20),
+    "projgram": (256, 512, 1 << 20),
+}
+_BUCKET_CANDIDATE_CAPS = (128, 256, 512, 1024, 2048, 4096, 8192)
 
 _cache: dict | None = None
 _cache_file: str | None = None
@@ -75,29 +91,37 @@ def reset() -> None:
     _cache_file = None
 
 
-def shape_key(op: str, M: int, K: int, N: int, dtype, backend: str | None = None) -> str:
+def shape_key(op: str, M: int, K: int, N: int, dtype, backend: str | None = None,
+              extra: int | None = None) -> str:
+    """``extra`` carries a fourth problem dim for ops whose blocks depend
+    on it (powerpass: the bucketed dap is not among M/K/N)."""
     backend = backend or jax.default_backend()
-    return f"{backend}|{op}|{jnp.dtype(dtype).name}|{M}x{K}x{N}"
+    key = f"{backend}|{op}|{jnp.dtype(dtype).name}|{M}x{K}x{N}"
+    if extra is not None:
+        key += f"x{extra}"
+    return key
 
 
-def lookup(op: str, M: int, K: int, N: int, dtype) -> tuple[int, int, int]:
-    """Tuned (bm, bn, bk) caps for a padded problem, else DEFAULT_CAPS.
-    Malformed entries (hand-edited / stale-format caches) also fall
-    back — a bad cache must never break the engine."""
-    ent = _load().get(shape_key(op, M, K, N, dtype))
+def lookup(op: str, M: int, K: int, N: int, dtype,
+           extra: int | None = None) -> tuple[int, int, int]:
+    """Tuned block caps for a padded problem, else the op's defaults
+    (DEFAULT_OP_CAPS for the fused bucketed kernels, DEFAULT_CAPS for
+    the matmuls).  Malformed entries (hand-edited / stale-format
+    caches) also fall back — a bad cache must never break the engine."""
+    ent = _load().get(shape_key(op, M, K, N, dtype, extra=extra))
     try:
         bm, bn, bk = (int(b) for b in ent["blocks"])
         return bm, bn, bk
     except (TypeError, KeyError, ValueError):
-        return DEFAULT_CAPS
+        return DEFAULT_OP_CAPS.get(op, DEFAULT_CAPS)
 
 
 def record(op, M, K, N, dtype, blocks, us: float | None = None,
-           backend: str | None = None) -> None:
+           backend: str | None = None, extra: int | None = None) -> None:
     entry = {"blocks": [int(b) for b in blocks]}
     if us is not None:
         entry["us"] = round(float(us), 1)
-    _load()[shape_key(op, M, K, N, dtype, backend)] = entry
+    _load()[shape_key(op, M, K, N, dtype, backend, extra=extra)] = entry
     _persist()
 
 
@@ -158,4 +182,101 @@ def autotune_matmul(x: jax.Array, y: jax.Array, *, transpose_lhs: bool = False,
     if best is None:
         return DEFAULT_CAPS
     record(op, Mp, Kp, Np, x.dtype, best, us=best_us)
+    return best
+
+
+def _time_candidates(cands: dict, run, iters: int):
+    """Time each effective-block candidate; (best_blocks, best_us) or
+    (None, inf) when every candidate fails to compile/fit."""
+    best, best_us = None, float("inf")
+    for eff in cands:
+        try:
+            jax.block_until_ready(run(eff))  # compile + warm up
+            t0 = time.perf_counter()
+            out = None
+            for _ in range(iters):
+                out = run(eff)
+            jax.block_until_ready(out)
+        except Exception:
+            continue
+        us = (time.perf_counter() - t0) / iters * 1e6
+        if us < best_us:
+            best, best_us = eff, us
+    return best, best_us
+
+
+def autotune_powerpass(a: jax.Array, b: jax.Array, q: jax.Array, *,
+                       interpret: bool | None = None,
+                       iters: int = 2) -> tuple[int, int, int]:
+    """Sweep (block_n, block_db, block_da-bucket) for one fused
+    project+accumulate shape; persist the winner under op="powerpass".
+
+    Candidate caps resolving to the same effective blocks (via
+    ``powerpass.resolve_blocks``) are swept once; a degenerate shape
+    (no fused path) returns the op defaults and records nothing.
+    """
+    from .matmul import _round_up
+    from .ops import _default_interpret
+    from .powerpass import power_project_accumulate, resolve_blocks
+
+    interpret = _default_interpret() if interpret is None else interpret
+    n, da = a.shape
+    db, kt = q.shape
+    np_, dap = _round_up(n, 128), _round_up(da, 128)
+    dbp, ktp = _round_up(db, 128), _round_up(kt, 128)
+
+    cands = {}
+    for cn, cdb, cda in itertools.product(
+            _CANDIDATE_CAPS, _CANDIDATE_CAPS, _BUCKET_CANDIDATE_CAPS):
+        eff = resolve_blocks(np_, dap, dbp, ktp, cn, cdb, cda)
+        if eff is not None:
+            cands[eff] = None
+    if not cands:
+        return DEFAULT_OP_CAPS["powerpass"]
+
+    def run(eff):
+        bn, bdb, bda = eff
+        return power_project_accumulate(
+            a, b, q, block_n=bn, block_db=bdb, block_da=bda,
+            interpret=interpret)
+
+    best, best_us = _time_candidates(cands, run, iters)
+    if best is None:
+        return DEFAULT_OP_CAPS["powerpass"]
+    record("powerpass", np_, dbp, ktp, a.dtype, best, us=best_us, extra=dap)
+    return best
+
+
+def autotune_projgram(x: jax.Array, q: jax.Array, *,
+                      interpret: bool | None = None,
+                      iters: int = 2) -> tuple[int, int, int]:
+    """Sweep (block_n, block_d, block_c-bucket) for one fused
+    project+gram shape; persist the winner under op="projgram"."""
+    from .matmul import _round_up
+    from .ops import _default_interpret
+    from .projgram import projgram, resolve_blocks
+
+    interpret = _default_interpret() if interpret is None else interpret
+    n, d = x.shape
+    kt = q.shape[1]
+    np_, dp, ktp = _round_up(n, 128), _round_up(d, 128), _round_up(kt, 128)
+
+    cands = {}
+    for cn, cd, cc in itertools.product(
+            _CANDIDATE_CAPS, _CANDIDATE_CAPS, _BUCKET_CANDIDATE_CAPS):
+        eff = resolve_blocks(np_, dp, ktp, cn, cd, cc)
+        if eff is not None:
+            cands[eff] = None
+    if not cands:
+        return DEFAULT_OP_CAPS["projgram"]
+
+    def run(eff):
+        bn, bd, bc = eff
+        return projgram(x, q, block_n=bn, block_d=bd, block_c=bc,
+                        interpret=interpret)
+
+    best, best_us = _time_candidates(cands, run, iters)
+    if best is None:
+        return DEFAULT_OP_CAPS["projgram"]
+    record("projgram", np_, dp, ktp, x.dtype, best, us=best_us)
     return best

@@ -12,6 +12,10 @@ never touch them directly:
   context (jax 0.4.x).
 - ``cost_analysis(compiled)`` — dict (jax ≥ 0.5) vs single-element
   list of dicts (jax 0.4.x).
+- ``count_pallas_calls(jaxpr)`` — recursive jaxpr walk over
+  ``jax.core`` containers (the fused-vs-fallback regression metric
+  used by tests and benchmarks; jaxpr internals move between jax
+  versions, so the walk lives here).
 
 Both helpers resolve the spelling at call time (not import time) so a
 jax upgrade — or a test monkeypatching one spelling — is picked up
@@ -46,6 +50,31 @@ def cost_analysis(compiled) -> dict:
     if isinstance(cost, (list, tuple)):
         cost = cost[0] if cost else {}
     return cost or {}
+
+
+def count_pallas_calls(closed_jaxpr) -> int:
+    """Number of ``pallas_call`` eqns anywhere in a closed jaxpr — the
+    fusion-regression metric the kernel tests and BENCH reports assert
+    on (2 fused calls per power-pass chunk; a fallback to the unfused
+    matmul pair doubles it).  It counts kernel launches, not HBM
+    traffic — bucketed grids re-read inputs within one call."""
+    import jax.core as core
+
+    def walk(jaxpr):
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for val in eqn.params.values():
+                vals = val if isinstance(val, (list, tuple)) else [val]
+                for v in vals:
+                    if isinstance(v, core.ClosedJaxpr):
+                        n += walk(v.jaxpr)
+                    elif isinstance(v, core.Jaxpr):
+                        n += walk(v)
+        return n
+
+    return walk(closed_jaxpr.jaxpr)
 
 
 @contextlib.contextmanager

@@ -75,6 +75,19 @@ def _mm_tn_kernel(x_ref, p_ref, o_ref, acc_ref, *, n_k_steps: int):
 # host-side wrappers (padding + BlockSpec assembly)
 # --------------------------------------------------------------------------
 
+#: Per-buffer VMEM budget, in elements (f32 ⇒ ~4 MB per block).  Single
+#: source of truth for every fused kernel's block sizing: the bucketed
+#: powerpass/projgram wrappers size their output-column buckets so each
+#: VMEM-resident block stays within this budget, and fall back to the
+#: unfused matmul pair only when even a 128-row block cannot fit.
+VMEM_BLOCK_ELEMS = 1 << 20
+
+
+def vmem_row_cap(cols: int) -> int:
+    """Largest multiple-of-128 row count ``r`` with ``r·cols`` inside
+    :data:`VMEM_BLOCK_ELEMS`; 0 when even 128 rows do not fit."""
+    return (VMEM_BLOCK_ELEMS // max(cols, 1)) // 128 * 128
+
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m

@@ -40,8 +40,14 @@ def accumulate_tn(x: jax.Array, p: jax.Array, *, interpret: bool | None = None) 
 def power_pass_chunk(a, b, Qa, Qb, *, interpret: bool | None = None):
     """Fused chunk update of Algorithm 1 lines 7-8:
     ΔYa = Aᵀ(B Qb), ΔYb = Bᵀ(A Qa) — one fused project+accumulate
-    kernel per view (powerpass.py), so A and B are each read from HBM
-    once per update and P never makes an HBM round-trip."""
+    kernel per view (powerpass.py); P never makes an HBM round-trip.
+    The kernel buckets the ΔY output columns over a third grid axis, so
+    this stays 2 pallas_calls per chunk at any da/db — including
+    Europarl-scale d = 2^19 — instead of falling back to the unfused
+    matmul pair.  HBM reads: with a single bucket (dap·k̃p within the
+    VMEM budget) each view is read exactly once per update; with more
+    buckets, B/Q re-reads and the projection recompute scale with the
+    bucket count — see powerpass.py's cost model."""
     interpret = _default_interpret() if interpret is None else interpret
     dYa = power_project_accumulate(a, b, Qb, interpret=interpret)
     dYb = power_project_accumulate(b, a, Qa, interpret=interpret)
@@ -51,8 +57,12 @@ def power_pass_chunk(a, b, Qa, Qb, *, interpret: bool | None = None):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def final_pass_chunk(a, b, Qa, Qb, *, interpret: bool | None = None):
     """Fused chunk update of Algorithm 1 lines 15-17:
-    ΔCa = QaᵀAᵀA Qa, ΔCb = QbᵀBᵀB Qb, ΔF = QaᵀAᵀB Qb — each view's
-    design matrix is read from HBM exactly once (projgram fusion)."""
+    ΔCa = QaᵀAᵀA Qa, ΔCb = QbᵀBᵀB Qb, ΔF = QaᵀAᵀB Qb — projgram
+    fusion: P never round-trips through HBM before the Gram.  C-column
+    bucketing keeps the fused path for sketches past k̃p = 1024 (the
+    paper's Europarl run uses k̃ = 2060); each view is read once per
+    C-column bucket (once total in the single-bucket k̃p ≤ 1024 case —
+    see projgram.py's cost model)."""
     interpret = _default_interpret() if interpret is None else interpret
     pa, Ca = projgram(a, Qa, interpret=interpret)
     pb, Cb = projgram(b, Qb, interpret=interpret)

@@ -10,17 +10,42 @@ emitted directly — the same fusion :mod:`repro.kernels.projgram`
 applies to the final pass.  A full ``power_pass_chunk`` is then two
 ``pallas_call``s, each reading A and B exactly once.
 
-Grid (n_t, db_t), contraction (db) innermost:
+Column-bucketed grid (da_t, n_t, db_t), output buckets outermost and
+the contraction (db) innermost:
 
-- per row tile, P = Σ_db B_tile Qb_tile accumulates in VMEM;
-- on the last db step, ΔY += AᵀP lands in the (dap, k̃p) output block,
-  whose index map is constant, so it stays VMEM-resident across row
-  steps and is written back to HBM once.
+- the ΔY output columns (the da rows of ΔY) are split into buckets of
+  ``bda`` with ``bda·k̃p ≤ VMEM_BLOCK_ELEMS`` (the shared per-buffer
+  budget from :mod:`repro.kernels.matmul`);
+- per bucket, per row tile, ``P = Σ_db B_tile Qb_tile`` accumulates in
+  VMEM scratch; on the last db step ``ΔY_bucket += A_bucketᵀ P``;
+- each bucket's (bda, k̃p) block has an index map constant in (n_t,
+  db_t), so it stays VMEM-resident across all row steps of its bucket
+  and is written back to HBM exactly once.
 
-VMEM budget per grid step (bn=256, bdb=512, f32):
-  B tile 0.5 MB + Qb tile 2 MB + P scratch 1 MB + A tile bn·dap
-  + ΔY block dap·k̃p.  The wrapper falls back to the unfused matmul
-  pair when dap·k̃p or bn·dap exceeds 2^20 (block over 4 MB).
+When ``dap·k̃p`` fits a single block the bucket covers all of ΔY and
+the schedule is identical to the old 2-axis grid — small shapes lose
+nothing.  Arbitrarily large ``da`` (Europarl's d = 2^19) now runs
+fused, and Halko et al. 2011 guarantee blockwise accumulation is
+exact.  COST MODEL (be honest about it): with the bucket axis
+outermost, B and Q are re-read and the projection ``P = B Qb``
+re-accumulated once per bucket, so a chunk costs
+``n_buckets·proj + acc`` FLOPs versus the unfused pair's
+``proj + acc`` (which instead pays the P HBM round-trip).  Bucketed
+fusion therefore wins when ``n_buckets`` is small and/or the
+projection is cheap relative to accumulation (db ≪ da); at Europarl's
+da = db with thousands of buckets the recompute dominates on real
+hardware — sweep on the TPU target (``make sweep-blocks``) before
+trusting defaults there, and see ROADMAP for the P-reuse schedule
+(P staged through HBM scratch once, buckets reloading instead of
+recomputing) that removes the recompute entirely.  The unfused
+matmul-pair fallback remains only for genuinely degenerate shapes —
+``k̃p > VMEM_BLOCK_ELEMS/128`` (= 8192), where even a 128-row block of
+ΔY or P blows the budget and fusion is pointless (k̃ ~ d).
+
+Block caps resolve from the autotune cache (``op="powerpass"``, keyed
+by the padded (n, db, k̃) problem plus the bucketed dap) — see
+:func:`repro.kernels.autotune.autotune_powerpass` and
+``benchmarks/sweep_blocks.py``.
 """
 
 from __future__ import annotations
@@ -32,14 +57,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import autotune
 from .compat import tpu_compiler_params
-from .matmul import _pad2, _pick_block, _round_up, pallas_matmul
+from .matmul import _pad2, _pick_block, _round_up, pallas_matmul, vmem_row_cap
 
 
 def _powerpass_kernel(a_ref, b_ref, q_ref, y_ref, p_acc, *, n_k_steps: int):
-    """y += aᵀ(b q); grid (n_t, db_t) with the b-feature dim innermost."""
-    n_step = pl.program_id(0)
-    k_step = pl.program_id(1)
+    """y_bucket += a_bucketᵀ(b q); grid (da_t, n_t, db_t), db innermost."""
+    n_step = pl.program_id(1)
+    k_step = pl.program_id(2)
 
     @pl.when(jnp.logical_and(n_step == 0, k_step == 0))
     def _init_y():
@@ -62,21 +88,48 @@ def _powerpass_kernel(a_ref, b_ref, q_ref, y_ref, p_acc, *, n_k_steps: int):
         ).astype(y_ref.dtype)
 
 
+def resolve_blocks(
+    np_: int, dap: int, dbp: int, ktp: int,
+    block_n: int, block_db: int, block_da: int,
+) -> tuple[int, int, int] | None:
+    """Effective (bn, bdb, bda) for the bucketed grid, or ``None`` when
+    the shape is degenerate (k̃p > 8192: no 128-row block fits VMEM).
+
+    Every block obeys the shared budget: bda·k̃p (ΔY bucket), bn·k̃p
+    (P scratch), bn·bda (A tile) and bdb·k̃p (Q tile) all stay within
+    ``VMEM_BLOCK_ELEMS``.  A bucket covering all of dap is preferred
+    when it fits, reproducing the unbucketed single-block schedule.
+    """
+    row_cap = vmem_row_cap(ktp)
+    if row_cap < 128:
+        return None
+    cap_da = min(block_da, row_cap)
+    bda = dap if dap <= cap_da else _pick_block(dap, cap_da)
+    bdb = _pick_block(dbp, min(block_db, row_cap))
+    bn = _pick_block(np_, min(block_n, row_cap, vmem_row_cap(bda), vmem_row_cap(bdb)))
+    return bn, bdb, bda
+
+
 @functools.partial(
-    jax.jit, static_argnames=("block_n", "block_db", "interpret")
+    jax.jit, static_argnames=("block_n", "block_db", "block_da", "interpret")
 )
 def power_project_accumulate(
     a: jax.Array,
     b: jax.Array,
     q: jax.Array,
     *,
-    block_n: int = 256,
-    block_db: int = 512,
+    block_n: int | None = None,
+    block_db: int | None = None,
+    block_da: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Return ΔY = aᵀ (b @ q) with a and b each read from HBM once.
 
     a: (n, da), b: (n, db), q: (db, k̃) → (da, k̃) in f32.
+
+    ``block_da`` caps the output-column bucket (rows of ΔY resident in
+    VMEM at once); ``None`` caps resolve from the autotune cache
+    (``op="powerpass"``) and then from the shared VMEM budget.
     """
     n, da = a.shape
     n2, db = b.shape
@@ -87,32 +140,37 @@ def power_project_accumulate(
     dap = _round_up(da, 128)
     ktp = _round_up(kt, 128)
     np_, dbp = _round_up(n, 128), _round_up(db, 128)
-    bn, bdb = _pick_block(np_, block_n), _pick_block(dbp, block_db)
-    # ΔY block (dap·k̃p) or A tile (bn·dap) over ~4 MB f32 → VMEM blows;
-    # fall back to the unfused matmul pair
-    if dap * ktp > 1 << 20 or bn * dap > 1 << 20:
+    if block_n is None or block_db is None or block_da is None:
+        tuned = autotune.lookup("powerpass", np_, dbp, ktp, a.dtype, extra=dap)
+        block_n = tuned[0] if block_n is None else block_n
+        block_db = tuned[1] if block_db is None else block_db
+        block_da = tuned[2] if block_da is None else block_da
+    blocks = resolve_blocks(np_, dap, dbp, ktp, block_n, block_db, block_da)
+    if blocks is None:
+        # k̃p > 8192: even a 128-row block blows VMEM — unfused pair
         p = pallas_matmul(b, q, out_dtype=jnp.float32, interpret=interpret)
         return pallas_matmul(a, p, transpose_lhs=True, out_dtype=jnp.float32,
                              interpret=interpret)
-    gn, gk = np_ // bn, dbp // bdb
+    bn, bdb, bda = blocks
+    gj, gn, gk = dap // bda, np_ // bn, dbp // bdb
     ap = _pad2(a, np_, dap)
     bp = _pad2(b, np_, dbp)
     qp = _pad2(q, dbp, ktp)
 
     out = pl.pallas_call(
         functools.partial(_powerpass_kernel, n_k_steps=gk),
-        grid=(gn, gk),
+        grid=(gj, gn, gk),
         in_specs=[
-            pl.BlockSpec((bn, dap), lambda i, k: (i, 0)),
-            pl.BlockSpec((bn, bdb), lambda i, k: (i, k)),
-            pl.BlockSpec((bdb, ktp), lambda i, k: (k, 0)),
+            pl.BlockSpec((bn, bda), lambda j, i, k: (i, j)),
+            pl.BlockSpec((bn, bdb), lambda j, i, k: (i, k)),
+            pl.BlockSpec((bdb, ktp), lambda j, i, k: (k, 0)),
         ],
-        out_specs=pl.BlockSpec((dap, ktp), lambda i, k: (0, 0)),
+        out_specs=pl.BlockSpec((bda, ktp), lambda j, i, k: (j, 0)),
         out_shape=jax.ShapeDtypeStruct((dap, ktp), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bn, ktp), jnp.float32)],
         interpret=interpret,
         compiler_params=tpu_compiler_params(
-            dimension_semantics=("arbitrary", "arbitrary"),
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
     )(ap, bp, qp)
     return out[:da, :kt]

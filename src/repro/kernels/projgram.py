@@ -7,9 +7,38 @@ and P never makes an HBM round-trip before the Gram — the remaining P
 write-out is only needed for the cross term F (done as a TN matmul on
 the emitted Pa, Pb).
 
-VMEM budget per grid step (bn=256, bd=512, k̃p ≤ 1024, f32):
-  X block 0.5 MB + Q block 2 MB + P scratch 1 MB + C block ≤ 4 MB ≤ 8 MB.
-For k̃p > 1024 the wrapper falls back to the unfused matmul pair.
+Column-bucketed grid (kt_t, n_t, d_t), C-column buckets outermost and
+the contraction (d) innermost:
+
+- the k̃ output columns of C are split into buckets of ``bc`` with
+  ``k̃p·bc ≤ VMEM_BLOCK_ELEMS`` (the shared per-buffer budget from
+  :mod:`repro.kernels.matmul`);
+- per bucket, per row tile, the FULL P tile (bn, k̃p) accumulates in
+  VMEM scratch over the d steps; on the last d step the tile is
+  written out and ``C[:, bucket] += Pᵀ P[:, bucket]`` lands in the
+  (k̃p, bc) block, whose index map is constant in (n_t, d_t) — each
+  bucket's block stays VMEM-resident across row steps and hits HBM
+  once;
+- the P output tile is rewritten (identically) once per bucket so its
+  buffer never carries stale data across bucket revisits.
+
+When ``k̃p² ≤ VMEM_BLOCK_ELEMS`` (k̃p ≤ 1024) a single bucket covers C
+and the schedule matches the old 2-axis grid exactly.  Larger sketches
+(the paper's Europarl run has k̃ = 2060) now stay fused.  COST MODEL:
+with the bucket axis outermost, X is re-read and ``P = XQ``
+re-accumulated once per C-column bucket — ``n_buckets·proj`` FLOPs
+versus the unfused pair's single projection plus P round-trip.  The
+bucket count here is only ``k̃p/bc`` (17 for Europarl, not thousands),
+but for d ≫ k̃ the projection dominates, so sweep the TPU target
+(``make sweep-blocks``) before trusting the fused default at large
+k̃ — and see ROADMAP for the P-reuse schedule that removes the
+recompute.  The unfused matmul-pair fallback remains only for
+degenerate ``k̃p > 8192`` where even a 128-column C block (or a
+128-row P/Q tile) blows the budget.
+
+Block caps resolve from the autotune cache (``op="projgram"``) — see
+:func:`repro.kernels.autotune.autotune_projgram` and
+``benchmarks/sweep_blocks.py``.
 """
 
 from __future__ import annotations
@@ -21,14 +50,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import autotune
 from .compat import tpu_compiler_params
-from .matmul import _pad2, _pick_block, _round_up, pallas_matmul
+from .matmul import _pad2, _pick_block, _round_up, pallas_matmul, vmem_row_cap
 
 
-def _projgram_kernel(x_ref, q_ref, p_ref, c_ref, acc_ref, *, n_d_steps: int):
-    """grid (n_t, d_t), d innermost.  acc_ref : (bn, k̃p) running P tile."""
-    n_step = pl.program_id(0)
-    d_step = pl.program_id(1)
+def _projgram_kernel(x_ref, q_ref, p_ref, c_ref, acc_ref,
+                     *, n_d_steps: int, block_c: int):
+    """grid (kt_t, n_t, d_t), d innermost.  acc_ref: (bn, k̃p) P tile."""
+    c_step = pl.program_id(0)
+    n_step = pl.program_id(1)
+    d_step = pl.program_id(2)
 
     @pl.when(jnp.logical_and(n_step == 0, d_step == 0))
     def _init_c():
@@ -47,49 +79,81 @@ def _projgram_kernel(x_ref, q_ref, p_ref, c_ref, acc_ref, *, n_d_steps: int):
     def _flush():
         p = acc_ref[...]
         p_ref[...] = p.astype(p_ref.dtype)
-        c_ref[...] += jax.lax.dot_general(  # PᵀP on the MXU
-            p, p, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        pj = acc_ref[:, pl.ds(c_step * block_c, block_c)]
+        c_ref[...] += jax.lax.dot_general(  # Pᵀ P[:, bucket] on the MXU
+            p, pj, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
         ).astype(c_ref.dtype)
 
 
+def resolve_blocks(
+    np_: int, dp: int, ktp: int,
+    block_n: int, block_d: int, block_c: int,
+) -> tuple[int, int, int] | None:
+    """Effective (bn, bd, bc) for the bucketed grid, or ``None`` when
+    the shape is degenerate (k̃p > 8192).  bn·k̃p (P tile/scratch),
+    bd·k̃p (Q tile) and k̃p·bc (C bucket) all stay within the shared
+    ``VMEM_BLOCK_ELEMS`` budget; a bucket covering all of k̃p is
+    preferred when it fits (single-block schedule for k̃p ≤ 1024)."""
+    row_cap = vmem_row_cap(ktp)
+    if row_cap < 128:
+        return None
+    cap_c = min(block_c, row_cap)
+    bc = ktp if ktp <= cap_c else _pick_block(ktp, cap_c)
+    bn = _pick_block(np_, min(block_n, row_cap))
+    bd = _pick_block(dp, min(block_d, row_cap))
+    return bn, bd, bc
+
+
 @functools.partial(
-    jax.jit, static_argnames=("block_n", "block_d", "interpret", "p_dtype")
+    jax.jit,
+    static_argnames=("block_n", "block_d", "block_c", "interpret", "p_dtype"),
 )
 def projgram(
     x: jax.Array,
     q: jax.Array,
     *,
-    block_n: int = 256,
-    block_d: int = 512,
+    block_n: int | None = None,
+    block_d: int | None = None,
+    block_c: int | None = None,
     p_dtype=jnp.float32,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """Return (P = x@q, C = PᵀP) with x read once.  x: (n, d), q: (d, k̃)."""
+    """Return (P = x@q, C = PᵀP) with x read once per C-column bucket.
+
+    x: (n, d), q: (d, k̃).  ``block_c`` caps the C-column bucket;
+    ``None`` caps resolve from the autotune cache (``op="projgram"``)
+    and then from the shared VMEM budget.
+    """
     n, d = x.shape
     d2, kt = q.shape
     assert d == d2
-    ktp = _round_up(kt, 128)
-    if ktp > 1024:  # C block would blow VMEM — unfused fallback
+    np_, dp, ktp = _round_up(n, 128), _round_up(d, 128), _round_up(kt, 128)
+    if block_n is None or block_d is None or block_c is None:
+        tuned = autotune.lookup("projgram", np_, dp, ktp, x.dtype)
+        block_n = tuned[0] if block_n is None else block_n
+        block_d = tuned[1] if block_d is None else block_d
+        block_c = tuned[2] if block_c is None else block_c
+    blocks = resolve_blocks(np_, dp, ktp, block_n, block_d, block_c)
+    if blocks is None:
+        # k̃p > 8192: no 128-wide block fits the budget — unfused fallback
         p = pallas_matmul(x, q, out_dtype=p_dtype, interpret=interpret)
         c = pallas_matmul(p, p, transpose_lhs=True, interpret=interpret)
         return p, c
-
-    np_, dp = _round_up(n, 128), _round_up(d, 128)
-    bn, bd = _pick_block(np_, block_n), _pick_block(dp, block_d)
-    gn, gd = np_ // bn, dp // bd
+    bn, bd, bc = blocks
+    gj, gn, gd = ktp // bc, np_ // bn, dp // bd
     xp = _pad2(x, np_, dp)
     qp = _pad2(q, dp, ktp)
 
     p, c = pl.pallas_call(
-        functools.partial(_projgram_kernel, n_d_steps=gd),
-        grid=(gn, gd),
+        functools.partial(_projgram_kernel, n_d_steps=gd, block_c=bc),
+        grid=(gj, gn, gd),
         in_specs=[
-            pl.BlockSpec((bn, bd), lambda i, k: (i, k)),
-            pl.BlockSpec((bd, ktp), lambda i, k: (k, 0)),
+            pl.BlockSpec((bn, bd), lambda j, i, k: (i, k)),
+            pl.BlockSpec((bd, ktp), lambda j, i, k: (k, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((bn, ktp), lambda i, k: (i, 0)),
-            pl.BlockSpec((ktp, ktp), lambda i, k: (0, 0)),
+            pl.BlockSpec((bn, ktp), lambda j, i, k: (i, 0)),
+            pl.BlockSpec((ktp, bc), lambda j, i, k: (0, j)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((np_, ktp), p_dtype),
@@ -98,7 +162,7 @@ def projgram(
         scratch_shapes=[pltpu.VMEM((bn, ktp), jnp.float32)],
         interpret=interpret,
         compiler_params=tpu_compiler_params(
-            dimension_semantics=("arbitrary", "arbitrary"),
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
     )(xp, qp)
     return p[:n, :kt], c[:kt, :kt]

@@ -43,6 +43,11 @@ def main(argv=None):
     ap.add_argument("--engine", default=DEFAULT_ENGINE, choices=["kernels", "jnp"],
                     help="data-pass engine: fused Pallas kernels (default; "
                          "interpret-mode off-TPU) or the pure-jnp oracle path")
+    ap.add_argument("--autotune", action="store_true",
+                    help="before fitting, sweep the fused powerpass/projgram "
+                         "block+bucket sizes for this workload's chunk shape "
+                         "and persist them to the autotune cache (run once "
+                         "per shape on the target hardware)")
     ap.add_argument("--k", type=int, default=None)
     ap.add_argument("--p", type=int, default=None)
     ap.add_argument("--q", type=int, default=None)
@@ -65,6 +70,34 @@ def main(argv=None):
     data = PlantedCCAData(n=wl.n, da=wl.da, db=wl.db, chunk=wl.chunk,
                           rank=max(rcca.k * 2, 16), seed=args.seed)
     key = jax.random.PRNGKey(args.seed)
+
+    if args.autotune and args.engine == "kernels":
+        # Sweep the chunk-shaped fused ops so the data passes pick up
+        # tuned bucket sizes (caps bind at trace time — sweep BEFORE
+        # the first pass compiles).  Zeros suffice: block timing is
+        # data-independent.
+        from repro.kernels import autotune as kernel_autotune
+        c = min(wl.chunk, wl.n)
+        kt = rcca.sketch
+        a0 = jnp.zeros((c, wl.da), jnp.float32)
+        b0 = jnp.zeros((c, wl.db), jnp.float32)
+        qa0 = jnp.zeros((wl.da, kt), jnp.float32)
+        qb0 = jnp.zeros((wl.db, kt), jnp.float32)
+        # both view directions: the power pass calls (a,b,Qb) AND
+        # (b,a,Qa), the final pass projgrams each view — asymmetric
+        # da/db means four distinct cache keys
+        pp = kernel_autotune.autotune_powerpass(a0, b0, qb0)
+        pg = kernel_autotune.autotune_projgram(a0, qa0)
+        if wl.da != wl.db:
+            pp_b = kernel_autotune.autotune_powerpass(b0, a0, qa0)
+            pg_b = kernel_autotune.autotune_projgram(b0, qb0)
+        else:
+            pp_b, pg_b = pp, pg  # same cache keys — one sweep covers both
+        print(f"[cca] autotuned chunk ({c}, da={wl.da}, db={wl.db}, k~={kt}): "
+              f"powerpass blocks a={pp} b={pp_b}, "
+              f"projgram blocks a={pg} b={pg_b} "
+              f"(cache: {kernel_autotune.cache_path()})")
+        del a0, b0, qa0, qb0
 
     t0 = time.time()
     if args.mode == "dist":

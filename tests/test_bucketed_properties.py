@@ -1,0 +1,65 @@
+"""Hypothesis property tests for the column-bucketed fused kernels:
+for random shapes/dtypes, the bucketed and unbucketed schedules of
+``power_project_accumulate`` (and ``projgram``) agree and never raise —
+the target bug class is padding / bucket-boundary off-by-ones.
+
+hypothesis is an optional dev dependency (requirements-dev.txt); this
+module skips cleanly when it is missing, like test_cca_properties.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.powerpass import power_project_accumulate
+from repro.kernels.projgram import projgram
+
+jax.config.update("jax_platform_name", "cpu")
+
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rel(got, want):
+    return float(jnp.linalg.norm(got.astype(jnp.float32) - want)
+                 / jnp.maximum(jnp.linalg.norm(want), 1e-30))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds, n=st.integers(1, 200), da=st.integers(1, 520),
+       db=st.integers(1, 160), kt=st.integers(1, 300), bf16=st.booleans())
+def test_powerpass_bucketed_unbucketed_agree(seed, n, da, db, kt, bf16):
+    """Forcing 128-row ΔY buckets must match the auto (usually
+    single-bucket) schedule bit-for-bit, and both must track the jnp
+    oracle; no shape may raise."""
+    dt = jnp.bfloat16 if bf16 else jnp.float32
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((n, da)), dt)
+    b = jnp.asarray(rng.standard_normal((n, db)), dt)
+    q = jnp.asarray(rng.standard_normal((db, kt)), dt)
+    auto = power_project_accumulate(a, b, q, interpret=True)
+    bucketed = power_project_accumulate(a, b, q, block_da=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(bucketed))
+    want = ref.matmul_ref(a, ref.matmul_ref(b, q), transpose_lhs=True)
+    assert _rel(auto, want) <= (2e-2 if bf16 else 1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds, n=st.integers(1, 200), d=st.integers(1, 300),
+       kt=st.integers(1, 400), bf16=st.booleans())
+def test_projgram_bucketed_unbucketed_agree(seed, n, d, kt, bf16):
+    dt = jnp.bfloat16 if bf16 else jnp.float32
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, d)), dt)
+    q = jnp.asarray(rng.standard_normal((d, kt)), dt)
+    p_auto, c_auto = projgram(x, q, interpret=True)
+    p_b, c_b = projgram(x, q, block_c=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(c_auto), np.asarray(c_b))
+    np.testing.assert_array_equal(np.asarray(p_auto), np.asarray(p_b))
+    pw, cw = ref.projgram_ref(x, q)
+    assert _rel(p_auto, pw) <= (2e-2 if bf16 else 1e-4)
+    assert _rel(c_auto, cw) <= (3e-2 if bf16 else 1e-4)

@@ -50,8 +50,8 @@ def test_matmul_tn(m, k, n, dt):
     (128, 128, 128),
     (300, 260, 96),     # unaligned everything
     (512, 1024, 512),
-    (256, 64, 1024),    # k̃ at the fused-kernel VMEM limit
-    (256, 64, 1100),    # k̃ > 1024 → unfused fallback path
+    (256, 64, 1024),    # k̃ at the single-bucket boundary
+    (256, 64, 1100),    # k̃ > 1024 → bucketed fused path (was: fallback)
 ])
 @pytest.mark.parametrize("dt", DTYPES, ids=["f32", "bf16"])
 def test_projgram(n, d, kt, dt):
