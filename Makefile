@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-quick bench-kernels sweep-blocks
+.PHONY: verify verify-quick bench bench-kernels bench-io sweep-blocks
 
 # full tier-1 suite + the interpret-mode kernel-parity subset
 verify:
@@ -10,9 +10,17 @@ verify:
 verify-quick:
 	bash scripts/verify.sh --quick
 
+# all BENCH jsons (the committed per-PR perf trajectory under results/)
+bench: bench-kernels bench-io
+
 # engine-comparison BENCH json (results/kernel_bench.json)
 bench-kernels:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.kernel_bench
+
+# out-of-core IO-overlap BENCH json: store-backed data pass, prefetch
+# on vs off (results/BENCH_io.json)
+bench-io:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.io_bench --out results/BENCH_io.json
 
 # autotune sweep for the fused bucketed kernels (powerpass/projgram
 # block+bucket caps) + results/BENCH_bucketed.json

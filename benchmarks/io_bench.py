@@ -1,0 +1,181 @@
+"""IO-overlap benchmark: the out-of-core data pass with and without
+async prefetch.
+
+Builds (once, cached under ``--workdir``) an on-disk view store from a
+planted corpus, then runs Algorithm 1's q+1 data passes from disk via
+``repro.store.PassRunner`` at prefetch depth 0 (synchronous reads — the
+paper's naive out-of-core loop) and depth 2 (double-buffered shard read
++ ``jax.device_put`` overlapped with the per-chunk update), reporting
+rows/s and the measured IO stall for each:
+
+    PYTHONPATH=src python -m benchmarks.io_bench --out results/BENCH_io.json
+
+Emits a BENCH json (and is part of ``make bench``) so the per-PR perf
+trajectory records the overlap win.
+
+IO model: the primary comparison throttles chunk reads to
+``--io-gbps`` (default 0.1 GB/s — a contended distributed-FS /
+networked-disk read, the paper's actual out-of-core setting).  The
+throttle is a
+GIL-free wait, so it overlaps with compute exactly the way a blocking
+DFS read does.  Unthrottled local reads are also measured and reported
+under ``local_page_cache`` for the record, but on a small host they
+are pure memcpy out of the page cache: they need a CPU, not a device,
+so there is nothing for the pipeline to hide (on a 2-core container
+the best case is parity minus thread overhead).
+
+The engine defaults to the pure-jnp oracle path off-TPU: this benchmark
+measures the IO pipeline, and interpret-mode Pallas would bury the IO
+signal under kernel emulation overhead.  On a TPU backend the fused
+kernels are the thing being overlapped — use ``--engine kernels``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.core.rcca import RCCAConfig
+from repro.data import PlantedCCAData
+from repro.store import PassRunner, ViewStoreReader, ingest_planted
+from repro.store.format import MANIFEST
+
+
+class ThrottledReader(ViewStoreReader):
+    """Reader that models a bandwidth-limited filesystem: every chunk
+    read is padded to ``bytes / gbps`` wall time with a GIL-releasing
+    sleep, like a blocking remote read."""
+
+    def __init__(self, path: str, gbps: float, **kw):
+        super().__init__(path, **kw)
+        self.gbps = gbps
+
+    def get_chunk(self, idx):
+        t0 = time.perf_counter()
+        a, b = super().get_chunk(idx)
+        budget = (a.nbytes + b.nbytes) / (self.gbps * 1e9)
+        short = budget - (time.perf_counter() - t0)
+        if short > 0:
+            time.sleep(short)
+        return a, b
+
+
+def _ensure_store(workdir: str, *, n: int, d: int, chunk: int) -> str:
+    path = os.path.join(workdir, f"io_bench_store_n{n}_d{d}_c{chunk}")
+    if not os.path.exists(os.path.join(path, MANIFEST)):
+        data = PlantedCCAData(n=n, da=d, db=d, rank=32, seed=7, chunk=chunk)
+        ingest_planted(path, data, rows_per_shard=chunk)
+    return path
+
+
+def _best_pass(path: str, cfg, key, *, engine: str, depth: int,
+               gbps: float, repeat: int) -> dict:
+    """Best-of-``repeat`` run of all passes at one prefetch depth."""
+    best = None
+    for _ in range(repeat):
+        reader = (ThrottledReader(path, gbps, mmap=False) if gbps > 0
+                  else ViewStoreReader(path, mmap=False))
+        # sync_chunks=1: strict bounded pipeline — each chunk's update
+        # completes before the next is consumed, so the comparison
+        # isolates the prefetcher (async dispatch can't queue ahead)
+        io = PassRunner(reader, cfg, engine=engine, prefetch=depth,
+                        sync_chunks=1).fit(key).diagnostics["io"]
+        if best is None or io["rows_per_s"] > best["rows_per_s"]:
+            best = io
+    return best
+
+
+def io_overlap(out_path: str = "results/BENCH_io.json", rows: list | None = None,
+               *, n: int = 16384, d: int = 512, chunk: int = 2048,
+               k: int = 32, p: int = 224, q: int = 1, engine: str | None = None,
+               io_gbps: float = 0.1, repeat: int = 3,
+               workdir: str = "/tmp/repro_io_bench") -> dict:
+    if engine is None:
+        # see module docstring: IO pipeline signal, not kernel emulation
+        engine = "kernels" if jax.default_backend() == "tpu" else "jnp"
+    os.makedirs(workdir, exist_ok=True)
+    path = _ensure_store(workdir, n=n, d=d, chunk=chunk)
+    reader = ViewStoreReader(path)
+    cfg = RCCAConfig(k=k, p=p, q=q, nu=0.01)
+    key = jax.random.PRNGKey(0)
+
+    results = []
+    best = {}
+    for depth in (0, 2):
+        io = _best_pass(path, cfg, key, engine=engine, depth=depth,
+                        gbps=io_gbps, repeat=repeat)
+        best[depth] = io
+        results.append({
+            "name": f"data_pass_prefetch_{depth}",
+            "prefetch_depth": depth,
+            "rows_per_s": io["rows_per_s"],
+            "wall_s": io["wall_s"],
+            "read_s": io["read_s"],
+            "io_stall_s": io["io_stall_s"],
+            "rows": io["rows"],
+            "bytes": io["bytes"],
+        })
+        if rows is not None:
+            rows.append((f"io_pass_prefetch{depth}", io["wall_s"] * 1e6,
+                         f"rows/s={io['rows_per_s']:.0f} stall_s={io['io_stall_s']}"))
+
+    # unthrottled local reads, for the record (see module docstring)
+    local = {
+        depth: _best_pass(path, cfg, key, engine=engine, depth=depth,
+                          gbps=0.0, repeat=repeat)
+        for depth in (0, 2)
+    }
+
+    speedup = best[2]["rows_per_s"] / max(best[0]["rows_per_s"], 1e-9)
+    bench = {
+        "bench": "cca_io_overlap",
+        "backend": jax.default_backend(),
+        "engine": engine,
+        "io_model": {"gbps": io_gbps, "kind": "throttled DFS-like reads"},
+        "shape": {"n": n, "da": d, "db": d, "chunk": chunk,
+                  "k": k, "p": p, "q": q,
+                  "store_bytes": reader.nbytes, "n_chunks": reader.n_chunks},
+        "results": results,
+        "prefetch_speedup": round(speedup, 4),
+        "stall_hidden_s": round(best[0]["io_stall_s"] - best[2]["io_stall_s"], 4),
+        "local_page_cache": {
+            f"prefetch_{depth}": {"rows_per_s": io["rows_per_s"],
+                                  "wall_s": io["wall_s"],
+                                  "io_stall_s": io["io_stall_s"]}
+            for depth, io in local.items()
+        },
+    }
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+    print("BENCH " + json.dumps(bench))
+    return bench
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="results/BENCH_io.json")
+    ap.add_argument("--n", type=int, default=16384)
+    ap.add_argument("--d", type=int, default=512)
+    ap.add_argument("--chunk", type=int, default=2048)
+    ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--p", type=int, default=224)
+    ap.add_argument("--q", type=int, default=1)
+    ap.add_argument("--engine", default=None, choices=["kernels", "jnp"])
+    ap.add_argument("--io-gbps", type=float, default=0.1,
+                    help="modelled filesystem read bandwidth for the "
+                         "primary comparison (0 = unthrottled local)")
+    ap.add_argument("--repeat", type=int, default=3)
+    ap.add_argument("--workdir", default="/tmp/repro_io_bench")
+    args = ap.parse_args(argv)
+    io_overlap(args.out, n=args.n, d=args.d, chunk=args.chunk, k=args.k,
+               p=args.p, q=args.q, engine=args.engine, io_gbps=args.io_gbps,
+               repeat=args.repeat, workdir=args.workdir)
+
+
+if __name__ == "__main__":
+    main()

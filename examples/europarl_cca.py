@@ -12,7 +12,13 @@ Scaled to CPU: n=20k synthetic paired docs, 2^12 hash slots.  Flags let
 you push n/d up on bigger hosts; the same code path is what
 launch/cca_fit.py runs distributed.
 
-    PYTHONPATH=src python examples/europarl_cca.py
+With ``--store DIR`` the hashed views are ingested once into an
+on-disk view store (repro.store) and the fit streams from disk through
+the async-prefetching PassRunner — the paper's out-of-core setting:
+featurize once, then any number of experiments re-read the store
+instead of re-hashing.
+
+    PYTHONPATH=src python examples/europarl_cca.py [--store /tmp/europarl]
 """
 
 import argparse
@@ -49,6 +55,10 @@ def main():
     ap.add_argument("--p", type=int, default=64)        # paper: 910/2000
     ap.add_argument("--q", type=int, default=1)
     ap.add_argument("--chunk", type=int, default=2048)
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="ingest the hashed train views into an on-disk "
+                         "view store and fit from it (out-of-core path "
+                         "with async prefetch)")
     args = ap.parse_args()
 
     print(f"[1/3] hashing {args.n} paired docs into 2×{args.slots} slots...")
@@ -67,9 +77,31 @@ def main():
           f"({args.q + 1} data passes, streamed)...")
     cfg = RCCAConfig(k=args.k, p=args.p, q=args.q, nu=0.01, center=True)
     t0 = time.time()
-    res = randomized_cca_iterator(
-        lambda: chunks(0, n_tr), args.slots, args.slots, cfg, jax.random.PRNGKey(0)
-    )
+    if args.store:
+        import os
+
+        from repro.store import PassRunner, ViewStoreReader, ingest_chunks
+        from repro.store.format import MANIFEST
+
+        if not os.path.exists(os.path.join(args.store, MANIFEST)):
+            reader = ingest_chunks(args.store, chunks(0, n_tr), chunk=args.chunk)
+            print(f"      ingested {reader.n} hashed rows "
+                  f"({reader.nbytes / 1e6:.1f} MB) → {args.store}")
+        else:
+            reader = ViewStoreReader(args.store)
+            if (reader.n, reader.da, reader.db) != (n_tr, args.slots, args.slots):
+                raise SystemExit(
+                    f"view store {args.store} holds n={reader.n} "
+                    f"da={reader.da} db={reader.db} but the flags ask for "
+                    f"n={n_tr} slots={args.slots} — point --store at a "
+                    "fresh directory (or delete it) to re-ingest")
+            print(f"      reusing view store {args.store} (n={reader.n})")
+        res = PassRunner(reader, cfg).fit(jax.random.PRNGKey(0))
+        print(f"      io: {res.diagnostics['io']}")
+    else:
+        res = randomized_cca_iterator(
+            lambda: chunks(0, n_tr), args.slots, args.slots, cfg, jax.random.PRNGKey(0)
+        )
     print(f"      done in {time.time()-t0:.1f}s; sum rho = {float(jnp.sum(res.rho)):.4f}")
 
     # evaluate train/test objective on materialized matrices (small scale)

@@ -159,6 +159,15 @@ class CheckpointManager:
         d = self._step_dir(step)
         return restore_pytree(like_tree, d, shardings=shardings), load_metadata(d)
 
+    def metadata(self, step: Optional[int] = None) -> Optional[dict]:
+        """Checkpoint metadata without loading any arrays — for callers
+        whose restore like-tree depends on it (e.g. the pass cursor,
+        whose stats pytree structure is keyed on the saved pass_idx)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None
+        return load_metadata(self._step_dir(step))
+
     def _gc(self):
         steps = sorted(
             int(d.split("_")[1])

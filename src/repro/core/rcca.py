@@ -18,6 +18,7 @@ and products are corrected as  Āᵀ B̄ = AᵀB − n μa μbᵀ.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Iterable, Iterator, NamedTuple, Optional, Tuple
 
 import jax
@@ -409,6 +410,30 @@ def randomized_cca_streaming(
     return RCCAResult(Xa=Xa, Xb=Xb, rho=S, Qa=Qa, Qb=Qb, diagnostics=diag)
 
 
+def _open_source(source_factory, start_chunk: int):
+    """Instantiate the chunk source for one pass.
+
+    Seek-aware factories opt in by naming their first positional
+    parameter ``start`` (e.g. ``repro.store.PassRunner._source``); they
+    are asked to begin at ``start_chunk`` directly, so a resumed pass
+    never reads the skipped prefix from disk.  Anything else keeps the
+    legacy contract: ``source_factory()`` yields from chunk 0 and the
+    driver filters.  (Opt-in is by name, not arity — a factory that
+    merely happens to take a defaulted positional must not silently
+    receive a chunk index.)
+    """
+    try:
+        params = list(inspect.signature(source_factory).parameters.values())
+        seekable = bool(params) and params[0].name == "start" and \
+            params[0].kind in (params[0].POSITIONAL_ONLY,
+                               params[0].POSITIONAL_OR_KEYWORD)
+    except (TypeError, ValueError):
+        seekable = False
+    if seekable:
+        return source_factory(start_chunk), start_chunk
+    return source_factory(), 0
+
+
 def randomized_cca_iterator(
     source_factory,
     da: int,
@@ -426,7 +451,10 @@ def randomized_cca_iterator(
     jitted; pass state is a plain pytree so the caller can checkpoint it
     between chunks (fault tolerance: resume a killed pass mid-stream via
     ``resume_state`` = {"pass_idx", "chunk_idx", "stats", "Qa", "Qb"}).
-    ``engine`` selects the per-chunk update implementation (see
+    A factory taking a positional ``start`` argument is seekable: each
+    pass opens it at its first needed chunk, so a resume never re-reads
+    the already-folded prefix (``repro.store`` readers/prefetchers use
+    this).  ``engine`` selects the per-chunk update implementation (see
     :func:`randomized_cca_streaming`).
     """
     engine = resolve_engine(engine, use_kernels)
@@ -460,7 +488,8 @@ def randomized_cca_iterator(
                 else init_power_stats(da, db, kt, jnp.float32)
             )
         upd = upd_fin if is_final else upd_pow
-        for chunk_idx, (a, b) in enumerate(source_factory()):
+        source, offset = _open_source(source_factory, start_chunk)
+        for chunk_idx, (a, b) in enumerate(source, start=offset):
             if chunk_idx < start_chunk:
                 continue
             stats = upd(stats, a, b, Qa, Qb)

@@ -11,6 +11,18 @@ q+1 data passes.  Two execution modes:
   and mid-pass CHECKPOINTING (kill/resume fault tolerance for passes
   over data too large for memory).
 
+Data source: synthetic generation by default, or an on-disk view store
+(``repro.store``) via ``--data <store-path>`` — ``--ingest`` writes the
+synthetic corpus there first.  Store-backed stream mode runs the async
+prefetching PassRunner (``--prefetch`` depth, 0 = synchronous reads)
+and resumes a killed run from its pass cursor with ``--resume``:
+
+    python -m repro.launch.cca_fit --smoke --mode stream \
+        --data /tmp/store --ingest --ckpt-dir /tmp/cca
+    # kill it mid-pass, then:
+    python -m repro.launch.cca_fit --smoke --mode stream \
+        --data /tmp/store --ckpt-dir /tmp/cca --resume
+
 Reports the paper's metrics: Σ canonical correlations (train objective),
 feasibility residuals, and — at smoke scale — agreement with the exact
 dense CCA oracle.
@@ -53,6 +65,18 @@ def main(argv=None):
     ap.add_argument("--q", type=int, default=None)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data", default=None, metavar="STORE",
+                    help="path to an on-disk view store (repro.store); "
+                         "stream mode prefetches from it, dist mode "
+                         "materializes it onto the mesh")
+    ap.add_argument("--ingest", action="store_true",
+                    help="write the synthetic workload corpus into --data "
+                         "first (chunked — never materializes n × d)")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="store prefetch pipeline depth (0 = synchronous)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a killed store-backed run from the latest "
+                         "pass cursor in --ckpt-dir")
     args = ap.parse_args(argv)
 
     wl = europarl_smoke() if args.smoke else europarl_config()
@@ -70,6 +94,26 @@ def main(argv=None):
     data = PlantedCCAData(n=wl.n, da=wl.da, db=wl.db, chunk=wl.chunk,
                           rank=max(rcca.k * 2, 16), seed=args.seed)
     key = jax.random.PRNGKey(args.seed)
+
+    reader = None
+    if args.data:
+        from repro.store import ViewStoreReader, ingest_planted
+        from repro.store.format import MANIFEST
+
+        if args.ingest or not os.path.exists(os.path.join(args.data, MANIFEST)):
+            t_ing = time.time()
+            reader = ingest_planted(args.data, data)
+            print(f"[cca] ingested {reader.n} rows "
+                  f"({reader.nbytes / 1e6:.1f} MB, {len(reader.shards)} shards) "
+                  f"→ {args.data} in {time.time() - t_ing:.1f}s")
+        else:
+            reader = ViewStoreReader(args.data)
+            print(f"[cca] view store {args.data}: n={reader.n} "
+                  f"da={reader.da} db={reader.db} chunk={reader.chunk} "
+                  f"({reader.nbytes / 1e6:.1f} MB on disk)")
+        if (reader.n, reader.da, reader.db) != (wl.n, wl.da, wl.db):
+            print(f"[cca] store geometry overrides workload: "
+                  f"n={reader.n} da={reader.da} db={reader.db}")
 
     if args.autotune and args.engine == "kernels":
         # Sweep the chunk-shaped fused ops so the data passes pick up
@@ -101,13 +145,26 @@ def main(argv=None):
 
     t0 = time.time()
     if args.mode == "dist":
-        A, B = data.materialize()
+        A, B = reader.materialize() if reader is not None else data.materialize()
         mesh = make_host_mesh()
         print(f"[cca] dist mode, engine={args.engine}, "
               f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}, "
               f"n={wl.n} da={wl.da} db={wl.db} k={rcca.k} p={rcca.p} q={rcca.q}")
         res = dist_randomized_cca(jnp.asarray(A), jnp.asarray(B), rcca, key, mesh,
                                   engine=args.engine)
+    elif reader is not None:
+        from repro.store import PassRunner
+
+        runner = PassRunner(reader, rcca, engine=args.engine,
+                            prefetch=args.prefetch, ckpt_dir=args.ckpt_dir)
+        print(f"[cca] stream mode (store-backed), engine={args.engine}, "
+              f"prefetch={args.prefetch}, n={reader.n} chunks={reader.n_chunks}")
+        res = runner.fit(key, resume=args.resume)
+        print("[cca] io:", res.diagnostics["io"])
+        # evaluation materializes — only do it for corpora that fit
+        A = B = None
+        if reader.nbytes <= 2 << 30:
+            A, B = reader.materialize()
     else:
         mgr = CheckpointManager(args.ckpt_dir, keep=2) if args.ckpt_dir else None
         state = {"count": 0}
@@ -131,6 +188,11 @@ def main(argv=None):
     dt = time.time() - t0
     rho = np.asarray(res.rho)
     print(f"[cca] done in {dt:.1f}s; sum rho = {rho.sum():.4f}; top-5 rho = {rho[:5]}")
+
+    if A is None:
+        print("[cca] corpus larger than the eval budget — skipping "
+              "materialized feasibility/oracle checks")
+        return
 
     lam_a = float(res.diagnostics["lam_a"])
     lam_b = float(res.diagnostics["lam_b"])

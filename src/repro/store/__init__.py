@@ -1,0 +1,30 @@
+"""Out-of-core paired-view store + async prefetching pass pipeline.
+
+The paper's "suitable for large datasets stored out of core" claim as
+a subsystem: a sharded mmap-.npy on-disk format with a JSON manifest
+(:class:`ViewStoreWriter` / :class:`ViewStoreReader`), double-buffered
+async prefetch overlapping shard reads + H2D transfer with the fused
+Pallas updates (:class:`ChunkPrefetcher`), and a pass orchestrator with
+a checkpointed resume cursor (:class:`PassRunner`).
+"""
+
+from .format import (
+    ShardInfo,
+    ViewStoreReader,
+    ViewStoreWriter,
+    ingest_chunks,
+    ingest_planted,
+)
+from .passes import PassRunner
+from .prefetch import ChunkPrefetcher, prefetched
+
+__all__ = [
+    "ChunkPrefetcher",
+    "PassRunner",
+    "ShardInfo",
+    "ViewStoreReader",
+    "ViewStoreWriter",
+    "ingest_chunks",
+    "ingest_planted",
+    "prefetched",
+]

@@ -1,0 +1,384 @@
+"""Out-of-core paired-view storage: sharded .npy row files + manifest.
+
+The paper's setting is corpora "stored either out of core or on a
+distributed file system"; this module is that store.  Layout of a view
+store directory::
+
+    store/
+      manifest.json           # n, da, db, dtype, chunk, shard list, hashes
+      shard_00000.a.npy       # rows [0, rows_0) of view A
+      shard_00000.b.npy       # rows [0, rows_0) of view B
+      shard_00001.a.npy       # rows [rows_0, rows_0+rows_1) ...
+      ...
+
+Design points:
+
+- shards are plain ``.npy`` so any numpy (or a remote worker with no
+  repro install) can read them; the reader memory-maps, so a chunk read
+  touches only that chunk's pages — corpora far larger than RAM stream
+  at page-cache speed;
+- the manifest is the single source of truth: logical chunking (the
+  unit the data passes consume) is independent of physical sharding
+  (the unit of IO/distribution), so ``chunk`` can be retuned without
+  rewriting shards;
+- every shard carries a sha256 content hash → end-to-end integrity
+  (``ViewStoreReader.verify``) and a store fingerprint that pass
+  checkpoints embed, so a resume against swapped-out data fails loudly;
+- writes publish the manifest atomically (tmp + rename, same discipline
+  as repro.ckpt) — a killed ingest never leaves a readable-but-wrong
+  store;
+- ``row_shard(shard, n_shards)`` gives distributed workers the same
+  strided chunk assignment as ``PlantedCCAData.row_shard``.
+
+Exotic dtypes (bf16/f8) are stored as same-width uint views with the
+logical dtype recorded in the manifest — numpy round-trips them without
+ml_dtypes awareness (the repro.ckpt trick).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+from typing import Iterable, Iterator, Optional, Tuple
+
+import numpy as np
+
+STORE_VERSION = 1
+MANIFEST = "manifest.json"
+
+# numpy can't natively round-trip bf16/f8 — store a same-width uint view
+# and record the logical dtype in the manifest (mirrors repro.ckpt).
+_EXOTIC = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8, "float8_e5m2": np.uint8}
+
+
+def _storage_dtype(logical: str) -> np.dtype:
+    return np.dtype(_EXOTIC.get(logical, logical))
+
+
+def _as_logical(arr: np.ndarray, logical: str) -> np.ndarray:
+    if logical in _EXOTIC:
+        import ml_dtypes
+
+        return arr.view(np.dtype(getattr(ml_dtypes, logical)))
+    return arr
+
+
+def _sha256_file(path: str, bufsize: int = 1 << 20) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            buf = f.read(bufsize)
+            if not buf:
+                break
+            h.update(buf)
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardInfo:
+    """One physical shard: a paired (A, B) row range on disk."""
+
+    index: int
+    rows: int
+    file_a: str
+    file_b: str
+    sha256_a: str
+    sha256_b: str
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "ShardInfo":
+        return ShardInfo(**d)
+
+
+class ViewStoreWriter:
+    """Ingest paired row blocks into a store directory.
+
+    ``append(a, b)`` takes arbitrarily-sized row blocks (they need not
+    align with either chunks or shards); rows are buffered and flushed
+    as ``rows_per_shard``-row shard files.  ``close()`` flushes the tail
+    and atomically publishes the manifest — until then the directory is
+    not a readable store.  Usable as a context manager.
+    """
+
+    def __init__(self, path: str, da: int, db: int, *, dtype="float32",
+                 chunk: int = 1024, rows_per_shard: Optional[int] = None):
+        self.path = path
+        self.da = int(da)
+        self.db = int(db)
+        self.dtype = str(np.dtype(dtype)) if str(dtype) not in _EXOTIC else str(dtype)
+        self.chunk = int(chunk)
+        # default: 8 chunks per shard — large enough for sequential-IO
+        # friendliness, small enough that distributed workers balance
+        self.rows_per_shard = int(rows_per_shard or 8 * self.chunk)
+        if self.rows_per_shard <= 0 or self.chunk <= 0:
+            raise ValueError("chunk and rows_per_shard must be positive")
+        self._tmp = path.rstrip("/") + ".tmp"
+        if os.path.exists(self._tmp):
+            shutil.rmtree(self._tmp)
+        os.makedirs(self._tmp, exist_ok=True)
+        self._shards: list[ShardInfo] = []
+        self._buf_a: list[np.ndarray] = []
+        self._buf_b: list[np.ndarray] = []
+        self._buffered = 0
+        self._n = 0
+        self._closed = False
+
+    # -- ingestion --------------------------------------------------------
+
+    def append(self, a, b) -> None:
+        a = np.asarray(a)
+        b = np.asarray(b)
+        if a.ndim != 2 or b.ndim != 2 or a.shape[0] != b.shape[0]:
+            raise ValueError(f"paired row blocks required, got {a.shape} / {b.shape}")
+        if a.shape[1] != self.da or b.shape[1] != self.db:
+            raise ValueError(
+                f"feature mismatch: got ({a.shape[1]}, {b.shape[1]}), "
+                f"store is (da={self.da}, db={self.db})")
+        self._buf_a.append(a)
+        self._buf_b.append(b)
+        self._buffered += a.shape[0]
+        self._n += a.shape[0]
+        while self._buffered >= self.rows_per_shard:
+            self._flush(self.rows_per_shard)
+
+    def _flush(self, rows: int) -> None:
+        if rows == 0:
+            return
+        a = np.concatenate(self._buf_a) if len(self._buf_a) != 1 else self._buf_a[0]
+        b = np.concatenate(self._buf_b) if len(self._buf_b) != 1 else self._buf_b[0]
+        head_a, tail_a = a[:rows], a[rows:]
+        head_b, tail_b = b[:rows], b[rows:]
+        self._buf_a = [tail_a] if tail_a.shape[0] else []
+        self._buf_b = [tail_b] if tail_b.shape[0] else []
+        self._buffered -= rows
+        idx = len(self._shards)
+        fa = f"shard_{idx:05d}.a.npy"
+        fb = f"shard_{idx:05d}.b.npy"
+        store_dt = _storage_dtype(self.dtype)
+        for fname, block in ((fa, head_a), (fb, head_b)):
+            block = np.ascontiguousarray(block)
+            if self.dtype in _EXOTIC:
+                import ml_dtypes
+
+                block = block.astype(np.dtype(getattr(ml_dtypes, self.dtype)))
+                block = block.view(store_dt)
+            else:
+                block = block.astype(store_dt, copy=False)
+            np.save(os.path.join(self._tmp, fname), block)
+        self._shards.append(ShardInfo(
+            index=idx, rows=rows, file_a=fa, file_b=fb,
+            sha256_a=_sha256_file(os.path.join(self._tmp, fa)),
+            sha256_b=_sha256_file(os.path.join(self._tmp, fb)),
+        ))
+
+    # -- publish ----------------------------------------------------------
+
+    def close(self) -> dict:
+        if self._closed:
+            raise RuntimeError("writer already closed")
+        self._flush(self._buffered)
+        manifest = {
+            "version": STORE_VERSION,
+            "n": self._n,
+            "da": self.da,
+            "db": self.db,
+            "dtype": self.dtype,
+            "chunk": self.chunk,
+            "shards": [s.to_json() for s in self._shards],
+        }
+        with open(os.path.join(self._tmp, MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=1)
+        # atomic publish, also when replacing: move the old store aside
+        # BEFORE the rename so a kill can never leave a directory whose
+        # manifest survives with its shards half-deleted
+        old = self.path.rstrip("/") + ".old"
+        if os.path.exists(self.path):
+            if os.path.exists(old):
+                shutil.rmtree(old)
+            os.rename(self.path, old)
+        os.rename(self._tmp, self.path)
+        shutil.rmtree(old, ignore_errors=True)
+        self._closed = True
+        return manifest
+
+    def __enter__(self) -> "ViewStoreWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.close()
+        elif os.path.exists(self._tmp):  # failed ingest leaves no debris
+            shutil.rmtree(self._tmp, ignore_errors=True)
+
+
+def ingest_chunks(path: str, chunks: Iterable[Tuple[np.ndarray, np.ndarray]],
+                  *, chunk: int, dtype="float32",
+                  rows_per_shard: Optional[int] = None) -> "ViewStoreReader":
+    """Write any (a, b) row-block iterator — ``PlantedCCAData``, hashed
+    featurized text, a ``core.harvest`` activation stream — to ``path``
+    and return a reader over it.  Feature widths are taken from the
+    first block."""
+    it = iter(chunks)
+    try:
+        a0, b0 = next(it)
+    except StopIteration:
+        raise ValueError("cannot ingest an empty chunk stream")
+    a0 = np.asarray(a0)
+    b0 = np.asarray(b0)
+    with ViewStoreWriter(path, a0.shape[1], b0.shape[1], dtype=dtype,
+                         chunk=chunk, rows_per_shard=rows_per_shard) as w:
+        w.append(a0, b0)
+        for a, b in it:
+            w.append(a, b)
+    return ViewStoreReader(path)
+
+
+def ingest_planted(path: str, data, *, rows_per_shard: Optional[int] = None,
+                   dtype="float32") -> "ViewStoreReader":
+    """Ingest a :class:`repro.data.PlantedCCAData` corpus chunk-by-chunk
+    (never materializes n × d — this is how larger-than-RAM test/bench
+    corpora reach disk)."""
+    return ingest_chunks(path, iter(data), chunk=data.chunk,
+                         rows_per_shard=rows_per_shard, dtype=dtype)
+
+
+class ViewStoreReader:
+    """Random- and sequential-access reader over a published store.
+
+    Shard files are opened as memory maps once and sliced per chunk, so
+    ``get_chunk`` is O(chunk bytes) regardless of n: the OS pages in
+    only what a pass actually touches.  Chunks are the logical unit the
+    data passes consume — chunk ``i`` covers rows
+    ``[i·chunk, min(n, (i+1)·chunk))`` and may span shard boundaries.
+    """
+
+    def __init__(self, path: str, *, mmap: bool = True):
+        self.path = path
+        mpath = os.path.join(path, MANIFEST)
+        if not os.path.exists(mpath):
+            raise FileNotFoundError(
+                f"{path!r} is not a view store (no {MANIFEST}); "
+                "was the writer closed?")
+        with open(mpath) as f:
+            self.manifest = json.load(f)
+        if self.manifest.get("version") != STORE_VERSION:
+            raise ValueError(f"unsupported store version {self.manifest.get('version')}")
+        self.n = int(self.manifest["n"])
+        self.da = int(self.manifest["da"])
+        self.db = int(self.manifest["db"])
+        self.dtype = self.manifest["dtype"]
+        self.chunk = int(self.manifest["chunk"])
+        self.shards = [ShardInfo.from_json(s) for s in self.manifest["shards"]]
+        self._mmap_mode = "r" if mmap else None
+        # cumulative row offsets: shard i covers [starts[i], starts[i+1])
+        self._starts = np.concatenate(
+            [[0], np.cumsum([s.rows for s in self.shards])]).astype(np.int64)
+        if self.n != int(self._starts[-1]):
+            raise ValueError(
+                f"manifest row count {self.n} != shard total {int(self._starts[-1])}")
+        self._maps: dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+
+    # -- geometry ---------------------------------------------------------
+
+    @property
+    def n_chunks(self) -> int:
+        return (self.n + self.chunk - 1) // self.chunk
+
+    @property
+    def nbytes(self) -> int:
+        """Logical size of both views — what materializing would cost."""
+        return self.n * (self.da + self.db) * _storage_dtype(self.dtype).itemsize
+
+    def fingerprint(self) -> str:
+        """Content identity of the store (hash over shard hashes +
+        geometry) — pass checkpoints embed it so a resume against
+        different data fails instead of silently mixing corpora."""
+        h = hashlib.sha256()
+        h.update(f"{self.n}:{self.da}:{self.db}:{self.dtype}:{self.chunk}".encode())
+        for s in self.shards:
+            h.update(s.sha256_a.encode())
+            h.update(s.sha256_b.encode())
+        return h.hexdigest()
+
+    # -- access -----------------------------------------------------------
+
+    def _shard_arrays(self, idx: int) -> Tuple[np.ndarray, np.ndarray]:
+        if idx not in self._maps:
+            s = self.shards[idx]
+            a = np.load(os.path.join(self.path, s.file_a), mmap_mode=self._mmap_mode)
+            b = np.load(os.path.join(self.path, s.file_b), mmap_mode=self._mmap_mode)
+            if self._mmap_mode is None:
+                # eager reads materialize the shard — keep only the one
+                # being streamed, or an unbounded pass would rebuild the
+                # whole corpus in this cache (mmaps are just mappings,
+                # caching those is free)
+                self._maps.clear()
+            self._maps[idx] = (a, b)
+        return self._maps[idx]
+
+    def _read_rows(self, lo: int, hi: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Rows [lo, hi) of both views as regular (non-mmap) arrays."""
+        s_lo = int(np.searchsorted(self._starts, lo, side="right") - 1)
+        parts_a, parts_b = [], []
+        i = s_lo
+        while lo < hi:
+            a, b = self._shard_arrays(i)
+            base = int(self._starts[i])
+            take = min(hi, int(self._starts[i + 1])) - lo
+            parts_a.append(a[lo - base: lo - base + take])
+            parts_b.append(b[lo - base: lo - base + take])
+            lo += take
+            i += 1
+        if len(parts_a) == 1:  # common case: chunk within one shard
+            a, b = np.asarray(parts_a[0]), np.asarray(parts_b[0])
+        else:
+            a, b = np.concatenate(parts_a), np.concatenate(parts_b)
+        return _as_logical(a, self.dtype), _as_logical(b, self.dtype)
+
+    def get_chunk(self, idx: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Random access by chunk index (replay / resume / shuffle)."""
+        if not 0 <= idx < self.n_chunks:
+            raise IndexError(f"chunk {idx} out of range [0, {self.n_chunks})")
+        lo = idx * self.chunk
+        return self._read_rows(lo, min(lo + self.chunk, self.n))
+
+    def iter_chunks(self, start: int = 0) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        """Sequential chunk stream; ``start`` seeks (resume mid-pass
+        without touching the skipped chunks' pages)."""
+        for i in range(start, self.n_chunks):
+            yield self.get_chunk(i)
+
+    def __iter__(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        return self.iter_chunks()
+
+    def row_shard(self, shard: int, n_shards: int) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        """Strided chunk assignment for distributed workers — same
+        contract as ``PlantedCCAData.row_shard`` (worker w streams
+        chunks w, w + n_shards, ...); the union over workers is an exact
+        partition of the corpus."""
+        for i in range(shard, self.n_chunks, n_shards):
+            yield self.get_chunk(i)
+
+    def materialize(self) -> Tuple[np.ndarray, np.ndarray]:
+        """All rows in memory — only for corpora known to fit (the dist
+        driver's resident mode, small-scale evaluation)."""
+        return self._read_rows(0, self.n)
+
+    # -- integrity --------------------------------------------------------
+
+    def verify(self) -> None:
+        """Re-hash every shard against the manifest; raises on mismatch
+        (bit rot, truncated copy, tampering)."""
+        for s in self.shards:
+            for fname, want in ((s.file_a, s.sha256_a), (s.file_b, s.sha256_b)):
+                got = _sha256_file(os.path.join(self.path, fname))
+                if got != want:
+                    raise ValueError(
+                        f"shard {fname} content hash mismatch: "
+                        f"manifest {want[:12]}…, file {got[:12]}…")

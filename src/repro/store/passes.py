@@ -1,0 +1,230 @@
+"""Pass orchestration: drive the CCA data passes from an on-disk store.
+
+``PassRunner`` is the glue between the three existing layers — the
+store (:mod:`repro.store.format`), the algorithm's pass drivers
+(:mod:`repro.core.rcca` / :mod:`repro.core.rcca_dist`) and fault
+tolerance (:mod:`repro.ckpt`):
+
+- every pass streams ``ViewStoreReader.iter_chunks`` through a
+  double-buffered :class:`~repro.store.prefetch.ChunkPrefetcher`, so
+  the next chunk's shard read + ``jax.device_put`` overlap the current
+  chunk's fused Pallas update;
+- a persistent PASS CURSOR — ``{stats, Qa, Qb}`` plus
+  ``{pass_idx, next_chunk}`` metadata — is checkpointed through
+  ``repro.ckpt.CheckpointManager`` every ``ckpt_every`` chunks.  A
+  killed pass resumes from the manifest + latest cursor alone
+  (``fit(..., resume=True)``), seeking the store to ``next_chunk``
+  without re-reading the folded prefix, and reproduces the
+  uninterrupted result BIT-IDENTICALLY (same update sequence on the
+  same f32 accumulators — exercised by tests/test_store_resume.py);
+- per-pass diagnostics (rows/s, producer read seconds, consumer IO
+  stall seconds) land in ``RCCAResult.diagnostics["io"]`` — the same
+  numbers the IO-overlap benchmark reports.
+
+The cursor embeds the store fingerprint and the engine, so resuming
+against swapped data or a different engine fails loudly instead of
+silently mixing accumulator histories.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.core.rcca import (
+    DEFAULT_ENGINE,
+    RCCAConfig,
+    RCCAResult,
+    init_final_stats,
+    init_power_stats,
+    randomized_cca_iterator,
+    resolve_engine,
+)
+
+from .format import ViewStoreReader
+from .prefetch import ChunkPrefetcher, prefetched
+
+
+class PassRunner:
+    """Run Algorithm 1's q+1 data passes over a view store.
+
+    Parameters
+    ----------
+    reader:      an open :class:`ViewStoreReader` (or a path to one).
+    cfg:         the :class:`RCCAConfig` hyper-parameters.
+    engine:      per-chunk update implementation ("kernels" | "jnp").
+    prefetch:    pipeline depth; 0 disables prefetching (synchronous
+                 reads — the benchmark baseline), 2 = double buffering.
+    ckpt_dir:    where pass cursors go; ``None`` disables checkpointing.
+    ckpt_every:  cursor save period, in chunks.
+    sync_chunks: bound on in-flight chunk updates.  jax dispatch is
+                 async: without a bound, a pass would enqueue every
+                 chunk's update — and pin every chunk's host/device
+                 buffers — before any completes, which is exactly the
+                 unbounded residency out-of-core must avoid.  Every
+                 ``sync_chunks`` chunks the runner blocks on the
+                 accumulators, capping live chunks at
+                 ``sync_chunks + prefetch``.  1 = strict per-chunk
+                 pipeline; 0 disables the bound (small corpora only).
+    """
+
+    def __init__(self, reader, cfg: RCCAConfig, *, engine: str = DEFAULT_ENGINE,
+                 prefetch: int = 2, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 8, keep: int = 2, sync_chunks: int = 4):
+        self.reader = reader if isinstance(reader, ViewStoreReader) else ViewStoreReader(reader)
+        self.cfg = cfg
+        self.engine = resolve_engine(engine)
+        self.prefetch = int(prefetch)
+        self.sync_chunks = int(sync_chunks)
+        self.ckpt_every = int(ckpt_every)
+        self.mgr = CheckpointManager(ckpt_dir, keep=keep) if ckpt_dir else None
+        self._live: Optional[ChunkPrefetcher] = None
+        self._io = {"chunks": 0, "rows": 0, "bytes": 0, "read_s": 0.0,
+                    "io_stall_s": 0.0}
+
+    # -- chunk source (one instantiation per pass) ------------------------
+
+    def _source(self, start: int):
+        """Seekable factory handed to ``randomized_cca_iterator`` — the
+        positional ``start`` makes resume seek instead of replay."""
+        self._harvest_live()
+        self._live = prefetched(self.reader.iter_chunks(start), depth=self.prefetch)
+        return self._live
+
+    def _harvest_live(self) -> None:
+        if self._live is not None:
+            for k, v in self._live.stats().items():
+                self._io[k] = self._io.get(k, 0) + v
+            self._live.close()
+            self._live = None
+
+    # -- cursor persistence ----------------------------------------------
+
+    def _algo_meta(self) -> dict:
+        c = self.cfg
+        return {"k": c.k, "p": c.p, "q": c.q, "center": c.center,
+                "nu": c.nu, "lam_a": c.lam_a, "lam_b": c.lam_b,
+                "dtype": str(jnp.dtype(c.dtype))}
+
+    def _save_cursor(self, pass_idx: int, chunk_idx: int, stats, Qa, Qb) -> None:
+        step = pass_idx * 1_000_000 + chunk_idx
+        self.mgr.save(
+            step,
+            {"stats": stats, "Qa": Qa, "Qb": Qb},
+            metadata={
+                "pass_idx": pass_idx,
+                "next_chunk": chunk_idx + 1,  # stats already include chunk_idx
+                "engine": self.engine,
+                "fingerprint": self.reader.fingerprint(),
+                "algo": self._algo_meta(),
+            },
+        )
+
+    def _cursor_like(self, pass_idx: int) -> dict:
+        r, kt = self.reader, self.cfg.sketch
+        stats = (
+            init_final_stats(kt, r.da, r.db, jnp.float32)
+            if pass_idx == self.cfg.q
+            else init_power_stats(r.da, r.db, kt, jnp.float32)
+        )
+        z = jnp.zeros
+        return {"stats": stats, "Qa": z((r.da, kt), self.cfg.dtype),
+                "Qb": z((r.db, kt), self.cfg.dtype)}
+
+    def restore_cursor(self) -> Optional[dict]:
+        """Latest pass cursor as ``randomized_cca_iterator`` resume
+        state, validated against this store/config/engine."""
+        if self.mgr is None:
+            return None
+        # two-phase: read metadata first (it decides the stats pytree
+        # structure), then restore against the right like-tree
+        step = self.mgr.latest_step()
+        meta = self.mgr.metadata(step)
+        if meta is None:
+            return None
+        if meta["fingerprint"] != self.reader.fingerprint():
+            raise ValueError(
+                "pass cursor was written against a different store "
+                f"(fingerprint {meta['fingerprint'][:12]}… != "
+                f"{self.reader.fingerprint()[:12]}…)")
+        if meta["engine"] != self.engine:
+            raise ValueError(
+                f"pass cursor engine {meta['engine']!r} != runner engine "
+                f"{self.engine!r} — bit-identical resume holds per engine")
+        if meta["algo"] != self._algo_meta():
+            raise ValueError(
+                f"pass cursor hyper-parameters {meta['algo']} != runner "
+                f"config {self._algo_meta()}")
+        tree, _ = self.mgr.restore(self._cursor_like(int(meta["pass_idx"])),
+                                   step=step)
+        return {
+            "pass_idx": int(meta["pass_idx"]),
+            "chunk_idx": int(meta["next_chunk"]),
+            "stats": tree["stats"],
+            "Qa": tree["Qa"],
+            "Qb": tree["Qb"],
+        }
+
+    # -- driving ----------------------------------------------------------
+
+    def fit(self, key: jax.Array, *, resume: bool = False,
+            on_chunk=None) -> RCCAResult:
+        """All q+1 passes → :class:`RCCAResult`.
+
+        ``resume=True`` continues from the latest cursor in ``ckpt_dir``
+        (no-op if none exists).  ``on_chunk(pass_idx, chunk_idx, stats,
+        Qa, Qb)`` is an optional extra per-chunk callback — it runs
+        BEFORE the periodic cursor save, so a test/driver can inject a
+        kill and the last published cursor stays consistent.
+        """
+        resume_state = self.restore_cursor() if resume else None
+        r = self.reader
+        # per-fit diagnostics: a reused runner must not carry the
+        # previous fit's byte/row counts into this fit's rows/s
+        self._io = {k: 0.0 if isinstance(v, float) else 0
+                    for k, v in self._io.items()}
+        counters = {"chunks": 0, "rows": 0}
+        t0 = time.perf_counter()
+
+        def cb(pass_idx, chunk_idx, stats, Qa, Qb):
+            counters["chunks"] += 1
+            if self.sync_chunks and counters["chunks"] % self.sync_chunks == 0:
+                jax.block_until_ready(stats)  # bound in-flight residency
+            if on_chunk is not None:
+                on_chunk(pass_idx, chunk_idx, stats, Qa, Qb)
+            if self.mgr is not None and (chunk_idx + 1) % self.ckpt_every == 0:
+                self._save_cursor(pass_idx, chunk_idx, stats, Qa, Qb)
+
+        try:
+            res = randomized_cca_iterator(
+                self._source, r.da, r.db, self.cfg, key,
+                resume_state=resume_state, on_pass_end=cb, engine=self.engine,
+            )
+        finally:
+            self._harvest_live()
+        wall = time.perf_counter() - t0
+
+        rows = self._io["rows"]
+        res.diagnostics["io"] = {
+            **{k: round(v, 4) if isinstance(v, float) else v
+               for k, v in self._io.items()},
+            "prefetch_depth": self.prefetch,
+            "wall_s": round(wall, 4),
+            "rows_per_s": round(rows / wall, 2) if wall > 0 else float("inf"),
+            "resumed": resume_state is not None,
+        }
+        return res
+
+    def fit_dist(self, key: jax.Array, mesh, **dist_kwargs) -> RCCAResult:
+        """Resident-mode escape hatch: materialize the store (it must
+        fit in device memory) and run the shard_map driver on it."""
+        from repro.core.rcca_dist import dist_randomized_cca
+
+        A, B = self.reader.materialize()
+        return dist_randomized_cca(
+            jnp.asarray(A), jnp.asarray(B), self.cfg, key, mesh,
+            engine=self.engine, **dist_kwargs)
