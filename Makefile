@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-quick bench bench-kernels bench-io sweep-blocks
+.PHONY: verify verify-quick verify-cluster bench bench-kernels bench-io bench-cluster sweep-blocks
 
 # full tier-1 suite + the interpret-mode kernel-parity subset
 verify:
@@ -10,8 +10,12 @@ verify:
 verify-quick:
 	bash scripts/verify.sh --quick
 
+# only the multi-worker cluster + store suites
+verify-cluster:
+	bash scripts/verify.sh --cluster
+
 # all BENCH jsons (the committed per-PR perf trajectory under results/)
-bench: bench-kernels bench-io
+bench: bench-kernels bench-io bench-cluster
 
 # engine-comparison BENCH json (results/kernel_bench.json)
 bench-kernels:
@@ -21,6 +25,11 @@ bench-kernels:
 # on vs off (results/BENCH_io.json)
 bench-io:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.io_bench --out results/BENCH_io.json
+
+# multi-worker coordinator scaling: rows/s vs workers {1,2,4} + merge
+# overhead (results/BENCH_cluster.json)
+bench-cluster:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.cluster_bench --out results/BENCH_cluster.json
 
 # autotune sweep for the fused bucketed kernels (powerpass/projgram
 # block+bucket caps) + results/BENCH_bucketed.json

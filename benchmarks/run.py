@@ -15,11 +15,12 @@ import sys
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: fig1,fig2a,table2b,fig3,kernels,io,roofline")
+                    help="comma-separated subset: fig1,fig2a,table2b,fig3,"
+                         "kernels,io,cluster,roofline")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
     args = ap.parse_args(argv)
 
-    from . import io_bench, kernel_bench, paper_figures, roofline
+    from . import cluster_bench, io_bench, kernel_bench, paper_figures, roofline
 
     suites = {
         "fig1": paper_figures.fig1_spectrum,
@@ -28,6 +29,7 @@ def main(argv=None) -> None:
         "fig3": paper_figures.fig3_nu_sweep,
         "kernels": kernel_bench.kernel_benchmarks,
         "io": lambda rows: io_bench.io_overlap(rows=rows),
+        "cluster": lambda rows: cluster_bench.cluster_scaling(rows=rows),
         "roofline": lambda rows: roofline.roofline_rows(rows, args.dryrun_dir),
     }
     wanted = list(suites) if args.only is None else args.only.split(",")

@@ -1,17 +1,21 @@
 #!/usr/bin/env bash
 # Tier-1 verification entry point (also: `make verify`).
 #
-#   scripts/verify.sh          # full tier-1 suite + kernel-parity subset
-#   scripts/verify.sh --quick  # only the interpret-mode kernel-parity subset
+#   scripts/verify.sh            # full tier-1 suite + kernel-parity subset
+#   scripts/verify.sh --quick    # only the interpret-mode kernel-parity subset
+#   scripts/verify.sh --cluster  # only the multi-worker cluster + store suites
 #
 # Extra args after the mode flag are forwarded to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-quick=0
+mode=full
 if [[ "${1:-}" == "--quick" ]]; then
-  quick=1
+  mode=quick
+  shift
+elif [[ "${1:-}" == "--cluster" ]]; then
+  mode=cluster
   shift
 fi
 
@@ -23,9 +27,22 @@ parity() {
     tests/test_bucketed_kernels.py tests/test_bucketed_properties.py "$@"
 }
 
-if [[ "$quick" == 1 ]]; then
-  parity "$@"
-else
-  python -m pytest -x -q "$@"
-  parity
-fi
+# multi-worker map/combine/reduce: coordinator merge parity (bitwise vs
+# single-process), kill/re-dispatch fault tolerance, and the store layer
+# it is built on (URI schemes incl. the mem:// fake, row_shard seek +
+# group striping, prefetch auto-tune, cursor resume)
+cluster() {
+  python -m pytest -q tests/test_cluster.py tests/test_cluster_failures.py \
+    tests/test_store.py tests/test_store_resume.py "$@"
+}
+
+case "$mode" in
+  quick)   parity "$@" ;;
+  cluster) cluster "$@" ;;
+  *)
+    # the full pytest run already covers the cluster suite; parity is
+    # re-run standalone to keep the kernel gate loud and isolated
+    python -m pytest -x -q "$@"
+    parity
+    ;;
+esac

@@ -1,5 +1,12 @@
 """Checkpointing substrate: sharded save/restore with elastic remesh."""
 
-from .checkpoint import CheckpointManager, restore_pytree, save_pytree
+from .checkpoint import (
+    CheckpointManager,
+    load_flat,
+    load_metadata,
+    restore_pytree,
+    save_pytree,
+)
 
-__all__ = ["CheckpointManager", "restore_pytree", "save_pytree"]
+__all__ = ["CheckpointManager", "load_flat", "load_metadata",
+           "restore_pytree", "save_pytree"]

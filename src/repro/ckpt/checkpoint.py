@@ -109,6 +109,22 @@ def load_metadata(directory: str) -> dict:
         return json.load(f)["metadata"]
 
 
+def load_flat(directory: str) -> tuple[dict, dict]:
+    """Load a checkpoint as a flat ``key → numpy array`` dict plus its
+    metadata, without a like-tree.  For consumers whose leaf names are
+    a fixed schema (e.g. repro.cluster partials: PowerStats/FinalStats
+    fields) — they rebuild their own container from the keys."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    out = {}
+    for key, info in manifest["leaves"].items():
+        arr = np.load(os.path.join(directory, info["file"]))
+        if info["dtype"] in _EXOTIC:
+            arr = arr.view(np.dtype(getattr(ml_dtypes, info["dtype"])))
+        out[key] = arr
+    return out, manifest["metadata"]
+
+
 class CheckpointManager:
     """Step-indexed checkpoints with retention + background writes."""
 

@@ -1,0 +1,18 @@
+"""Multi-worker map/combine/reduce execution of the two-pass algorithm.
+
+The paper's Hadoop-suitability claim as a process-level subsystem:
+
+- :mod:`repro.cluster.partials` — mergeable sufficient statistics as a
+  versioned on-disk format (the map output / combine input);
+- :mod:`repro.cluster.worker` — one shard of one pass, resumable
+  mid-shard, runnable under any external scheduler;
+- :mod:`repro.cluster.coordinator` — spawns workers, runs the per-pass
+  barrier with straggler/failure re-dispatch, and merges partials with
+  a deterministic fixed-order pairwise tree that reproduces the
+  single-process drivers BIT-IDENTICALLY for any worker count.
+"""
+
+from .coordinator import ClusterCoordinator, algo_meta
+from .worker import WorkerKilled, run_worker
+
+__all__ = ["ClusterCoordinator", "WorkerKilled", "algo_meta", "run_worker"]

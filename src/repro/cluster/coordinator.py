@@ -1,0 +1,248 @@
+"""Two-pass map/combine/reduce coordinator — the cluster's driver.
+
+Hadoop-shaped execution of Algorithm 1 (the paper's "suitable for
+distributed processing frameworks in which iteration is expensive"
+claim as a subsystem): for each of the q+1 data passes the coordinator
+
+1. publishes the pass ROUND (Qa/Qb bases + binding metadata) under the
+   cluster directory,
+2. spawns one worker process per shard (``python -m
+   repro.cluster.worker`` — any external scheduler could do the same),
+3. runs the BARRIER: polls for per-merge-group partials, re-dispatching
+   the merge groups of dead, stale or straggling workers to fresh
+   repair workers (at-most-once per group id — duplicates are
+   byte-identical and ignored),
+4. merges the partials with the deterministic fixed-order pairwise
+   tree (``rcca.reduce_group_partials``) — bit-reproducible regardless
+   of completion order — and either rotates the bases
+   (``power_update_Q``) or finishes (``finalize_result``).
+
+Because workers fold whole merge groups with the same jitted updates
+and the merge tree is the same fixed structure the single-process
+drivers use, the coordinator's result is BIT-IDENTICAL to
+``randomized_cca_streaming`` on the same store for any worker count
+(tests/test_cluster.py) and under injected worker kills
+(tests/test_cluster_failures.py).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+import uuid
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.core.rcca import (
+    DEFAULT_ENGINE,
+    MERGE_GROUP_CHUNKS,
+    RCCAConfig,
+    RCCAResult,
+    algo_meta,
+    finalize_result,
+    init_Q,
+    power_update_Q,
+    reduce_group_partials,
+    resolve_engine,
+    stats_init_fn,
+)
+from repro.store import ViewStoreReader
+
+from . import partials as pt
+
+
+class ClusterCoordinator:
+    """Drive a multi-worker two-pass fit over a view store.
+
+    Parameters
+    ----------
+    store:          view store path/URI, or an open ``ViewStoreReader``.
+    cfg:            :class:`RCCAConfig` hyper-parameters.
+    cluster_dir:    shared directory for rounds/partials/cursors/logs —
+                    on a real cluster this lives on the DFS all workers
+                    mount; kill/resume state never leaves it.
+    n_workers:      worker processes per pass.
+    engine:         data-pass engine, binding for every partial.
+    merge_group:    chunks per merge group (the partial granularity).
+                    MUST equal the single-process driver's value for
+                    bit-identical results (default: the shared
+                    ``rcca.MERGE_GROUP_CHUNKS``).
+    prefetch:       per-worker chunk prefetch depth.
+    worker_timeout: seconds a pass may run before live workers are
+                    declared stragglers, killed and their missing
+                    groups re-dispatched.
+    max_redispatch: repair rounds per pass before giving up.
+    env_overrides:  {shard: {env}} merged into that shard's initial
+                    worker process — the failure-injection hook
+                    (repair workers never inherit it).
+    """
+
+    def __init__(self, store, cfg: RCCAConfig, cluster_dir: str, *,
+                 n_workers: int = 2, engine: str = DEFAULT_ENGINE,
+                 merge_group: int = MERGE_GROUP_CHUNKS, prefetch: int = 2,
+                 ckpt_every: int = 4, worker_timeout: float = 600.0,
+                 max_redispatch: int = 3,
+                 env_overrides: Optional[Dict[int, dict]] = None,
+                 python: str = sys.executable):
+        if isinstance(store, ViewStoreReader):
+            self.reader, self.store_path = store, store.path
+        else:
+            self.reader, self.store_path = ViewStoreReader(store), store
+        self.cfg = cfg
+        self.cluster_dir = cluster_dir
+        self.n_workers = int(n_workers)
+        self.engine = resolve_engine(engine)
+        self.merge_group = int(merge_group)
+        self.prefetch = int(prefetch)
+        self.ckpt_every = int(ckpt_every)
+        self.worker_timeout = worker_timeout
+        self.max_redispatch = int(max_redispatch)
+        self.env_overrides = env_overrides or {}
+        self.python = python
+        if self.n_workers < 1:
+            raise ValueError("need at least one worker")
+        os.makedirs(os.path.join(cluster_dir, "logs"), exist_ok=True)
+
+    # -- process management -----------------------------------------------
+
+    @property
+    def n_groups(self) -> int:
+        return -(-self.reader.n_chunks // self.merge_group)
+
+    def _spawn(self, shard: int, pass_idx: int, *, groups=None,
+               extra_env: Optional[dict] = None) -> subprocess.Popen:
+        cmd = [self.python, "-m", "repro.cluster.worker",
+               "--store", self.store_path,
+               "--cluster-dir", self.cluster_dir,
+               "--shard", str(shard),
+               "--n-shards", str(self.n_workers),
+               "--pass-idx", str(pass_idx),
+               "--prefetch", str(self.prefetch),
+               "--ckpt-every", str(self.ckpt_every)]
+        if groups is not None:
+            cmd += ["--groups", ",".join(str(g) for g in groups)]
+        env = dict(os.environ)
+        # workers must import repro wherever the scheduler runs them
+        src_root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        env["PYTHONPATH"] = src_root + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        if extra_env:
+            env.update(extra_env)
+        log = open(os.path.join(self.cluster_dir, "logs",
+                                f"w{shard:03d}_p{pass_idx:05d}.log"), "ab")
+        try:
+            return subprocess.Popen(cmd, env=env, stdout=log,
+                                    stderr=subprocess.STDOUT)
+        finally:
+            log.close()  # the child holds its own descriptor
+
+    def _owned(self, shard: int) -> List[int]:
+        return list(range(shard, self.n_groups, self.n_workers))
+
+    # -- one pass ---------------------------------------------------------
+
+    def _run_pass(self, pass_idx: int, kind: str, Qa, Qb,
+                  expect: dict) -> tuple:
+        """Spawn → barrier → merged stats (+ per-pass diagnostics)."""
+        t0 = time.perf_counter()
+        pt.write_round(self.cluster_dir, pass_idx, Qa, Qb,
+                       {**expect, "n_shards": self.n_workers})
+        procs = {s: self._spawn(s, pass_idx,
+                                extra_env=self.env_overrides.get(s))
+                 for s in range(self.n_workers) if self._owned(s)}
+        n_spawned = len(procs)
+        redispatched: List[int] = []
+        attempts = 0
+        deadline = (time.perf_counter() + self.worker_timeout
+                    if self.worker_timeout else None)
+        while True:
+            have = pt.collect_partials(self.cluster_dir, pass_idx,
+                                       self.n_groups, expect)
+            missing = [g for g in range(self.n_groups) if g not in have]
+            if not missing:
+                break
+            timed_out = deadline is not None and time.perf_counter() > deadline
+            if timed_out:
+                for p in procs.values():  # stragglers: kill, then re-dispatch
+                    if p.poll() is None:
+                        p.kill()
+            all_done = all(p.poll() is not None for p in procs.values())
+            if all_done or timed_out:
+                attempts += 1
+                if attempts > self.max_redispatch:
+                    raise RuntimeError(
+                        f"pass {pass_idx}: merge groups {missing} still "
+                        f"missing after {self.max_redispatch} re-dispatch "
+                        f"round(s) — see {self.cluster_dir}/logs")
+                # re-dispatch the dead/stale shards' groups to a fresh
+                # repair worker (a "survivor" process; its shard id is
+                # outside the strided range so cursors never collide)
+                redispatched.extend(missing)
+                repair = self.n_workers + attempts - 1
+                procs = {repair: self._spawn(repair, pass_idx, groups=missing)}
+                n_spawned += 1
+                deadline = (time.perf_counter() + self.worker_timeout
+                            if self.worker_timeout else None)
+            time.sleep(0.05)
+        for p in procs.values():
+            p.poll()
+        t_merge = time.perf_counter()
+        r = self.reader
+        stats_by_group = {}
+        for g in range(self.n_groups):
+            loaded = pt.read_partial(self.cluster_dir, pass_idx, g)
+            assert loaded is not None, g
+            stats, meta = loaded
+            if not pt.binding_matches(meta, expect):  # at-most-once guard
+                raise RuntimeError(f"stale partial for group {g} at merge time")
+            stats_by_group[g] = stats
+        merged = reduce_group_partials(
+            stats_by_group, stats_init_fn(kind, r.da, r.db, self.cfg.sketch),
+            r.n_chunks, self.merge_group)
+        now = time.perf_counter()
+        diag = {"wall_s": round(now - t0, 4),
+                "merge_s": round(now - t_merge, 4),
+                "workers_spawned": n_spawned,
+                "redispatched_groups": sorted(set(redispatched))}
+        return merged, diag
+
+    # -- driving ----------------------------------------------------------
+
+    def fit(self, key: jax.Array) -> RCCAResult:
+        """All q+1 passes across ``n_workers`` processes →
+        :class:`RCCAResult`, bit-identical to the single-process
+        drivers on the same store."""
+        r, cfg = self.reader, self.cfg
+        fit_id = uuid.uuid4().hex
+        Qa, Qb = init_Q(key, r.da, r.db, cfg)
+        passes = []
+        for pass_idx in range(cfg.q + 1):
+            kind = "final" if pass_idx == cfg.q else "power"
+            expect = pt.binding_meta(
+                fit_id=fit_id, pass_idx=pass_idx, kind=kind,
+                engine=self.engine, fingerprint=r.fingerprint(),
+                merge_group=self.merge_group, algo=algo_meta(cfg))
+            stats, diag = self._run_pass(pass_idx, kind, Qa, Qb, expect)
+            passes.append(diag)
+            # n is an f32 accumulator: allow its rounding at huge row
+            # counts while still catching whole wrong/duplicate chunks
+            if abs(float(stats.n) - r.n) > max(1.0, 1e-6 * r.n):
+                raise RuntimeError(
+                    f"pass {pass_idx} merged {float(stats.n):.0f} rows, "
+                    f"store has {r.n} — a merge group folded the wrong "
+                    "chunks")
+            if kind == "power":
+                Qa, Qb = power_update_Q(stats, Qa, Qb, cfg)
+        res = finalize_result(stats, Qa, Qb, cfg, r.da, r.db)
+        res.diagnostics["cluster"] = {
+            "n_workers": self.n_workers,
+            "n_groups": self.n_groups,
+            "merge_group": self.merge_group,
+            "fit_id": fit_id,
+            "passes": passes,
+        }
+        return res

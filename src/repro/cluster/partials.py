@@ -1,0 +1,173 @@
+"""On-disk partial sufficient statistics — the cluster's merge currency.
+
+The map/combine/reduce contract of the two-pass algorithm (Algorithm 1
+is a sum of per-chunk updates, so per-worker statistics merge exactly —
+the shape Scalable-CCA frames for Hadoop-style execution):
+
+- a PARTIAL is the sum of one merge group's chunk updates (``rcca.
+  MERGE_GROUP_CHUNKS`` chunks), written atomically through
+  ``repro.ckpt`` as a versioned checkpoint directory whose metadata
+  binds it to everything that must match for the merge to be valid:
+  the fit id, pass index, store fingerprint, engine, algorithm
+  hyper-parameters, merge-group size and the shard that produced it;
+- a ROUND is the coordinator's per-pass broadcast: the ``Qa``/``Qb``
+  bases every worker of that pass projects against, under the same
+  binding metadata.  Workers read the round, stream their merge
+  groups, and publish one partial per group;
+- the coordinator merges partials with ``rcca.reduce_group_partials``
+  — the fixed pairwise tree over group indices — so the result is
+  bit-identical to the single-process drivers for ANY worker count and
+  ANY completion order, and each group id enters the reduction at most
+  once no matter how many workers raced to produce it (partial content
+  is deterministic, so duplicate publications are byte-identical and
+  last-write-wins is safe).
+
+Layout under a cluster directory::
+
+    cluster/
+      rounds/pass_00000/          # Qa, Qb + round metadata (repro.ckpt)
+      partials/p00000_g00003/     # one merge group's stats + metadata
+      workers/shard_000/pass_00000/   # per-worker resume cursors
+      logs/w000_p00000.log        # captured worker stdout/stderr
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import time
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.ckpt import load_flat, load_metadata, save_pytree
+from repro.core.rcca import FinalStats, PowerStats
+
+PARTIAL_VERSION = 1
+
+#: Metadata keys that must agree between a round and every partial
+#: merged under it — the at-most-once / staleness guard.
+BINDING_KEYS = ("version", "fit_id", "pass_idx", "kind", "engine",
+                "fingerprint", "merge_group", "algo")
+
+
+def round_dir(cluster_dir: str, pass_idx: int) -> str:
+    return os.path.join(cluster_dir, "rounds", f"pass_{pass_idx:05d}")
+
+
+def partial_path(cluster_dir: str, pass_idx: int, group: int) -> str:
+    return os.path.join(cluster_dir, "partials", f"p{pass_idx:05d}_g{group:05d}")
+
+
+def worker_cursor_dir(cluster_dir: str, shard: int, pass_idx: int) -> str:
+    return os.path.join(cluster_dir, "workers", f"shard_{shard:03d}",
+                        f"pass_{pass_idx:05d}")
+
+
+def binding_meta(*, fit_id: str, pass_idx: int, kind: str, engine: str,
+                 fingerprint: str, merge_group: int, algo: dict) -> dict:
+    return {"version": PARTIAL_VERSION, "fit_id": fit_id,
+            "pass_idx": int(pass_idx), "kind": kind, "engine": engine,
+            "fingerprint": fingerprint, "merge_group": int(merge_group),
+            "algo": algo}
+
+
+def binding_matches(meta: Optional[dict], expect: dict) -> bool:
+    """True when a round/partial's binding metadata matches ``expect``
+    on every :data:`BINDING_KEYS` entry — anything else is stale (an
+    earlier fit, another store, another engine...) and must not merge."""
+    if meta is None:
+        return False
+    return all(meta.get(k) == expect.get(k) for k in BINDING_KEYS)
+
+
+# -- rounds (coordinator → workers) ---------------------------------------
+
+
+def write_round(cluster_dir: str, pass_idx: int, Qa, Qb, meta: dict) -> None:
+    save_pytree({"Qa": Qa, "Qb": Qb}, round_dir(cluster_dir, pass_idx),
+                metadata=meta)
+
+
+def read_round(cluster_dir: str, pass_idx: int, *,
+               wait_s: float = 0.0) -> Tuple[jnp.ndarray, jnp.ndarray, dict]:
+    """Load a pass round, optionally waiting for the coordinator to
+    publish it (a worker under an external scheduler may start first)."""
+    d = round_dir(cluster_dir, pass_idx)
+    deadline = time.monotonic() + wait_s
+    while not os.path.exists(os.path.join(d, "manifest.json")):
+        if time.monotonic() >= deadline:
+            raise FileNotFoundError(
+                f"no round published for pass {pass_idx} under {cluster_dir!r}")
+        time.sleep(0.05)
+    flat, meta = load_flat(d)
+    return jnp.asarray(flat["Qa"]), jnp.asarray(flat["Qb"]), meta
+
+
+# -- partials (workers → coordinator) -------------------------------------
+
+
+def _stats_from_flat(flat: dict, kind: str):
+    cls = PowerStats if kind == "power" else FinalStats
+    return cls(**{f: jnp.asarray(flat[f]) for f in cls._fields})
+
+
+def write_partial(cluster_dir: str, pass_idx: int, group: int, stats,
+                  meta: dict, *, shard: int, n_shards: int) -> None:
+    """Atomically publish one merge group's statistics.
+
+    Concurrent publication of the same group id (a re-dispatched shard
+    racing its presumed-dead owner) is harmless: content is
+    deterministic, the staging rename is atomic, and the loser's copy
+    is discarded.
+    """
+    final = partial_path(cluster_dir, pass_idx, group)
+    os.makedirs(os.path.dirname(final), exist_ok=True)
+    staging = f"{final}.stage{os.getpid()}"
+    save_pytree(stats._asdict(), staging,
+                metadata={**meta, "group": int(group), "shard": int(shard),
+                          "n_shards": int(n_shards)})
+    try:
+        os.rename(staging, final)
+    except OSError:
+        existing = partial_meta(cluster_dir, pass_idx, group)
+        if binding_matches(existing, meta):
+            shutil.rmtree(staging, ignore_errors=True)  # a twin won the race
+        else:  # stale leftover from an earlier fit — replace it
+            shutil.rmtree(final, ignore_errors=True)
+            os.rename(staging, final)
+
+
+def read_partial(cluster_dir: str, pass_idx: int,
+                 group: int) -> Optional[Tuple[object, dict]]:
+    d = partial_path(cluster_dir, pass_idx, group)
+    if not os.path.exists(os.path.join(d, "manifest.json")):
+        return None
+    flat, meta = load_flat(d)
+    return _stats_from_flat(flat, meta["kind"]), meta
+
+
+def partial_meta(cluster_dir: str, pass_idx: int, group: int) -> Optional[dict]:
+    """Metadata only — cheap validity polling for the barrier loop."""
+    d = partial_path(cluster_dir, pass_idx, group)
+    try:
+        return load_metadata(d)
+    except (FileNotFoundError, KeyError, ValueError):
+        return None
+
+
+def clear_stale_partial(cluster_dir: str, pass_idx: int, group: int) -> None:
+    shutil.rmtree(partial_path(cluster_dir, pass_idx, group),
+                  ignore_errors=True)
+
+
+def collect_partials(cluster_dir: str, pass_idx: int, n_groups: int,
+                     expect: dict) -> Dict[int, dict]:
+    """Group id → metadata for every VALID published partial of a pass
+    (stale ones are ignored — and thus re-dispatched by the barrier)."""
+    out = {}
+    for g in range(n_groups):
+        meta = partial_meta(cluster_dir, pass_idx, g)
+        if binding_matches(meta, expect):
+            out[g] = meta
+    return out

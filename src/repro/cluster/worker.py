@@ -1,0 +1,192 @@
+"""One shard of one data pass — the cluster's map task.
+
+    python -m repro.cluster.worker --store /data/corpus \
+        --cluster-dir /data/cluster --shard 3 --n-shards 8 --pass-idx 0
+
+Runnable under any external scheduler (the coordinator's subprocess
+spawn is just one such scheduler): everything a worker needs beyond its
+shard identity comes from the store manifest and the pass ROUND the
+coordinator published (Qa/Qb bases, engine, merge-group size, binding
+metadata).  The worker streams its merge groups — strided whole-group
+assignment via ``ViewStoreReader.row_shard(group=...)``, prefetched
+through :class:`~repro.store.prefetch.ChunkPrefetcher` — folds each
+group's chunks with the same jitted update the single-process drivers
+use, and atomically publishes one partial per group.
+
+Fault tolerance:
+
+- a per-worker CURSOR (current group fold + next chunk) is checkpointed
+  through ``repro.ckpt`` every ``ckpt_every`` chunks, so a killed
+  worker re-run with the same shard id resumes MID-SHARD: published
+  groups are skipped, the in-flight group continues from the cursor,
+  and ``row_shard(start=...)`` seeks the store so the folded prefix is
+  never re-read;
+- partials already published (by a previous incarnation or by a repair
+  worker that took over this shard) are detected by their binding
+  metadata and skipped — publishing is idempotent and merge-safe
+  because partial content is a deterministic function of (store,
+  round, group).
+
+``RCCA_CLUSTER_KILL_AT=<pass>:<chunk>`` simulates a hard crash right
+after folding that chunk (tests/test_cluster_failures.py) — the CLI
+dies with ``os._exit``, skipping every cleanup path, exactly like a
+lost machine.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from typing import Optional, Sequence
+
+import jax
+
+from repro.ckpt import CheckpointManager
+from repro.core.rcca import SegmentedAccumulator, jit_update_fn, stats_init_fn
+from repro.store import ViewStoreReader, prefetched, shard_chunks
+
+from . import partials as pt
+
+KILL_ENV = "RCCA_CLUSTER_KILL_AT"
+
+
+class WorkerKilled(RuntimeError):
+    """Injected crash (see :data:`KILL_ENV`)."""
+
+
+def _parse_kill(pass_idx: int) -> Optional[int]:
+    spec = os.environ.get(KILL_ENV)
+    if not spec:
+        return None
+    p, _, c = spec.partition(":")
+    return int(c) if int(p) == pass_idx else None
+
+
+def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
+               pass_idx: int, *, groups: Optional[Sequence[int]] = None,
+               prefetch: int = 2, ckpt_every: int = 4,
+               round_wait_s: float = 30.0,
+               kill_at_chunk: Optional[int] = None) -> int:
+    """Process one shard of one pass; returns the number of partials
+    this invocation published.  ``groups`` overrides the strided
+    assignment (the coordinator's re-dispatch path)."""
+    reader = ViewStoreReader(store)
+    Qa, Qb, meta = pt.read_round(cluster_dir, pass_idx, wait_s=round_wait_s)
+    if meta["fingerprint"] != reader.fingerprint():
+        raise ValueError(
+            f"round for pass {pass_idx} was published against a different "
+            f"store (fingerprint {meta['fingerprint'][:12]}… != "
+            f"{reader.fingerprint()[:12]}…)")
+    if kill_at_chunk is None:
+        kill_at_chunk = _parse_kill(pass_idx)
+
+    kind, engine = meta["kind"], meta["engine"]
+    G = int(meta["merge_group"])
+    n_chunks = reader.n_chunks
+    n_groups = -(-n_chunks // G)
+    kt = Qa.shape[1]
+    init_fn = stats_init_fn(kind, reader.da, reader.db, kt)
+    upd = jit_update_fn(kind, engine)
+    Qa, Qb = jax.device_put(Qa), jax.device_put(Qb)
+
+    expect = {k: meta.get(k) for k in pt.BINDING_KEYS}
+    if groups is None:
+        owned = [g for g in range(shard, n_groups, n_shards)]
+    else:
+        owned = sorted(int(g) for g in groups)
+
+    def group_done(g: int) -> bool:
+        return pt.binding_matches(
+            pt.partial_meta(cluster_dir, pass_idx, g), expect)
+
+    # -- resume position --------------------------------------------------
+    mgr = CheckpointManager(pt.worker_cursor_dir(cluster_dir, shard, pass_idx),
+                            keep=2)
+    todo = [g for g in owned if not group_done(g)]
+    published = 0
+    if not todo:
+        return 0
+    start_chunk = todo[0] * G
+    current = init_fn()
+    cur_meta = mgr.metadata(mgr.latest_step())
+    if pt.binding_matches(cur_meta, expect) and cur_meta.get("shard") == shard:
+        nxt, g0 = int(cur_meta["next_chunk"]), int(cur_meta["group"])
+        # the cursor only helps if it sits mid-way through the FIRST
+        # group still missing its partial — anything else (stale cursor,
+        # a hole left by a repair worker) is redone from group start
+        if todo[0] == g0 and g0 * G < nxt < min(n_chunks, (g0 + 1) * G):
+            tree, _ = mgr.restore({"current": init_fn()})
+            current = tree["current"]
+            start_chunk = nxt
+
+    # -- stream ----------------------------------------------------------
+    if groups is None:
+        idxs = list(shard_chunks(shard, n_shards, n_chunks,
+                                 start=start_chunk, group=G))
+        src = reader.row_shard(shard, n_shards, start=start_chunk, group=G)
+    else:
+        idxs = [c for g in todo for c in range(g * G, min(n_chunks, (g + 1) * G))
+                if c >= start_chunk]
+        src = (reader.get_chunk(i) for i in iter(idxs))
+    src = prefetched(src, depth=prefetch)
+    try:
+        done_since_cursor = 0
+        for chunk_idx, (a, b) in zip(idxs, src):
+            g = chunk_idx // G
+            if g not in todo:  # published by a previous incarnation
+                continue
+            current = upd(current, a, b, Qa, Qb)
+            done_since_cursor += 1
+            end_of_group = (chunk_idx + 1) % G == 0 or chunk_idx + 1 == n_chunks
+            if end_of_group:
+                jax.block_until_ready(current)
+                if not group_done(g):  # idempotent re-publication guard
+                    pt.write_partial(cluster_dir, pass_idx, g, current,
+                                     expect, shard=shard, n_shards=n_shards)
+                published += 1
+                current = init_fn()
+            if done_since_cursor % ckpt_every == 0 or end_of_group:
+                mgr.save(chunk_idx, {"current": current},
+                         metadata={**expect, "next_chunk": chunk_idx + 1,
+                                   "group": (chunk_idx + 1) // G,
+                                   "shard": shard})
+            if kill_at_chunk is not None and chunk_idx >= kill_at_chunk:
+                raise WorkerKilled(f"injected kill at chunk {chunk_idx}")
+    finally:
+        src.close()
+    return published
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--store", required=True,
+                    help="view store path or URI (repro.store)")
+    ap.add_argument("--cluster-dir", required=True)
+    ap.add_argument("--shard", type=int, required=True)
+    ap.add_argument("--n-shards", type=int, required=True)
+    ap.add_argument("--pass-idx", type=int, required=True)
+    ap.add_argument("--groups", default=None,
+                    help="comma-separated merge-group ids overriding the "
+                         "strided assignment (coordinator re-dispatch)")
+    ap.add_argument("--prefetch", type=int, default=2)
+    ap.add_argument("--ckpt-every", type=int, default=4)
+    ap.add_argument("--round-wait-s", type=float, default=30.0)
+    args = ap.parse_args(argv)
+    groups = None
+    if args.groups:
+        groups = [int(g) for g in args.groups.split(",")]
+    try:
+        n = run_worker(args.store, args.cluster_dir, args.shard, args.n_shards,
+                       args.pass_idx, groups=groups, prefetch=args.prefetch,
+                       ckpt_every=args.ckpt_every,
+                       round_wait_s=args.round_wait_s)
+    except WorkerKilled as e:
+        print(f"[worker {args.shard}] {e}", flush=True)
+        os._exit(3)  # hard death: no cleanup, like a lost machine
+    print(f"[worker {args.shard}] pass {args.pass_idx}: "
+          f"published {n} partial(s)", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

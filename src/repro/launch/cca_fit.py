@@ -14,8 +14,12 @@ q+1 data passes.  Two execution modes:
 Data source: synthetic generation by default, or an on-disk view store
 (``repro.store``) via ``--data <store-path>`` — ``--ingest`` writes the
 synthetic corpus there first.  Store-backed stream mode runs the async
-prefetching PassRunner (``--prefetch`` depth, 0 = synchronous reads)
-and resumes a killed run from its pass cursor with ``--resume``:
+prefetching PassRunner (``--prefetch`` depth, 0 = synchronous reads,
+``auto`` = calibrated) and resumes a killed run from its pass cursor
+with ``--resume``.  ``--workers N`` instead fans the store-backed fit
+out over N worker PROCESSES through the ``repro.cluster`` coordinator
+(``--cluster-dir`` for the shared coordination directory) — the result
+is bit-identical to the single-process stream mode:
 
     python -m repro.launch.cca_fit --smoke --mode stream \
         --data /tmp/store --ingest --ckpt-dir /tmp/cca
@@ -72,12 +76,23 @@ def main(argv=None):
     ap.add_argument("--ingest", action="store_true",
                     help="write the synthetic workload corpus into --data "
                          "first (chunked — never materializes n × d)")
-    ap.add_argument("--prefetch", type=int, default=2,
-                    help="store prefetch pipeline depth (0 = synchronous)")
+    ap.add_argument("--prefetch", default="2",
+                    help="store prefetch pipeline depth (0 = synchronous, "
+                         "'auto' = calibrate from the read/compute ratio)")
     ap.add_argument("--resume", action="store_true",
                     help="resume a killed store-backed run from the latest "
                          "pass cursor in --ckpt-dir")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="run the store-backed fit across N worker "
+                         "PROCESSES via the repro.cluster coordinator "
+                         "(requires --data; bit-identical to the "
+                         "single-process stream mode)")
+    ap.add_argument("--cluster-dir", default=None,
+                    help="shared coordination directory for --workers "
+                         "(rounds/partials/cursors/logs; default "
+                         "<store>.cluster)")
     args = ap.parse_args(argv)
+    args.prefetch = args.prefetch if args.prefetch == "auto" else int(args.prefetch)
 
     wl = europarl_smoke() if args.smoke else europarl_config()
     rcca = wl.rcca
@@ -95,12 +110,15 @@ def main(argv=None):
                           rank=max(rcca.k * 2, 16), seed=args.seed)
     key = jax.random.PRNGKey(args.seed)
 
+    if args.workers and not args.data:
+        raise SystemExit("--workers needs an on-disk store: pass --data "
+                         "(the cluster coordinator shards a view store)")
+
     reader = None
     if args.data:
-        from repro.store import ViewStoreReader, ingest_planted
-        from repro.store.format import MANIFEST
+        from repro.store import ViewStoreReader, ingest_planted, store_exists
 
-        if args.ingest or not os.path.exists(os.path.join(args.data, MANIFEST)):
+        if args.ingest or not store_exists(args.data):
             t_ing = time.time()
             reader = ingest_planted(args.data, data)
             print(f"[cca] ingested {reader.n} rows "
@@ -144,7 +162,26 @@ def main(argv=None):
         del a0, b0, qa0, qb0
 
     t0 = time.time()
-    if args.mode == "dist":
+    if args.workers:
+        from repro.cluster import ClusterCoordinator
+
+        cluster_dir = args.cluster_dir or args.data.rstrip("/") + ".cluster"
+        if args.prefetch == "auto":
+            print("[cca] --prefetch auto is per-process calibration; "
+                  "cluster workers use a fixed depth 2 instead")
+        coord = ClusterCoordinator(
+            reader, rcca, cluster_dir, n_workers=args.workers,
+            engine=args.engine,
+            prefetch=args.prefetch if args.prefetch != "auto" else 2)
+        print(f"[cca] cluster mode, engine={args.engine}, "
+              f"workers={args.workers}, groups={coord.n_groups}, "
+              f"cluster_dir={cluster_dir}")
+        res = coord.fit(key)
+        print("[cca] cluster:", res.diagnostics["cluster"])
+        A = B = None
+        if reader.nbytes <= 2 << 30:
+            A, B = reader.materialize()
+    elif args.mode == "dist":
         A, B = reader.materialize() if reader is not None else data.materialize()
         mesh = make_host_mesh()
         print(f"[cca] dist mode, engine={args.engine}, "
@@ -169,12 +206,12 @@ def main(argv=None):
         mgr = CheckpointManager(args.ckpt_dir, keep=2) if args.ckpt_dir else None
         state = {"count": 0}
 
-        def on_chunk(pass_idx, chunk_idx, stats, Qa, Qb):
+        def on_chunk(pass_idx, chunk_idx, acc, Qa, Qb):
             state["count"] += 1
             if mgr and state["count"] % 16 == 0:
                 mgr.save(
                     pass_idx * 10_000 + chunk_idx,
-                    {"stats": stats._asdict(), "Qa": Qa, "Qb": Qb},
+                    {"acc": acc.state(), "Qa": Qa, "Qb": Qb},
                     metadata={"pass_idx": pass_idx, "chunk_idx": chunk_idx},
                 )
 

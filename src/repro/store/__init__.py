@@ -14,17 +14,26 @@ from .format import (
     ViewStoreWriter,
     ingest_chunks,
     ingest_planted,
+    shard_chunks,
+    store_exists,
 )
-from .passes import PassRunner
+from .passes import PassRunner, choose_pipeline
 from .prefetch import ChunkPrefetcher, prefetched
+from .uri import LocalFS, StoreFS, register_scheme
 
 __all__ = [
     "ChunkPrefetcher",
+    "LocalFS",
     "PassRunner",
     "ShardInfo",
+    "StoreFS",
     "ViewStoreReader",
     "ViewStoreWriter",
+    "choose_pipeline",
     "ingest_chunks",
     "ingest_planted",
     "prefetched",
+    "register_scheme",
+    "shard_chunks",
+    "store_exists",
 ]

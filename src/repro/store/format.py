@@ -28,7 +28,12 @@ Design points:
   as repro.ckpt) — a killed ingest never leaves a readable-but-wrong
   store;
 - ``row_shard(shard, n_shards)`` gives distributed workers the same
-  strided chunk assignment as ``PlantedCCAData.row_shard``.
+  strided chunk assignment as ``PlantedCCAData.row_shard``; ``start=``
+  seeks (worker resume) and ``group=`` stripes whole merge groups
+  (``repro.cluster``'s partial unit);
+- reads route through :mod:`repro.store.uri`: the reader accepts bare
+  paths, ``file://`` and any registered scheme (``gs://``, ``s3://``,
+  ...), so distributed-FS backends only plug an opener in.
 
 Exotic dtypes (bf16/f8) are stored as same-width uint views with the
 logical dtype recorded in the manifest — numpy round-trips them without
@@ -66,15 +71,46 @@ def _as_logical(arr: np.ndarray, logical: str) -> np.ndarray:
     return arr
 
 
-def _sha256_file(path: str, bufsize: int = 1 << 20) -> str:
+def _sha256_fileobj(f, bufsize: int = 1 << 20) -> str:
     h = hashlib.sha256()
-    with open(path, "rb") as f:
-        while True:
-            buf = f.read(bufsize)
-            if not buf:
-                break
-            h.update(buf)
+    while True:
+        buf = f.read(bufsize)
+        if not buf:
+            break
+        h.update(buf)
     return h.hexdigest()
+
+
+def _sha256_file(path: str, bufsize: int = 1 << 20) -> str:
+    with open(path, "rb") as f:
+        return _sha256_fileobj(f, bufsize)
+
+
+def store_exists(path: str) -> bool:
+    """True if ``path`` (bare, ``file://`` or any registered scheme)
+    holds a published view store (its manifest exists)."""
+    from .uri import resolve_store_path
+
+    fs, base = resolve_store_path(path)
+    return fs.exists(fs.join(base, MANIFEST))
+
+
+def shard_chunks(shard: int, n_shards: int, n_chunks: int, *,
+                 start: int = 0, group: int = 1):
+    """Deterministic chunk assignment of worker ``shard`` of
+    ``n_shards``: chunks are striped in ``group``-sized runs (merge
+    groups), so chunk ``c`` belongs to worker ``(c // group) %
+    n_shards``, and the union over workers is an exact partition of the
+    corpus.  ``start`` seeks (resume: chunks below it are skipped).
+    ``group=1`` is the classic per-chunk striping."""
+    if not 0 <= shard < n_shards:
+        raise ValueError(f"shard {shard} out of range [0, {n_shards})")
+    if group <= 0:
+        raise ValueError("group must be positive")
+    for g in range(shard, -(-n_chunks // group), n_shards):
+        for c in range(g * group, min(n_chunks, (g + 1) * group)):
+            if c >= start:
+                yield c
 
 
 @dataclasses.dataclass(frozen=True)
@@ -259,13 +295,15 @@ class ViewStoreReader:
     """
 
     def __init__(self, path: str, *, mmap: bool = True):
-        self.path = path
-        mpath = os.path.join(path, MANIFEST)
-        if not os.path.exists(mpath):
+        from .uri import resolve_store_path
+
+        self._fs, self.path = resolve_store_path(path)
+        mpath = self._fs.join(self.path, MANIFEST)
+        if not self._fs.exists(mpath):
             raise FileNotFoundError(
                 f"{path!r} is not a view store (no {MANIFEST}); "
                 "was the writer closed?")
-        with open(mpath) as f:
+        with self._fs.open(mpath, "rb") as f:
             self.manifest = json.load(f)
         if self.manifest.get("version") != STORE_VERSION:
             raise ValueError(f"unsupported store version {self.manifest.get('version')}")
@@ -311,11 +349,14 @@ class ViewStoreReader:
     def _shard_arrays(self, idx: int) -> Tuple[np.ndarray, np.ndarray]:
         if idx not in self._maps:
             s = self.shards[idx]
-            a = np.load(os.path.join(self.path, s.file_a), mmap_mode=self._mmap_mode)
-            b = np.load(os.path.join(self.path, s.file_b), mmap_mode=self._mmap_mode)
-            if self._mmap_mode is None:
-                # eager reads materialize the shard — keep only the one
-                # being streamed, or an unbounded pass would rebuild the
+            a = self._fs.load_array(self._fs.join(self.path, s.file_a),
+                                    mmap_mode=self._mmap_mode)
+            b = self._fs.load_array(self._fs.join(self.path, s.file_b),
+                                    mmap_mode=self._mmap_mode)
+            if self._mmap_mode is None or not self._fs.supports_mmap:
+                # eager reads (mmap off, or a remote backend that can
+                # only materialize) — keep only the shard being
+                # streamed, or an unbounded pass would rebuild the
                 # whole corpus in this cache (mmaps are just mappings,
                 # caching those is free)
                 self._maps.clear()
@@ -357,12 +398,18 @@ class ViewStoreReader:
     def __iter__(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
         return self.iter_chunks()
 
-    def row_shard(self, shard: int, n_shards: int) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    def row_shard(self, shard: int, n_shards: int, *, start: int = 0,
+                  group: int = 1) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
         """Strided chunk assignment for distributed workers — same
         contract as ``PlantedCCAData.row_shard`` (worker w streams
         chunks w, w + n_shards, ...); the union over workers is an exact
-        partition of the corpus."""
-        for i in range(shard, self.n_chunks, n_shards):
+        partition of the corpus.  ``start`` seeks past already-processed
+        chunks (a killed worker resumes mid-shard without re-reading its
+        folded prefix); ``group`` stripes in merge-group-sized runs so
+        each worker owns whole ``repro.cluster`` merge groups (see
+        :func:`shard_chunks` for the index rule)."""
+        for i in shard_chunks(shard, n_shards, self.n_chunks,
+                              start=start, group=group):
             yield self.get_chunk(i)
 
     def materialize(self) -> Tuple[np.ndarray, np.ndarray]:
@@ -377,7 +424,8 @@ class ViewStoreReader:
         (bit rot, truncated copy, tampering)."""
         for s in self.shards:
             for fname, want in ((s.file_a, s.sha256_a), (s.file_b, s.sha256_b)):
-                got = _sha256_file(os.path.join(self.path, fname))
+                with self._fs.open(self._fs.join(self.path, fname), "rb") as f:
+                    got = _sha256_fileobj(f)
                 if got != want:
                     raise ValueError(
                         f"shard {fname} content hash mismatch: "

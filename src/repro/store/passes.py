@@ -9,7 +9,9 @@ tolerance (:mod:`repro.ckpt`):
   double-buffered :class:`~repro.store.prefetch.ChunkPrefetcher`, so
   the next chunk's shard read + ``jax.device_put`` overlap the current
   chunk's fused Pallas update;
-- a persistent PASS CURSOR — ``{stats, Qa, Qb}`` plus
+- a persistent PASS CURSOR — the pass accumulator state (current
+  merge-group fold + pairwise-tree stack, see
+  ``rcca.SegmentedAccumulator``) plus ``Qa``/``Qb`` and
   ``{pass_idx, next_chunk}`` metadata — is checkpointed through
   ``repro.ckpt.CheckpointManager`` every ``ckpt_every`` chunks.  A
   killed pass resumes from the manifest + latest cursor alone
@@ -21,15 +23,24 @@ tolerance (:mod:`repro.ckpt`):
   stall seconds) land in ``RCCAResult.diagnostics["io"]`` — the same
   numbers the IO-overlap benchmark reports.
 
-The cursor embeds the store fingerprint and the engine, so resuming
-against swapped data or a different engine fails loudly instead of
-silently mixing accumulator histories.
+``prefetch="auto"`` / ``sync_chunks="auto"`` pick the pipeline depth
+and the in-flight bound from a short calibration window instead of
+fixed defaults: the first few chunks are read synchronously, the
+per-chunk read and (blocked) update times are measured, and
+:func:`choose_pipeline` maps the read/compute ratio to the knobs — the
+same ratio ``result.diagnostics["io"]`` reports after every fit.
+
+The cursor embeds the store fingerprint, the engine and the merge-group
+size, so resuming against swapped data, a different engine or a
+different canonical merge structure fails loudly instead of silently
+mixing accumulator histories.
 """
 
 from __future__ import annotations
 
+import math
 import time
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -37,16 +48,104 @@ import jax.numpy as jnp
 from repro.ckpt import CheckpointManager
 from repro.core.rcca import (
     DEFAULT_ENGINE,
+    MERGE_GROUP_CHUNKS,
     RCCAConfig,
     RCCAResult,
-    init_final_stats,
-    init_power_stats,
+    SegmentedAccumulator,
+    algo_meta,
     randomized_cca_iterator,
     resolve_engine,
+    stats_init_fn,
 )
 
 from .format import ViewStoreReader
-from .prefetch import ChunkPrefetcher, prefetched
+from .prefetch import prefetched
+
+#: Cursor layout version — bumped when the checkpointed pass state
+#: changes shape (v2: segmented accumulator state instead of one flat
+#: stats fold).  A cursor from another layout fails loudly.
+CURSOR_FMT = 2
+
+
+def choose_pipeline(read_chunk_s: float, compute_chunk_s: float):
+    """Map a measured per-chunk (read, compute) pair to
+    ``(prefetch depth, sync_chunks)``.
+
+    - read ≪ compute (page-cache reads on a small host): a prefetch
+      thread is pure overhead — run synchronously, allow a few chunks
+      of async dispatch queueing.
+    - otherwise: depth ≈ read/compute + 1 keeps the producer far
+      enough ahead to hide the reads (classic double buffering at
+      ratio ≈ 1), capped at 8 so a badly IO-bound pass can't pin
+      unbounded chunk buffers; once IO dominates, a strict
+      ``sync_chunks=1`` pipeline costs nothing (compute is not the
+      bottleneck) and bounds live chunks exactly.
+    """
+    ratio = read_chunk_s / max(compute_chunk_s, 1e-9)
+    if ratio < 0.05:
+        return 0, 4
+    depth = min(8, max(2, math.ceil(ratio) + 1))
+    sync = 1 if ratio >= 0.5 else 4
+    return depth, sync
+
+
+class _CalibratingSource:
+    """Chunk source that reads its first ``runner.calib_chunks`` chunks
+    synchronously (timing each) and then swaps in the prefetcher that
+    the calibration chose.  Presents the same ``stats()``/``close()``
+    surface as :class:`ChunkPrefetcher`."""
+
+    def __init__(self, runner: "PassRunner", start: int):
+        self._r = runner
+        self._start = start
+        self._consumed = 0
+        self._inner = None
+        self.read_s = 0.0
+        self.chunks = 0
+        self.rows = 0
+        self.bytes = 0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._inner is not None:
+            return next(self._inner)
+        r = self._r
+        if r._auto_done or self._consumed >= r.calib_chunks:
+            r._finish_calibration()
+            self._inner = prefetched(
+                r.reader.iter_chunks(self._start + self._consumed),
+                depth=r.prefetch)
+            return next(self._inner)
+        idx = self._start + self._consumed
+        if idx >= r.reader.n_chunks:
+            raise StopIteration
+        t0 = time.perf_counter()
+        a, b = r.reader.get_chunk(idx)
+        a, b = jax.device_put(a), jax.device_put(b)
+        dt = time.perf_counter() - t0
+        r._calib_reads.append(dt)
+        self.read_s += dt
+        self._consumed += 1
+        self.chunks += 1
+        self.rows += int(a.shape[0])
+        self.bytes += int(a.nbytes) + int(b.nbytes)
+        return a, b
+
+    def stats(self) -> dict:
+        own = {"chunks": self.chunks, "rows": self.rows, "bytes": self.bytes,
+               "read_s": round(self.read_s, 4),
+               # calibration reads are inline — all of them stall
+               "io_stall_s": round(self.read_s, 4)}
+        if self._inner is not None:
+            for k, v in self._inner.stats().items():
+                own[k] = own.get(k, 0) + v
+        return own
+
+    def close(self) -> None:
+        if self._inner is not None:
+            self._inner.close()
 
 
 class PassRunner:
@@ -54,11 +153,13 @@ class PassRunner:
 
     Parameters
     ----------
-    reader:      an open :class:`ViewStoreReader` (or a path to one).
+    reader:      an open :class:`ViewStoreReader` (or a path to one —
+                 bare, ``file://`` or any registered URI scheme).
     cfg:         the :class:`RCCAConfig` hyper-parameters.
     engine:      per-chunk update implementation ("kernels" | "jnp").
     prefetch:    pipeline depth; 0 disables prefetching (synchronous
-                 reads — the benchmark baseline), 2 = double buffering.
+                 reads — the benchmark baseline), 2 = double buffering,
+                 "auto" calibrates on the first chunks of the fit.
     ckpt_dir:    where pass cursors go; ``None`` disables checkpointing.
     ckpt_every:  cursor save period, in chunks.
     sync_chunks: bound on in-flight chunk updates.  jax dispatch is
@@ -69,22 +170,42 @@ class PassRunner:
                  ``sync_chunks`` chunks the runner blocks on the
                  accumulators, capping live chunks at
                  ``sync_chunks + prefetch``.  1 = strict per-chunk
-                 pipeline; 0 disables the bound (small corpora only).
+                 pipeline; 0 disables the bound (small corpora only);
+                 "auto" calibrates alongside ``prefetch``.
+    merge_group: chunks per canonical merge group (see
+                 ``rcca.MERGE_GROUP_CHUNKS``) — a ``repro.cluster``
+                 coordinator with the same value is bit-identical.
     """
 
     def __init__(self, reader, cfg: RCCAConfig, *, engine: str = DEFAULT_ENGINE,
-                 prefetch: int = 2, ckpt_dir: Optional[str] = None,
-                 ckpt_every: int = 8, keep: int = 2, sync_chunks: int = 4):
+                 prefetch: Union[int, str] = 2, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 8, keep: int = 2,
+                 sync_chunks: Union[int, str] = 4,
+                 merge_group: int = MERGE_GROUP_CHUNKS,
+                 calib_chunks: int = 4):
         self.reader = reader if isinstance(reader, ViewStoreReader) else ViewStoreReader(reader)
         self.cfg = cfg
         self.engine = resolve_engine(engine)
-        self.prefetch = int(prefetch)
-        self.sync_chunks = int(sync_chunks)
+        # each knob calibrates independently: an explicit value for the
+        # other one is never clobbered (prefetch=0 stays the documented
+        # synchronous baseline even under sync_chunks="auto")
+        self._auto_prefetch = prefetch == "auto"
+        self._auto_sync = sync_chunks == "auto"
+        self.auto_tune = self._auto_prefetch or self._auto_sync
+        self.prefetch = 2 if self._auto_prefetch else int(prefetch)
+        self.sync_chunks = 4 if self._auto_sync else int(sync_chunks)
+        self.merge_group = int(merge_group)
         self.ckpt_every = int(ckpt_every)
+        self.calib_chunks = int(calib_chunks)
         self.mgr = CheckpointManager(ckpt_dir, keep=keep) if ckpt_dir else None
-        self._live: Optional[ChunkPrefetcher] = None
+        self._live = None
         self._io = {"chunks": 0, "rows": 0, "bytes": 0, "read_s": 0.0,
                     "io_stall_s": 0.0}
+        self._auto_done = not self.auto_tune
+        self._auto_choice: Optional[dict] = None
+        self._calib_reads: list = []
+        self._calib_computes: list = []
+        self._calib_last_t: Optional[float] = None
 
     # -- chunk source (one instantiation per pass) ------------------------
 
@@ -92,7 +213,12 @@ class PassRunner:
         """Seekable factory handed to ``randomized_cca_iterator`` — the
         positional ``start`` makes resume seek instead of replay."""
         self._harvest_live()
-        self._live = prefetched(self.reader.iter_chunks(start), depth=self.prefetch)
+        if not self._auto_done:
+            self._live = _CalibratingSource(self, start)
+        else:
+            self._live = prefetched(self.reader.iter_chunks(start),
+                                    depth=self.prefetch)
+        self._calib_last_t = None  # pass boundary: no carry-over delta
         return self._live
 
     def _harvest_live(self) -> None:
@@ -102,50 +228,81 @@ class PassRunner:
             self._live.close()
             self._live = None
 
+    # -- prefetch/sync auto-tuning ----------------------------------------
+
+    def _finish_calibration(self) -> None:
+        """Fix prefetch depth + sync_chunks from the calibration
+        window.  The first compute sample is dropped (jit compile);
+        with too few samples the configured defaults stand."""
+        if self._auto_done:
+            return
+        self._auto_done = True
+        # computes[j] is chunk j+1's blocked update (chunk 0 carries the
+        # jit compile and is never sampled); reads align one ahead
+        computes = self._calib_computes
+        reads = self._calib_reads[1:1 + len(computes)]
+        if reads and computes:
+            read_s = sum(reads) / len(reads)
+            compute_s = sum(computes) / len(computes)
+            depth, sync = choose_pipeline(read_s, compute_s)
+            if self._auto_prefetch:
+                self.prefetch = depth
+            if self._auto_sync:
+                self.sync_chunks = sync
+            self._auto_choice = {
+                "prefetch": self.prefetch, "sync_chunks": self.sync_chunks,
+                "read_chunk_s": round(read_s, 5),
+                "compute_chunk_s": round(compute_s, 5),
+            }
+        else:
+            self._auto_choice = {"prefetch": self.prefetch,
+                                 "sync_chunks": self.sync_chunks,
+                                 "read_chunk_s": None, "compute_chunk_s": None}
+
     # -- cursor persistence ----------------------------------------------
 
     def _algo_meta(self) -> dict:
-        c = self.cfg
-        return {"k": c.k, "p": c.p, "q": c.q, "center": c.center,
-                "nu": c.nu, "lam_a": c.lam_a, "lam_b": c.lam_b,
-                "dtype": str(jnp.dtype(c.dtype))}
+        return algo_meta(self.cfg)
 
-    def _save_cursor(self, pass_idx: int, chunk_idx: int, stats, Qa, Qb) -> None:
+    def _save_cursor(self, pass_idx: int, chunk_idx: int, acc, Qa, Qb) -> None:
         step = pass_idx * 1_000_000 + chunk_idx
         self.mgr.save(
             step,
-            {"stats": stats, "Qa": Qa, "Qb": Qb},
+            {"acc": acc.state(), "Qa": Qa, "Qb": Qb},
             metadata={
+                "cursor_fmt": CURSOR_FMT,
                 "pass_idx": pass_idx,
-                "next_chunk": chunk_idx + 1,  # stats already include chunk_idx
+                "next_chunk": chunk_idx + 1,  # acc already includes chunk_idx
                 "engine": self.engine,
+                "merge_group": self.merge_group,
                 "fingerprint": self.reader.fingerprint(),
                 "algo": self._algo_meta(),
             },
         )
 
-    def _cursor_like(self, pass_idx: int) -> dict:
-        r, kt = self.reader, self.cfg.sketch
-        stats = (
-            init_final_stats(kt, r.da, r.db, jnp.float32)
-            if pass_idx == self.cfg.q
-            else init_power_stats(r.da, r.db, kt, jnp.float32)
-        )
-        z = jnp.zeros
-        return {"stats": stats, "Qa": z((r.da, kt), self.cfg.dtype),
-                "Qb": z((r.db, kt), self.cfg.dtype)}
+    def _acc_like(self, pass_idx: int, next_chunk: int) -> SegmentedAccumulator:
+        r = self.reader
+        kind = "final" if pass_idx == self.cfg.q else "power"
+        return SegmentedAccumulator.structure(
+            stats_init_fn(kind, r.da, r.db, self.cfg.sketch),
+            r.n_chunks, self.merge_group, next_chunk)
 
     def restore_cursor(self) -> Optional[dict]:
         """Latest pass cursor as ``randomized_cca_iterator`` resume
         state, validated against this store/config/engine."""
         if self.mgr is None:
             return None
-        # two-phase: read metadata first (it decides the stats pytree
-        # structure), then restore against the right like-tree
+        # two-phase: read metadata first (it decides the accumulator
+        # pytree structure), then restore against the right like-tree
         step = self.mgr.latest_step()
         meta = self.mgr.metadata(step)
         if meta is None:
             return None
+        if meta.get("cursor_fmt") != CURSOR_FMT:
+            raise ValueError(
+                f"pass cursor layout {meta.get('cursor_fmt')} != "
+                f"{CURSOR_FMT} (written by another repro version) — "
+                "start fresh or use the matching code")
         if meta["fingerprint"] != self.reader.fingerprint():
             raise ValueError(
                 "pass cursor was written against a different store "
@@ -159,12 +316,23 @@ class PassRunner:
             raise ValueError(
                 f"pass cursor hyper-parameters {meta['algo']} != runner "
                 f"config {self._algo_meta()}")
-        tree, _ = self.mgr.restore(self._cursor_like(int(meta["pass_idx"])),
-                                   step=step)
+        if meta["merge_group"] != self.merge_group:
+            raise ValueError(
+                f"pass cursor merge_group {meta['merge_group']} != runner "
+                f"merge_group {self.merge_group} — the canonical merge "
+                "structure is part of the accumulator state")
+        pass_idx, next_chunk = int(meta["pass_idx"]), int(meta["next_chunk"])
+        like = self._acc_like(pass_idx, next_chunk)
+        z = jnp.zeros
+        r, kt = self.reader, self.cfg.sketch
+        tree, _ = self.mgr.restore(
+            {"acc": like.state(), "Qa": z((r.da, kt), self.cfg.dtype),
+             "Qb": z((r.db, kt), self.cfg.dtype)},
+            step=step)
         return {
-            "pass_idx": int(meta["pass_idx"]),
-            "chunk_idx": int(meta["next_chunk"]),
-            "stats": tree["stats"],
+            "pass_idx": pass_idx,
+            "chunk_idx": next_chunk,
+            "acc": tree["acc"],
             "Qa": tree["Qa"],
             "Qb": tree["Qb"],
         }
@@ -176,7 +344,7 @@ class PassRunner:
         """All q+1 passes → :class:`RCCAResult`.
 
         ``resume=True`` continues from the latest cursor in ``ckpt_dir``
-        (no-op if none exists).  ``on_chunk(pass_idx, chunk_idx, stats,
+        (no-op if none exists).  ``on_chunk(pass_idx, chunk_idx, acc,
         Qa, Qb)`` is an optional extra per-chunk callback — it runs
         BEFORE the periodic cursor save, so a test/driver can inject a
         kill and the last published cursor stays consistent.
@@ -187,22 +355,34 @@ class PassRunner:
         # previous fit's byte/row counts into this fit's rows/s
         self._io = {k: 0.0 if isinstance(v, float) else 0
                     for k, v in self._io.items()}
-        counters = {"chunks": 0, "rows": 0}
+        counters = {"chunks": 0}
         t0 = time.perf_counter()
 
-        def cb(pass_idx, chunk_idx, stats, Qa, Qb):
+        def cb(pass_idx, chunk_idx, acc, Qa, Qb):
             counters["chunks"] += 1
-            if self.sync_chunks and counters["chunks"] % self.sync_chunks == 0:
-                jax.block_until_ready(stats)  # bound in-flight residency
+            if not self._auto_done:
+                # calibration: block every chunk; compute time is the
+                # gap since the previous blocked chunk minus its read
+                jax.block_until_ready(acc.state())
+                now = time.perf_counter()
+                if self._calib_last_t is not None and \
+                        len(self._calib_reads) > len(self._calib_computes) + 1:
+                    read = self._calib_reads[len(self._calib_computes) + 1]
+                    self._calib_computes.append(
+                        max(0.0, now - self._calib_last_t - read))
+                self._calib_last_t = now
+            elif self.sync_chunks and counters["chunks"] % self.sync_chunks == 0:
+                jax.block_until_ready(acc.state())  # bound in-flight residency
             if on_chunk is not None:
-                on_chunk(pass_idx, chunk_idx, stats, Qa, Qb)
+                on_chunk(pass_idx, chunk_idx, acc, Qa, Qb)
             if self.mgr is not None and (chunk_idx + 1) % self.ckpt_every == 0:
-                self._save_cursor(pass_idx, chunk_idx, stats, Qa, Qb)
+                self._save_cursor(pass_idx, chunk_idx, acc, Qa, Qb)
 
         try:
             res = randomized_cca_iterator(
                 self._source, r.da, r.db, self.cfg, key,
                 resume_state=resume_state, on_pass_end=cb, engine=self.engine,
+                merge_group=self.merge_group, n_chunks=r.n_chunks,
             )
         finally:
             self._harvest_live()
@@ -213,10 +393,13 @@ class PassRunner:
             **{k: round(v, 4) if isinstance(v, float) else v
                for k, v in self._io.items()},
             "prefetch_depth": self.prefetch,
+            "sync_chunks": self.sync_chunks,
             "wall_s": round(wall, 4),
             "rows_per_s": round(rows / wall, 2) if wall > 0 else float("inf"),
             "resumed": resume_state is not None,
         }
+        if self._auto_choice is not None:
+            res.diagnostics["io"]["auto"] = self._auto_choice
         return res
 
     def fit_dist(self, key: jax.Array, mesh, **dist_kwargs) -> RCCAResult:

@@ -1,0 +1,110 @@
+"""URI-scheme dispatch for view-store IO.
+
+The store manifest/shard format is path-string-keyed, so pointing
+``ViewStoreReader`` at a distributed filesystem only needs the IO layer
+swapped: a pluggable opener registry keyed by URL scheme.  Bare paths
+and ``file://`` resolve to the local filesystem; a ``gs://`` / ``s3://``
+/ ``hdfs://`` backend registers a :class:`StoreFS` implementation once
+and every reader, worker and coordinator path works unchanged::
+
+    from repro.store.uri import StoreFS, register_scheme
+
+    class GcsFS(StoreFS):
+        def open(self, path, mode="rb"): ...
+        def exists(self, path): ...
+
+    register_scheme("gs", GcsFS())
+    reader = ViewStoreReader("gs://bucket/corpus")
+
+Remote backends only need ``open``/``exists``: the base class reads
+whole objects and decodes ``.npy`` in memory (a remote read is a
+network transfer either way; mmap is a local-FS optimization).
+"""
+
+from __future__ import annotations
+
+import io
+import os
+import posixpath
+from typing import BinaryIO, Dict, Tuple
+from urllib.parse import urlsplit
+
+import numpy as np
+
+
+class StoreFS:
+    """Minimal filesystem surface a view-store reader needs."""
+
+    #: Whether :meth:`load_array` can honor ``mmap_mode`` (local files).
+    #: A remote backend materializes arrays in memory regardless, so
+    #: the reader must evict its shard cache instead of holding every
+    #: shard it ever touched.
+    supports_mmap = False
+
+    def open(self, path: str, mode: str = "rb") -> BinaryIO:
+        raise NotImplementedError
+
+    def exists(self, path: str) -> bool:
+        raise NotImplementedError
+
+    def join(self, base: str, *parts: str) -> str:
+        """URI path join (POSIX semantics keep the scheme prefix intact)."""
+        return posixpath.join(base, *parts)
+
+    def load_array(self, path: str, *, mmap_mode=None) -> np.ndarray:
+        """Default for remote schemes: fetch the object and decode in
+        memory (``mmap_mode`` is a local-FS optimization and ignored)."""
+        with self.open(path) as f:
+            return np.load(io.BytesIO(f.read()))
+
+
+class LocalFS(StoreFS):
+    """Bare paths and ``file://`` — the default backend."""
+
+    supports_mmap = True
+
+    def open(self, path: str, mode: str = "rb") -> BinaryIO:
+        return open(path, mode)
+
+    def exists(self, path: str) -> bool:
+        return os.path.exists(path)
+
+    def join(self, base: str, *parts: str) -> str:
+        return os.path.join(base, *parts)
+
+    def load_array(self, path: str, *, mmap_mode=None) -> np.ndarray:
+        return np.load(path, mmap_mode=mmap_mode)
+
+
+_LOCAL = LocalFS()
+_REGISTRY: Dict[str, StoreFS] = {}
+
+
+def register_scheme(scheme: str, fs: StoreFS) -> None:
+    """Make ``scheme://...`` store paths resolve through ``fs``."""
+    _REGISTRY[scheme.lower()] = fs
+
+
+def registered_schemes() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_store_path(path: str) -> Tuple[StoreFS, str]:
+    """Split a store path into (filesystem, backend-native path).
+
+    Bare paths, ``file://`` URIs and one-letter "schemes" (Windows
+    drives) map to :class:`LocalFS`; anything else must have been
+    :func:`register_scheme`-d.
+    """
+    parts = urlsplit(path)
+    scheme = parts.scheme.lower()
+    if scheme in ("", "file") or len(scheme) == 1:
+        return _LOCAL, parts.path if scheme == "file" else path
+    fs = _REGISTRY.get(scheme)
+    if fs is None:
+        raise KeyError(
+            f"no opener registered for scheme {scheme!r} (store path "
+            f"{path!r}); call repro.store.uri.register_scheme({scheme!r}, fs) "
+            f"with a StoreFS implementation. Registered: "
+            f"{registered_schemes() or '(none)'}")
+    return fs, path

@@ -96,10 +96,11 @@ def test_iterator_resume_equivalence(views):
     # capture state mid final pass (pass_idx=1 after q=1 power pass)
     snap = {}
 
-    def capture(pass_idx, chunk_idx, stats, Qa, Qb):
+    def capture(pass_idx, chunk_idx, acc, Qa, Qb):
         if pass_idx == 1 and chunk_idx == 1:
             snap["state"] = {
-                "pass_idx": 1, "chunk_idx": 2, "stats": stats, "Qa": Qa, "Qb": Qb,
+                "pass_idx": 1, "chunk_idx": 2, "acc": acc.state(),
+                "Qa": Qa, "Qb": Qb,
             }
 
     randomized_cca_iterator(lambda: iter(chunks), da, db, cfg,
@@ -198,3 +199,40 @@ def test_streaming_horst_and_warmstart_passes(views):
     warm_passes = float(warm.objective_history[0]) + (1 + 1)  # + rcca's q+1
     assert float(jnp.sum(warm.rho)) > 0.985 * float(jnp.sum(ex.rho))
     assert warm_passes < cold_passes / 3  # ≥3× fewer data passes
+
+
+def test_rcca_warmstart_cuts_horst_sweeps(views):
+    """Paper Table 2b (Horst+rcca): warm-starting the Horst iteration
+    from the RandomizedCCA output reaches the same correlation in
+    measurably fewer sweeps than a random init (seeded, tolerance on a
+    fixed target).  Uses the streaming Horst — sweeps are data passes."""
+    from repro.core.horst import horst_cca_streaming
+
+    A, B = views
+    da, db = A.shape[1], B.shape[1]
+
+    def src():
+        for lo in range(0, A.shape[0], 750):
+            yield np.asarray(A[lo:lo + 750]), np.asarray(B[lo:lo + 750])
+
+    ex = exact_cca(A, B, K, LAM, LAM)
+    # calibrated so the verdict has margin on both sides: at 0.997·opt
+    # the cold start sits at 0.9911 after one sweep (clearly below) and
+    # the warm start at 0.9983 (clearly above)
+    target = 0.997 * float(jnp.sum(ex.rho))
+    rc = randomized_cca(A, B, RCCAConfig(k=K, p=16, q=1, lam_a=LAM, lam_b=LAM),
+                        jax.random.PRNGKey(7))
+
+    def min_sweeps(**init):
+        for iters in (1, 2, 3, 4, 6, 8):
+            h = horst_cca_streaming(
+                src, da, db, HorstConfig(k=K, iters=iters, cg_iters=2),
+                key=jax.random.PRNGKey(11), lam_a=LAM, lam_b=LAM, **init)
+            if float(jnp.sum(h.rho)) >= target:
+                return iters
+        return 99
+
+    warm = min_sweeps(init_Xb=rc.Xb, init_Xa=rc.Xa)
+    cold = min_sweeps()
+    assert warm < cold, (warm, cold)
+    assert warm <= max(1, cold // 2), (warm, cold)  # ≥2× fewer sweeps

@@ -1,0 +1,112 @@
+"""Fault tolerance of the cluster barrier: killed workers, stale
+partials from earlier fits, duplicate publications and unrecoverable
+shards.  The invariant under every recoverable failure is the same as
+the happy path — the coordinator output stays bit-identical to the
+single-process ``randomized_cca_streaming`` on the same store."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rcca import RCCAConfig, randomized_cca_streaming
+from repro.cluster import ClusterCoordinator
+from repro.cluster import partials as pt
+from repro.cluster.worker import KILL_ENV
+from repro.data import PlantedCCAData
+from repro.store import ingest_planted
+
+N, DA, DB, CHUNK = 1536, 28, 20, 128  # 12 chunks, 6 merge groups
+G = 2
+CFG = RCCAConfig(k=4, p=8, q=1, nu=0.01, center=True)
+KEY = 5
+
+
+@pytest.fixture(scope="module")
+def store(tmp_path_factory):
+    data = PlantedCCAData(n=N, da=DA, db=DB, rank=5, noise=0.4,
+                          seed=11, chunk=CHUNK)
+    return ingest_planted(str(tmp_path_factory.mktemp("clfail") / "store"),
+                          data)
+
+
+@pytest.fixture(scope="module")
+def ref(store):
+    A, B = store.materialize()
+    Ac = jnp.asarray(A).reshape(store.n_chunks, CHUNK, DA)
+    Bc = jnp.asarray(B).reshape(store.n_chunks, CHUNK, DB)
+    return randomized_cca_streaming(Ac, Bc, CFG, jax.random.PRNGKey(KEY),
+                                    engine="jnp", merge_group=G)
+
+
+def assert_bit_identical(r1, r2):
+    for name in ("Xa", "Xb", "rho", "Qa", "Qb"):
+        a1, a2 = np.asarray(getattr(r1, name)), np.asarray(getattr(r2, name))
+        assert np.array_equal(a1, a2), f"{name} differs"
+
+
+@pytest.mark.parametrize("kill", ["0:2", "1:2"],
+                         ids=["mid-power-pass", "mid-final-pass"])
+def test_killed_worker_redispatches_bit_identical(store, ref, tmp_path, kill):
+    """Worker 0 dies hard (os._exit, no cleanup) mid-pass; the barrier
+    re-dispatches its unfinished merge groups to a repair worker and the
+    merged result still matches single-process bitwise."""
+    co = ClusterCoordinator(store, CFG, str(tmp_path / "cl"), n_workers=2,
+                            engine="jnp", merge_group=G, worker_timeout=300,
+                            env_overrides={0: {KILL_ENV: kill}})
+    res = co.fit(jax.random.PRNGKey(KEY))
+    assert_bit_identical(ref, res)
+    killed_pass = int(kill.split(":")[0])
+    passes = res.diagnostics["cluster"]["passes"]
+    assert passes[killed_pass]["redispatched_groups"]  # repair happened
+    other = 1 - killed_pass
+    assert passes[other]["redispatched_groups"] == []
+
+
+def test_stale_partials_from_previous_fit_are_replaced(store, ref, tmp_path):
+    """Re-using a cluster dir across fits: partials/rounds of the first
+    fit carry a different fit id, so the second fit must not merge them
+    — stale work is re-dispatched (here: recomputed) and replaced."""
+    cd = str(tmp_path / "cl")
+    co = ClusterCoordinator(store, CFG, cd, n_workers=2, engine="jnp",
+                            merge_group=G)
+    co.fit(jax.random.PRNGKey(123))  # different key → different partials
+    res = co.fit(jax.random.PRNGKey(KEY))
+    assert_bit_identical(ref, res)
+
+
+def test_duplicate_publication_merges_once(store, ref, tmp_path):
+    """Two workers racing the same merge group (the presumed-dead owner
+    coming back) is safe: content is deterministic and each group id
+    enters the merge exactly once."""
+    from repro.cluster import run_worker
+
+    cd = str(tmp_path / "cl")
+    co = ClusterCoordinator(store, CFG, cd, n_workers=2, engine="jnp",
+                            merge_group=G)
+    res = co.fit(jax.random.PRNGKey(KEY))
+    assert_bit_identical(ref, res)
+    # the "zombie owner" republishes every group of pass 0 after the
+    # fit finished — recognized as already-valid, nothing double-merges
+    assert run_worker(store.path, cd, 0, 2, 0, prefetch=0) == 0
+    assert run_worker(store.path, cd, 1, 2, 0, prefetch=0) == 0
+
+
+def test_unrecoverable_shard_raises_with_missing_groups(store, tmp_path):
+    """When every dispatch of a shard dies (kill env applies to repair
+    workers too via a global override), the barrier gives up after
+    max_redispatch rounds with a diagnosable error."""
+    co = ClusterCoordinator(store, CFG, str(tmp_path / "cl"), n_workers=1,
+                            engine="jnp", merge_group=G, max_redispatch=1,
+                            env_overrides={0: {KILL_ENV: "0:0"}})
+    # make the repair worker die too: patch _spawn to always inject
+    orig = co._spawn
+
+    def spawn_all_killed(shard, pass_idx, **kw):
+        kw["extra_env"] = {KILL_ENV: "0:0"}
+        return orig(shard, pass_idx, **kw)
+
+    co._spawn = spawn_all_killed
+    with pytest.raises(RuntimeError, match="missing"):
+        co.fit(jax.random.PRNGKey(KEY))

@@ -223,3 +223,128 @@ def test_cca_fit_data_flag(tmp_path):
     # second invocation reuses the published store (no --ingest)
     cca_main(["--smoke", "--mode", "stream", "--data", store,
               "--engine", "jnp"])
+
+
+# -- URI scheme dispatch ---------------------------------------------------
+
+
+from repro.store import StoreFS
+
+
+class _MemFS(StoreFS):
+    """Fake distributed-FS backend: whole files in a dict.  Implements
+    only open/exists — load_array falls back to the StoreFS default
+    (fetch + in-memory .npy decode), like a real remote backend."""
+
+    def __init__(self):
+        self.files = {}
+
+    def load_local(self, reader):
+        for name in os.listdir(reader.path):
+            with open(os.path.join(reader.path, name), "rb") as f:
+                self.files[f"mem://corpus/{name}"] = f.read()
+
+    def open(self, path, mode="rb"):
+        import io
+
+        if path not in self.files:
+            raise FileNotFoundError(path)
+        return io.BytesIO(self.files[path])
+
+    def exists(self, path):
+        return path in self.files
+
+
+def test_uri_scheme_dispatch_mem(store):
+    """A fake mem:// backend registered through the opener registry
+    serves a byte-identical store: same chunks, same fingerprint, and
+    verify() passes — the gs://-shaped plug-in point works."""
+    from repro.store import register_scheme
+
+    fs = _MemFS()
+    fs.load_local(store)
+    register_scheme("mem", fs)
+    r = ViewStoreReader("mem://corpus")
+    assert (r.n, r.da, r.db, r.chunk) == (store.n, store.da, store.db,
+                                          store.chunk)
+    assert r.fingerprint() == store.fingerprint()
+    r.verify()
+    for i in (0, 3, store.n_chunks - 1):
+        a0, b0 = store.get_chunk(i)
+        a1, b1 = r.get_chunk(i)
+        np.testing.assert_array_equal(a0, a1)
+        np.testing.assert_array_equal(b0, b1)
+
+
+def test_uri_unregistered_scheme_fails_helpfully():
+    with pytest.raises(KeyError, match="register_scheme"):
+        ViewStoreReader("gs-unregistered://bucket/corpus")
+
+
+def test_file_uri_is_local(store):
+    r = ViewStoreReader("file://" + os.path.abspath(store.path))
+    assert r.fingerprint() == store.fingerprint()
+
+
+# -- worker sharding: seek + merge-group striping --------------------------
+
+
+def test_row_shard_start_seeks(store):
+    """start= resumes a worker mid-shard: exactly the owned chunks at or
+    past the seek point are yielded."""
+    want = [i for i in range(1, store.n_chunks, 3) if i >= 5]
+    got = list(store.row_shard(1, 3, start=5))
+    assert len(got) == len(want)
+    for i, (a, _) in zip(want, got):
+        np.testing.assert_array_equal(a, store.get_chunk(i)[0])
+
+
+def test_row_shard_group_striding_partitions(store):
+    """group= assigns whole merge groups; the union over workers is
+    still an exact partition of the corpus."""
+    from repro.store import shard_chunks
+
+    n_shards, group = 2, 4
+    seen = []
+    for w in range(n_shards):
+        idxs = list(shard_chunks(w, n_shards, store.n_chunks, group=group))
+        assert all((i // group) % n_shards == w for i in idxs)
+        got = list(store.row_shard(w, n_shards, group=group))
+        assert len(got) == len(idxs)
+        seen += idxs
+    assert sorted(seen) == list(range(store.n_chunks))
+
+
+# -- prefetch/sync_chunks auto-tuning --------------------------------------
+
+
+def test_choose_pipeline_heuristic():
+    from repro.store import choose_pipeline
+
+    # page-cache regime: reads are noise → no prefetch thread
+    assert choose_pipeline(0.0001, 0.1) == (0, 4)
+    # balanced: classic double buffering, strict in-flight bound
+    depth, sync = choose_pipeline(0.1, 0.1)
+    assert depth == 2 and sync == 1
+    # heavily IO-bound: deeper pipeline, capped
+    depth, sync = choose_pipeline(1.0, 0.05)
+    assert depth == 8 and sync == 1
+
+
+def test_auto_tune_matches_fixed_depth_bitwise(store):
+    """prefetch='auto' only changes pipelining, never numerics: the fit
+    equals a fixed-depth fit bitwise and the chosen knobs are reported."""
+    cfg = RCCAConfig(k=4, p=8, q=1, nu=0.01)
+    key = jax.random.PRNGKey(0)
+    fixed = PassRunner(store, cfg, engine="jnp", prefetch=2).fit(key)
+    auto = PassRunner(store, cfg, engine="jnp", prefetch="auto",
+                      sync_chunks="auto").fit(key)
+    for name in ("Xa", "Xb", "rho", "Qa", "Qb"):
+        np.testing.assert_array_equal(np.asarray(getattr(fixed, name)),
+                                      np.asarray(getattr(auto, name)))
+    chosen = auto.diagnostics["io"]["auto"]
+    assert isinstance(chosen["prefetch"], int)
+    assert isinstance(chosen["sync_chunks"], int)
+    assert auto.diagnostics["io"]["prefetch_depth"] == chosen["prefetch"]
+    # every chunk of every pass was still consumed exactly once
+    assert auto.diagnostics["io"]["rows"] == fixed.diagnostics["io"]["rows"]
