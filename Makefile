@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-quick verify-cluster bench bench-kernels bench-io bench-cluster sweep-blocks
+.PHONY: verify verify-quick verify-cluster verify-topology bench bench-kernels bench-io bench-cluster sweep-blocks
 
 # full tier-1 suite + the interpret-mode kernel-parity subset
 verify:
@@ -13,6 +13,11 @@ verify-quick:
 # only the multi-worker cluster + store suites
 verify-cluster:
 	bash scripts/verify.sh --cluster
+
+# execution-topology parity (Local ≡ Sharded ≡ Cluster ≡ Hybrid bitwise)
+# + hybrid fault tolerance, under a forced 4-device host mesh
+verify-topology:
+	bash scripts/verify.sh --topology
 
 # all BENCH jsons (the committed per-PR perf trajectory under results/)
 bench: bench-kernels bench-io bench-cluster

@@ -4,6 +4,8 @@
 #   scripts/verify.sh            # full tier-1 suite + kernel-parity subset
 #   scripts/verify.sh --quick    # only the interpret-mode kernel-parity subset
 #   scripts/verify.sh --cluster  # only the multi-worker cluster + store suites
+#   scripts/verify.sh --topology # exec topology-parity + hybrid suites under
+#                                # a forced 4-device host mesh
 #
 # Extra args after the mode flag are forwarded to pytest.
 set -euo pipefail
@@ -16,6 +18,9 @@ if [[ "${1:-}" == "--quick" ]]; then
   shift
 elif [[ "${1:-}" == "--cluster" ]]; then
   mode=cluster
+  shift
+elif [[ "${1:-}" == "--topology" ]]; then
+  mode=topology
   shift
 fi
 
@@ -36,9 +41,20 @@ cluster() {
     tests/test_store.py tests/test_store_resume.py "$@"
 }
 
+# execution-topology parity: Local ≡ Sharded ≡ Cluster ≡ Hybrid bitwise
+# (both engines), hybrid worker kill/resume, heartbeat re-dispatch —
+# with the in-process Sharded rows on a REAL 4-device host mesh (the
+# flag must be set before jax initializes, hence here)
+topology() {
+  XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4" \
+    python -m pytest -q tests/test_exec_topologies.py \
+    tests/test_cluster_failures.py "$@"
+}
+
 case "$mode" in
-  quick)   parity "$@" ;;
-  cluster) cluster "$@" ;;
+  quick)    parity "$@" ;;
+  cluster)  cluster "$@" ;;
+  topology) topology "$@" ;;
   *)
     # the full pytest run already covers the cluster suite; parity is
     # re-run standalone to keep the kernel gate loud and isolated

@@ -7,22 +7,29 @@ claim as a subsystem): for each of the q+1 data passes the coordinator
 1. publishes the pass ROUND (Qa/Qb bases + binding metadata) under the
    cluster directory,
 2. spawns one worker process per shard (``python -m
-   repro.cluster.worker`` — any external scheduler could do the same),
+   repro.cluster.worker`` — any external scheduler could do the same);
+   with ``devices_per_worker > 1`` each worker folds its merge groups
+   one-per-device over a local mesh (the HYBRID topology — the spawner
+   forces ``--xla_force_host_platform_device_count`` into the worker
+   environment so the layout works on accelerator-less hosts too),
 3. runs the BARRIER: polls for per-merge-group partials, re-dispatching
-   the merge groups of dead, stale or straggling workers to fresh
-   repair workers (at-most-once per group id — duplicates are
+   the merge groups of dead, stale-heartbeat or straggling workers to
+   fresh repair workers (at-most-once per group id — duplicates are
    byte-identical and ignored),
-4. merges the partials with the deterministic fixed-order pairwise
-   tree (``rcca.reduce_group_partials``) — bit-reproducible regardless
-   of completion order — and either rotates the bases
-   (``power_update_Q``) or finishes (``finalize_result``).
+4. STREAMS the deterministic fixed-order pairwise tree directly from
+   the on-disk partials (``SegmentedAccumulator.push_group`` in group
+   order — only O(log G) group partials are ever resident, so huge
+   k̃·d partial sets merge in bounded memory) and either rotates the
+   bases (``power_update_Q``) or finishes (``finalize_result``).
 
-Because workers fold whole merge groups with the same jitted updates
-and the merge tree is the same fixed structure the single-process
-drivers use, the coordinator's result is BIT-IDENTICAL to
-``randomized_cca_streaming`` on the same store for any worker count
-(tests/test_cluster.py) and under injected worker kills
-(tests/test_cluster_failures.py).
+Because workers fold whole merge groups with the same per-chunk updates
+through the one canonical fold (``repro.exec``), and the merge tree is
+the same fixed structure the single-process drivers use, the
+coordinator's result is BIT-IDENTICAL to ``randomized_cca_streaming``
+on the same store for any worker count AND any devices-per-worker
+layout (tests/test_cluster.py, tests/test_exec_topologies.py), under
+injected worker kills (tests/test_cluster_failures.py) and injected
+worker hangs caught by the heartbeat monitor.
 """
 
 from __future__ import annotations
@@ -38,17 +45,16 @@ import jax
 
 from repro.core.rcca import (
     DEFAULT_ENGINE,
-    MERGE_GROUP_CHUNKS,
     RCCAConfig,
     RCCAResult,
     algo_meta,
     finalize_result,
     init_Q,
     power_update_Q,
-    reduce_group_partials,
     resolve_engine,
     stats_init_fn,
 )
+from repro.exec import MERGE_GROUP_CHUNKS, SegmentedAccumulator
 from repro.store import ViewStoreReader
 
 from . import partials as pt
@@ -61,19 +67,32 @@ class ClusterCoordinator:
     ----------
     store:          view store path/URI, or an open ``ViewStoreReader``.
     cfg:            :class:`RCCAConfig` hyper-parameters.
-    cluster_dir:    shared directory for rounds/partials/cursors/logs —
-                    on a real cluster this lives on the DFS all workers
-                    mount; kill/resume state never leaves it.
+    cluster_dir:    shared directory for rounds/partials/cursors/
+                    heartbeats/logs — on a real cluster this lives on
+                    the DFS all workers mount; kill/resume state never
+                    leaves it.
     n_workers:      worker processes per pass.
+    devices_per_worker: local devices each worker folds merge groups
+                    over (>1 = the Hybrid topology; workers are spawned
+                    with the forced-host-device XLA flag so the layout
+                    runs on any host).  Results are bitwise invariant
+                    to this knob.
     engine:         data-pass engine, binding for every partial.
     merge_group:    chunks per merge group (the partial granularity).
                     MUST equal the single-process driver's value for
                     bit-identical results (default: the shared
-                    ``rcca.MERGE_GROUP_CHUNKS``).
+                    ``repro.exec.MERGE_GROUP_CHUNKS``).
     prefetch:       per-worker chunk prefetch depth.
     worker_timeout: seconds a pass may run before live workers are
                     declared stragglers, killed and their missing
                     groups re-dispatched.
+    heartbeat_timeout: seconds a worker's heartbeat beacon may go
+                    stale before the worker is declared stuck and
+                    killed (re-dispatch happens through the normal
+                    dead-worker path).  ``None`` disables the monitor
+                    and leaves only the wall-clock ``worker_timeout``.
+                    Set it comfortably above per-group fold time (the
+                    beacon beats at start and every group/cursor save).
     max_redispatch: repair rounds per pass before giving up.
     env_overrides:  {shard: {env}} merged into that shard's initial
                     worker process — the failure-injection hook
@@ -81,9 +100,11 @@ class ClusterCoordinator:
     """
 
     def __init__(self, store, cfg: RCCAConfig, cluster_dir: str, *,
-                 n_workers: int = 2, engine: str = DEFAULT_ENGINE,
+                 n_workers: int = 2, devices_per_worker: int = 1,
+                 engine: str = DEFAULT_ENGINE,
                  merge_group: int = MERGE_GROUP_CHUNKS, prefetch: int = 2,
                  ckpt_every: int = 4, worker_timeout: float = 600.0,
+                 heartbeat_timeout: Optional[float] = None,
                  max_redispatch: int = 3,
                  env_overrides: Optional[Dict[int, dict]] = None,
                  python: str = sys.executable):
@@ -94,16 +115,20 @@ class ClusterCoordinator:
         self.cfg = cfg
         self.cluster_dir = cluster_dir
         self.n_workers = int(n_workers)
+        self.devices_per_worker = int(devices_per_worker)
         self.engine = resolve_engine(engine)
         self.merge_group = int(merge_group)
         self.prefetch = int(prefetch)
         self.ckpt_every = int(ckpt_every)
         self.worker_timeout = worker_timeout
+        self.heartbeat_timeout = heartbeat_timeout
         self.max_redispatch = int(max_redispatch)
         self.env_overrides = env_overrides or {}
         self.python = python
         if self.n_workers < 1:
             raise ValueError("need at least one worker")
+        if self.devices_per_worker < 1:
+            raise ValueError("need at least one device per worker")
         os.makedirs(os.path.join(cluster_dir, "logs"), exist_ok=True)
 
     # -- process management -----------------------------------------------
@@ -122,6 +147,8 @@ class ClusterCoordinator:
                "--pass-idx", str(pass_idx),
                "--prefetch", str(self.prefetch),
                "--ckpt-every", str(self.ckpt_every)]
+        if self.devices_per_worker > 1:
+            cmd += ["--devices", str(self.devices_per_worker)]
         if groups is not None:
             cmd += ["--groups", ",".join(str(g) for g in groups)]
         env = dict(os.environ)
@@ -130,6 +157,13 @@ class ClusterCoordinator:
             os.path.abspath(__file__))))
         env["PYTHONPATH"] = src_root + (
             os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        if self.devices_per_worker > 1:
+            # hybrid workers need their device mesh before jax wakes up;
+            # on accelerator hosts the flag is inert (it only forces the
+            # HOST platform's device count)
+            flag = ("--xla_force_host_platform_device_count="
+                    f"{self.devices_per_worker}")
+            env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + flag).strip()
         if extra_env:
             env.update(extra_env)
         log = open(os.path.join(self.cluster_dir, "logs",
@@ -145,17 +179,45 @@ class ClusterCoordinator:
 
     # -- one pass ---------------------------------------------------------
 
+    def _kill_stale(self, procs: Dict[int, subprocess.Popen], pass_idx: int,
+                    spawned_at: Dict[int, float]) -> List[int]:
+        """Heartbeat monitor: kill live workers whose beacon (or, if
+        they never beat, whose spawn) is older than the staleness
+        threshold.  The kill turns them into ordinary dead workers, so
+        the existing re-dispatch path picks their groups up — long
+        before the wall-clock pass timeout fires."""
+        if self.heartbeat_timeout is None:
+            return []
+        stale = []
+        now = time.perf_counter()
+        for shard, p in procs.items():
+            if p.poll() is not None:
+                continue
+            # age is bounded by time-since-spawn: a beacon left behind by
+            # an earlier fit in the same cluster_dir (same shard/pass key)
+            # must never condemn a freshly spawned worker that hasn't had
+            # time to beat yet
+            since_spawn = now - spawned_at.get(shard, now)
+            age = pt.heartbeat_age(self.cluster_dir, shard, pass_idx)
+            age = since_spawn if age is None else min(age, since_spawn)
+            if age > self.heartbeat_timeout:
+                p.kill()
+                stale.append(shard)
+        return stale
+
     def _run_pass(self, pass_idx: int, kind: str, Qa, Qb,
                   expect: dict) -> tuple:
-        """Spawn → barrier → merged stats (+ per-pass diagnostics)."""
+        """Spawn → barrier → streamed tree merge (+ per-pass diagnostics)."""
         t0 = time.perf_counter()
         pt.write_round(self.cluster_dir, pass_idx, Qa, Qb,
                        {**expect, "n_shards": self.n_workers})
         procs = {s: self._spawn(s, pass_idx,
                                 extra_env=self.env_overrides.get(s))
                  for s in range(self.n_workers) if self._owned(s)}
+        spawned_at = {s: time.perf_counter() for s in procs}
         n_spawned = len(procs)
         redispatched: List[int] = []
+        stale_shards: List[int] = []
         attempts = 0
         deadline = (time.perf_counter() + self.worker_timeout
                     if self.worker_timeout else None)
@@ -165,6 +227,7 @@ class ClusterCoordinator:
             missing = [g for g in range(self.n_groups) if g not in have]
             if not missing:
                 break
+            stale_shards.extend(self._kill_stale(procs, pass_idx, spawned_at))
             timed_out = deadline is not None and time.perf_counter() > deadline
             if timed_out:
                 for p in procs.values():  # stragglers: kill, then re-dispatch
@@ -184,6 +247,7 @@ class ClusterCoordinator:
                 redispatched.extend(missing)
                 repair = self.n_workers + attempts - 1
                 procs = {repair: self._spawn(repair, pass_idx, groups=missing)}
+                spawned_at = {repair: time.perf_counter()}
                 n_spawned += 1
                 deadline = (time.perf_counter() + self.worker_timeout
                             if self.worker_timeout else None)
@@ -192,22 +256,28 @@ class ClusterCoordinator:
             p.poll()
         t_merge = time.perf_counter()
         r = self.reader
-        stats_by_group = {}
+        # Streamed reduce: push each on-disk partial straight into the
+        # fixed pairwise tree in group order and drop it — O(log G)
+        # stats pytrees resident no matter how many groups the pass has
+        # (the binding is re-validated per partial at merge time, the
+        # at-most-once guard against a racing stale publisher).
+        acc = SegmentedAccumulator(
+            stats_init_fn(kind, r.da, r.db, self.cfg.sketch),
+            r.n_chunks, self.merge_group)
         for g in range(self.n_groups):
             loaded = pt.read_partial(self.cluster_dir, pass_idx, g)
             assert loaded is not None, g
             stats, meta = loaded
             if not pt.binding_matches(meta, expect):  # at-most-once guard
                 raise RuntimeError(f"stale partial for group {g} at merge time")
-            stats_by_group[g] = stats
-        merged = reduce_group_partials(
-            stats_by_group, stats_init_fn(kind, r.da, r.db, self.cfg.sketch),
-            r.n_chunks, self.merge_group)
+            acc.push_group(g, stats)
+        merged = acc.result()
         now = time.perf_counter()
         diag = {"wall_s": round(now - t0, 4),
                 "merge_s": round(now - t_merge, 4),
                 "workers_spawned": n_spawned,
-                "redispatched_groups": sorted(set(redispatched))}
+                "redispatched_groups": sorted(set(redispatched)),
+                "stale_heartbeat_shards": sorted(set(stale_shards))}
         return merged, diag
 
     # -- driving ----------------------------------------------------------
@@ -240,6 +310,8 @@ class ClusterCoordinator:
         res = finalize_result(stats, Qa, Qb, cfg, r.da, r.db)
         res.diagnostics["cluster"] = {
             "n_workers": self.n_workers,
+            "devices_per_worker": self.devices_per_worker,
+            "topology": "hybrid" if self.devices_per_worker > 1 else "cluster",
             "n_groups": self.n_groups,
             "merge_group": self.merge_group,
             "fit_id": fit_id,

@@ -28,7 +28,14 @@ Layout under a cluster directory::
       rounds/pass_00000/          # Qa, Qb + round metadata (repro.ckpt)
       partials/p00000_g00003/     # one merge group's stats + metadata
       workers/shard_000/pass_00000/   # per-worker resume cursors
+      heartbeats/shard_000_p00000 # liveness beacons (mtime = last beat)
       logs/w000_p00000.log        # captured worker stdout/stderr
+
+Heartbeats are the coordinator's liveness signal beyond process exit
+codes: a worker touches its per-shard beacon at start and at every
+merge-group boundary / cursor save, so a stuck (but alive) worker goes
+stale long before the wall-clock ``worker_timeout`` — the first
+scheduler signal of the ROADMAP's speculative-re-dispatch follow-up.
 """
 
 from __future__ import annotations
@@ -62,6 +69,32 @@ def partial_path(cluster_dir: str, pass_idx: int, group: int) -> str:
 def worker_cursor_dir(cluster_dir: str, shard: int, pass_idx: int) -> str:
     return os.path.join(cluster_dir, "workers", f"shard_{shard:03d}",
                         f"pass_{pass_idx:05d}")
+
+
+def heartbeat_path(cluster_dir: str, shard: int, pass_idx: int) -> str:
+    return os.path.join(cluster_dir, "heartbeats",
+                        f"shard_{shard:03d}_p{pass_idx:05d}")
+
+
+def touch_heartbeat(cluster_dir: str, shard: int, pass_idx: int) -> None:
+    """Beat once: create/refresh the beacon's mtime (cheap — an utime
+    on the shared FS; workers beat at start and at every merge-group
+    boundary and cursor save)."""
+    path = heartbeat_path(cluster_dir, shard, pass_idx)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a"):
+        pass
+    os.utime(path, None)
+
+
+def heartbeat_age(cluster_dir: str, shard: int, pass_idx: int) -> Optional[float]:
+    """Seconds since the shard last beat, or None if it never has —
+    the coordinator compares this against its staleness threshold."""
+    try:
+        return max(0.0, time.time() - os.path.getmtime(
+            heartbeat_path(cluster_dir, shard, pass_idx)))
+    except OSError:
+        return None
 
 
 def binding_meta(*, fit_id: str, pass_idx: int, kind: str, engine: str,

@@ -10,8 +10,21 @@ coordinator published (Qa/Qb bases, engine, merge-group size, binding
 metadata).  The worker streams its merge groups — strided whole-group
 assignment via ``ViewStoreReader.row_shard(group=...)``, prefetched
 through :class:`~repro.store.prefetch.ChunkPrefetcher` — folds each
-group's chunks with the same jitted update the single-process drivers
-use, and atomically publishes one partial per group.
+group's chunks through the ONE canonical fold loop
+(``repro.exec.run_fold`` feeding a sink-mode
+``SegmentedAccumulator``), and atomically publishes one partial per
+group.
+
+With ``--devices N > 1`` the worker is a HYBRID worker: it builds a
+1-D mesh over its local devices and folds whole merge groups
+one-per-device under shard_map (``repro.exec.fold_groups_on_mesh``) —
+each group's left-fold runs on a single device with the exact
+per-chunk update arithmetic, so the published partials are bitwise
+identical to the sequential worker's and the coordinator's tree merge
+(and the final result) cannot tell the layouts apart.  On hosts
+without accelerators the coordinator forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` into the
+worker's environment, so the layout is exercisable anywhere.
 
 Fault tolerance:
 
@@ -20,56 +33,80 @@ Fault tolerance:
   worker re-run with the same shard id resumes MID-SHARD: published
   groups are skipped, the in-flight group continues from the cursor,
   and ``row_shard(start=...)`` seeks the store so the folded prefix is
-  never re-read;
+  never re-read.  (Device-parallel workers publish whole groups and
+  resume at group granularity — published groups are skipped, the rest
+  are redone.)
 - partials already published (by a previous incarnation or by a repair
   worker that took over this shard) are detected by their binding
   metadata and skipped — publishing is idempotent and merge-safe
   because partial content is a deterministic function of (store,
-  round, group).
+  round, group);
+- a per-shard HEARTBEAT beacon is touched at start and at every
+  merge-group boundary / cursor save; the coordinator re-dispatches
+  shards whose beacon goes stale (a stuck-but-alive worker) without
+  waiting for the wall-clock pass timeout.
 
 ``RCCA_CLUSTER_KILL_AT=<pass>:<chunk>`` simulates a hard crash right
 after folding that chunk (tests/test_cluster_failures.py) — the CLI
 dies with ``os._exit``, skipping every cleanup path, exactly like a
-lost machine.
+lost machine.  ``RCCA_CLUSTER_HANG_AT=<pass>:<chunk>`` instead wedges
+the worker in a sleep loop at that chunk (heartbeat goes stale, the
+process stays alive) — the stuck-worker case only heartbeats detect.
 """
 
 from __future__ import annotations
 
 import argparse
 import os
+import time
 from typing import Optional, Sequence
+
+import numpy as np
 
 import jax
 
 from repro.ckpt import CheckpointManager
-from repro.core.rcca import SegmentedAccumulator, jit_update_fn, stats_init_fn
+from repro.core.rcca import jit_update_fn, stats_init_fn, update_fn
+from repro.exec import (SegmentedAccumulator, fold_groups_on_mesh,
+                        n_full_chunks, run_fold)
 from repro.store import ViewStoreReader, prefetched, shard_chunks
 
 from . import partials as pt
 
 KILL_ENV = "RCCA_CLUSTER_KILL_AT"
+HANG_ENV = "RCCA_CLUSTER_HANG_AT"
 
 
 class WorkerKilled(RuntimeError):
     """Injected crash (see :data:`KILL_ENV`)."""
 
 
-def _parse_kill(pass_idx: int) -> Optional[int]:
-    spec = os.environ.get(KILL_ENV)
+def _parse_injection(env: str, pass_idx: int) -> Optional[int]:
+    spec = os.environ.get(env)
     if not spec:
         return None
     p, _, c = spec.partition(":")
     return int(c) if int(p) == pass_idx else None
 
 
+def _hang_forever(shard: int, chunk_idx: int) -> None:
+    print(f"[worker {shard}] injected hang at chunk {chunk_idx}", flush=True)
+    while True:  # stuck-but-alive: no beats, no exit
+        time.sleep(0.5)
+
+
 def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
                pass_idx: int, *, groups: Optional[Sequence[int]] = None,
                prefetch: int = 2, ckpt_every: int = 4,
                round_wait_s: float = 30.0,
-               kill_at_chunk: Optional[int] = None) -> int:
+               kill_at_chunk: Optional[int] = None,
+               hang_at_chunk: Optional[int] = None,
+               devices: int = 1) -> int:
     """Process one shard of one pass; returns the number of partials
     this invocation published.  ``groups`` overrides the strided
-    assignment (the coordinator's re-dispatch path)."""
+    assignment (the coordinator's re-dispatch path); ``devices > 1``
+    folds merge groups one-per-device over the local mesh (the Hybrid
+    topology's worker side)."""
     reader = ViewStoreReader(store)
     Qa, Qb, meta = pt.read_round(cluster_dir, pass_idx, wait_s=round_wait_s)
     if meta["fingerprint"] != reader.fingerprint():
@@ -78,7 +115,9 @@ def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
             f"store (fingerprint {meta['fingerprint'][:12]}… != "
             f"{reader.fingerprint()[:12]}…)")
     if kill_at_chunk is None:
-        kill_at_chunk = _parse_kill(pass_idx)
+        kill_at_chunk = _parse_injection(KILL_ENV, pass_idx)
+    if hang_at_chunk is None:
+        hang_at_chunk = _parse_injection(HANG_ENV, pass_idx)
 
     kind, engine = meta["kind"], meta["engine"]
     G = int(meta["merge_group"])
@@ -88,6 +127,7 @@ def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
     init_fn = stats_init_fn(kind, reader.da, reader.db, kt)
     upd = jit_update_fn(kind, engine)
     Qa, Qb = jax.device_put(Qa), jax.device_put(Qb)
+    pt.touch_heartbeat(cluster_dir, shard, pass_idx)
 
     expect = {k: meta.get(k) for k in pt.BINDING_KEYS}
     if groups is None:
@@ -99,13 +139,56 @@ def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
         return pt.binding_matches(
             pt.partial_meta(cluster_dir, pass_idx, g), expect)
 
-    # -- resume position --------------------------------------------------
-    mgr = CheckpointManager(pt.worker_cursor_dir(cluster_dir, shard, pass_idx),
-                            keep=2)
     todo = [g for g in owned if not group_done(g)]
-    published = 0
     if not todo:
         return 0
+    state = {"published": 0}
+
+    def publish(g: int, stats) -> None:
+        """The group sink: beat, publish-if-new, count."""
+        jax.block_until_ready(stats)
+        if not group_done(g):  # idempotent re-publication guard
+            pt.write_partial(cluster_dir, pass_idx, g, stats,
+                             expect, shard=shard, n_shards=n_shards)
+        state["published"] += 1
+        pt.touch_heartbeat(cluster_dir, shard, pass_idx)
+
+    # -- device-parallel (hybrid) shard ----------------------------------
+    if devices > 1:
+        n_dev = len(jax.devices())
+        if n_dev < devices:
+            raise RuntimeError(
+                f"worker asked for {devices} devices but only {n_dev} "
+                "visible — the spawner must set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={devices} (or "
+                "provide real accelerators) before jax initializes")
+        from jax.sharding import Mesh
+
+        mesh = Mesh(np.array(jax.devices()[:devices]), ("dev",))
+
+        def emit(g: int, stats) -> None:
+            publish(g, stats)
+            # failure injection at group granularity: the device fold
+            # publishes whole groups, so "after chunk c" means "after
+            # the group containing c"
+            last_chunk = min(n_chunks, (g + 1) * G) - 1
+            if hang_at_chunk is not None and last_chunk >= hang_at_chunk:
+                _hang_forever(shard, last_chunk)
+            if kill_at_chunk is not None and last_chunk >= kill_at_chunk:
+                raise WorkerKilled(
+                    f"injected kill after group {g} (chunk {last_chunk})")
+
+        fold_groups_on_mesh(
+            lambda i: reader.get_chunk(i), todo, update_fn(kind, engine),
+            upd, init_fn, Qa, Qb, mesh=mesh, merge_group=G,
+            n_chunks=n_chunks, full_chunks=n_full_chunks(reader), emit=emit)
+        return state["published"]
+
+    # -- sequential shard --------------------------------------------------
+
+    # resume position
+    mgr = CheckpointManager(pt.worker_cursor_dir(cluster_dir, shard, pass_idx),
+                            keep=2)
     start_chunk = todo[0] * G
     current = init_fn()
     cur_meta = mgr.metadata(mgr.latest_step())
@@ -119,7 +202,7 @@ def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
             current = tree["current"]
             start_chunk = nxt
 
-    # -- stream ----------------------------------------------------------
+    # stream
     if groups is None:
         idxs = list(shard_chunks(shard, n_shards, n_chunks,
                                  start=start_chunk, group=G))
@@ -129,32 +212,35 @@ def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
                 if c >= start_chunk]
         src = (reader.get_chunk(i) for i in iter(idxs))
     src = prefetched(src, depth=prefetch)
+
+    todo_set = set(todo)
+    counters = {"since_cursor": 0}
+
+    def cb(chunk_idx: int, acc: SegmentedAccumulator) -> None:
+        counters["since_cursor"] += 1
+        end_of_group = (chunk_idx + 1) % G == 0 or chunk_idx + 1 == n_chunks
+        if counters["since_cursor"] % ckpt_every == 0 or end_of_group:
+            mgr.save(chunk_idx, {"current": acc.current},
+                     metadata={**expect, "next_chunk": chunk_idx + 1,
+                               "group": (chunk_idx + 1) // G,
+                               "shard": shard})
+            pt.touch_heartbeat(cluster_dir, shard, pass_idx)
+        if hang_at_chunk is not None and chunk_idx >= hang_at_chunk:
+            _hang_forever(shard, chunk_idx)
+        if kill_at_chunk is not None and chunk_idx >= kill_at_chunk:
+            raise WorkerKilled(f"injected kill at chunk {chunk_idx}")
+
+    acc = SegmentedAccumulator(init_fn, n_chunks, G, sink=publish)
+    acc.current = current
     try:
-        done_since_cursor = 0
-        for chunk_idx, (a, b) in zip(idxs, src):
-            g = chunk_idx // G
-            if g not in todo:  # published by a previous incarnation
-                continue
-            current = upd(current, a, b, Qa, Qb)
-            done_since_cursor += 1
-            end_of_group = (chunk_idx + 1) % G == 0 or chunk_idx + 1 == n_chunks
-            if end_of_group:
-                jax.block_until_ready(current)
-                if not group_done(g):  # idempotent re-publication guard
-                    pt.write_partial(cluster_dir, pass_idx, g, current,
-                                     expect, shard=shard, n_shards=n_shards)
-                published += 1
-                current = init_fn()
-            if done_since_cursor % ckpt_every == 0 or end_of_group:
-                mgr.save(chunk_idx, {"current": current},
-                         metadata={**expect, "next_chunk": chunk_idx + 1,
-                                   "group": (chunk_idx + 1) // G,
-                                   "shard": shard})
-            if kill_at_chunk is not None and chunk_idx >= kill_at_chunk:
-                raise WorkerKilled(f"injected kill at chunk {chunk_idx}")
+        # published-by-someone-else groups are read-and-dropped, not
+        # folded (the stream already carries them; folding them would
+        # double-publish and corrupt the cursor's group accounting)
+        run_fold(((i, ab) for i, ab in zip(idxs, src) if i // G in todo_set),
+                 upd, acc, Qa, Qb, on_chunk=cb)
     finally:
         src.close()
-    return published
+    return state["published"]
 
 
 def main(argv=None) -> int:
@@ -168,6 +254,10 @@ def main(argv=None) -> int:
     ap.add_argument("--groups", default=None,
                     help="comma-separated merge-group ids overriding the "
                          "strided assignment (coordinator re-dispatch)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="local devices to fold merge groups over "
+                         "(>1 = the Hybrid topology's device-parallel "
+                         "worker; needs that many visible jax devices)")
     ap.add_argument("--prefetch", type=int, default=2)
     ap.add_argument("--ckpt-every", type=int, default=4)
     ap.add_argument("--round-wait-s", type=float, default=30.0)
@@ -179,7 +269,7 @@ def main(argv=None) -> int:
         n = run_worker(args.store, args.cluster_dir, args.shard, args.n_shards,
                        args.pass_idx, groups=groups, prefetch=args.prefetch,
                        ckpt_every=args.ckpt_every,
-                       round_wait_s=args.round_wait_s)
+                       round_wait_s=args.round_wait_s, devices=args.devices)
     except WorkerKilled as e:
         print(f"[worker {args.shard}] {e}", flush=True)
         os._exit(3)  # hard death: no cleanup, like a lost machine

@@ -3,21 +3,24 @@
 Three entry points, sharing one "finish" (paper lines 19-25):
 
 - :func:`randomized_cca` — paper-faithful in-memory version (the ref).
-- :func:`randomized_cca_streaming` — out-of-core semantics: each data
-  pass is a scan over row chunks; pass statistics are an explicit,
-  checkpointable accumulator (:class:`SegmentedAccumulator`) so a
-  killed pass resumes mid-stream (see repro.ckpt).
-- the multi-device version lives in :mod:`repro.core.rcca_dist`
-  (shard_map over a (pod, data, model) mesh); the multi-PROCESS
-  version in :mod:`repro.cluster` (map/combine/reduce over a store).
+- :func:`randomized_cca_streaming` / :func:`randomized_cca_iterator` —
+  out-of-core semantics: each data pass is a fold over row chunks with
+  explicit, checkpointable accumulator state.  Both are shells over
+  the ONE pass engine in :mod:`repro.exec`, which also runs the same
+  passes device-parallel (``Sharded``), multi-process (``Cluster``)
+  and both at once (``Hybrid``).
+- the feature-sharded resident-mode version lives in
+  :mod:`repro.core.rcca_dist` (shard_map over a (pod, data, model)
+  mesh, psums inside the pass).
 
-Every execution mode accumulates in the same CANONICAL ORDER — chunks
-left-fold into fixed-size merge groups, group sums reduce through a
-fixed pairwise tree (:class:`PairwiseStack`) — so their results agree
-bitwise: the cluster coordinator's merge of per-worker partials
-(:func:`merge_power_stats` / :func:`merge_final_stats` are exact
-combiners — every accumulator field is a plain sum over rows) is
-bit-identical to a single-process pass for any worker count.
+Every execution topology accumulates in the same CANONICAL ORDER —
+chunks left-fold into fixed-size merge groups, group sums reduce
+through a fixed pairwise tree (see :mod:`repro.exec.accumulate`) — so
+their results agree bitwise: the cluster coordinator's merge of
+per-worker partials (:func:`merge_power_stats` /
+:func:`merge_final_stats` are exact combiners — every accumulator
+field is a plain sum over rows) is bit-identical to a single-process
+pass for any worker count and any devices-per-worker layout.
 
 Mean-centering is the paper's §3 rank-one update: column sums are
 accumulated alongside each pass (O(da+db) extra state, no extra pass)
@@ -27,8 +30,7 @@ and products are corrected as  Āᵀ B̄ = AᵀB − n μa μbᵀ.
 from __future__ import annotations
 
 import dataclasses
-import inspect
-from typing import Iterable, Iterator, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -246,13 +248,20 @@ def update_final_stats(
 
 # --------------------------------------------------------------------------
 # mergeable sufficient statistics (repro.cluster's map/combine contract)
+#
+# The canonical accumulation machinery (merge groups, pairwise tree,
+# segmented accumulator) lives in repro.exec.accumulate — the one
+# implementation every execution topology shares.  It is re-exported
+# here because these names are part of this module's long-standing API.
 # --------------------------------------------------------------------------
 
-#: Chunks per merge group — the granularity of the canonical reduction
-#: below and therefore of cluster partials.  A store-pass constant, NOT
-#: a function of the worker count: bit-reproducibility across worker
-#: counts holds exactly because the grouping never moves.
-MERGE_GROUP_CHUNKS = 8
+from repro.exec.accumulate import (  # noqa: E402  (re-exports)
+    MERGE_GROUP_CHUNKS,
+    PairwiseStack,
+    SegmentedAccumulator,
+    merge_stats,
+    reduce_group_partials,
+)
 
 
 def merge_power_stats(x: PowerStats, y: PowerStats) -> PowerStats:
@@ -261,189 +270,16 @@ def merge_power_stats(x: PowerStats, y: PowerStats) -> PowerStats:
     Every field is a plain sum over rows, so the merge is the exact
     map/reduce combiner of Algorithm 1: stats(S₁ ∪ S₂) = stats(S₁) ⊕
     stats(S₂) with ⊕ = elementwise +.  (Exact as algebra; the fp ADD
-    still rounds — which is why the reduction ORDER below is canonical.)
+    still rounds — which is why the canonical reduction ORDER of
+    ``repro.exec.accumulate`` exists.)
     """
-    return PowerStats(*(a + b for a, b in zip(x, y)))
+    return merge_stats(x, y)
 
 
 def merge_final_stats(x: FinalStats, y: FinalStats) -> FinalStats:
     """Combine two final-pass accumulators — same contract as
     :func:`merge_power_stats`."""
-    return FinalStats(*(a + b for a, b in zip(x, y)))
-
-
-def merge_stats(x, y):
-    """Dispatch on the stats flavor (both are fieldwise sums)."""
-    if isinstance(x, PowerStats):
-        return merge_power_stats(x, y)
-    return merge_final_stats(x, y)
-
-
-class PairwiseStack:
-    """Fixed-structure pairwise reduction over a sequence of partials.
-
-    The binary-counter scheme of pairwise summation: pushing partial
-    ``m`` merges stack tops of equal weight, so after ``m`` pushes the
-    stack mirrors the binary digits of ``m`` and the reduction tree is a
-    function of the partial INDEX alone — not of who computed each
-    partial or when it arrived.  This is what makes the cluster merge
-    bit-reproducible: any assignment of whole merge groups to workers,
-    merged in group order, reproduces the single-process reduction
-    bitwise.  Live memory is O(log #groups) stats pytrees.
-    """
-
-    def __init__(self, stack=None, counts=None):
-        self.stack = list(stack) if stack is not None else []
-        self.counts = list(counts) if counts is not None else []
-
-    @staticmethod
-    def depth_after(m: int) -> int:
-        """Stack depth after ``m`` pushes (= popcount(m)) — lets a
-        checkpoint restore rebuild the like-tree from a chunk index."""
-        return bin(m).count("1")
-
-    def push(self, s) -> None:
-        self.stack.append(s)
-        self.counts.append(1)
-        while len(self.counts) >= 2 and self.counts[-1] == self.counts[-2]:
-            hi = self.stack.pop()
-            self.stack[-1] = merge_stats(self.stack[-1], hi)
-            self.counts[-1] += self.counts.pop()
-
-    def result(self):
-        """Fold the leftover unequal-weight entries newest→oldest (the
-        deterministic completion of the tree)."""
-        if not self.stack:
-            return None
-        res = self.stack[-1]
-        for s in reversed(self.stack[:-1]):
-            res = merge_stats(s, res)
-        return res
-
-
-class SegmentedAccumulator:
-    """Canonical accumulation of one data pass: chunks left-fold into
-    the current ``group`` accumulator; each completed group (every
-    ``group_chunks`` chunks, plus the ragged tail) enters a
-    :class:`PairwiseStack`.  Single-process drivers, cluster workers and
-    the coordinator merge all share this structure, which is the whole
-    bit-reproducibility argument of ``repro.cluster``.
-    """
-
-    def __init__(self, init_fn, n_chunks: Optional[int],
-                 group_chunks: int = MERGE_GROUP_CHUNKS):
-        if group_chunks <= 0:
-            raise ValueError("merge group size must be positive")
-        self.init_fn = init_fn
-        self.n_chunks = None if n_chunks is None else int(n_chunks)
-        self.group_chunks = int(group_chunks)
-        self.current = init_fn()
-        self._tree = PairwiseStack()
-        self.groups_done = 0
-        self._in_group = 0  # chunks folded into ``current`` so far
-
-    # -- geometry ---------------------------------------------------------
-
-    @property
-    def n_groups(self) -> int:
-        return -(-self.n_chunks // self.group_chunks)
-
-    @staticmethod
-    def groups_completed(next_chunk: int, n_chunks: Optional[int],
-                         group_chunks: int) -> int:
-        """Merge groups fully folded once chunks [0, next_chunk) are in
-        — with a known length, the ragged tail group completes with the
-        last chunk."""
-        if n_chunks is not None and next_chunk >= n_chunks:
-            return -(-n_chunks // group_chunks)
-        return next_chunk // group_chunks
-
-    # -- folding ----------------------------------------------------------
-
-    def update(self, chunk_idx: int, update_fn, a, b, Qa, Qb) -> None:
-        """Fold one chunk, closing the merge group at its boundary."""
-        self.current = update_fn(self.current, a, b, Qa, Qb)
-        self.end_chunk(chunk_idx)
-
-    def end_chunk(self, chunk_idx: int) -> None:
-        self._in_group += 1
-        nxt = chunk_idx + 1
-        if nxt % self.group_chunks == 0 or nxt == self.n_chunks:
-            self._push_current()
-
-    def flush_tail(self) -> None:
-        """Close a ragged tail group at end of stream — for sources of
-        unknown length (a known ``n_chunks`` closes it in end_chunk)."""
-        if self._in_group:
-            self._push_current()
-
-    def _push_current(self) -> None:
-        self._tree.push(self.current)
-        self.current = self.init_fn()
-        self.groups_done += 1
-        self._in_group = 0
-
-    def push_group(self, group_idx: int, stats) -> None:
-        """Feed a pre-computed merge-group sum (a cluster partial) —
-        MUST be called in ascending group order with no gaps."""
-        if group_idx != self.groups_done:
-            raise ValueError(
-                f"merge groups must arrive in order: got {group_idx}, "
-                f"expected {self.groups_done}")
-        self._tree.push(stats)
-        self.groups_done += 1
-
-    def result(self):
-        r = self._tree.result()
-        return self.init_fn() if r is None else r
-
-    # -- checkpointing ----------------------------------------------------
-
-    def state(self) -> dict:
-        """Checkpointable pytree snapshot (jax arrays are immutable, so
-        no copies are needed — only the containers are frozen)."""
-        return {"current": self.current, "stack": tuple(self._tree.stack)}
-
-    def load_state(self, state: dict) -> None:
-        self.current = state["current"]
-        self._tree.stack = list(state["stack"])
-        # counts are implied by groups_done's binary digits (descending)
-        m = self.groups_done
-        self._tree.counts = [1 << i for i in reversed(range(m.bit_length()))
-                             if m >> i & 1]
-        if len(self._tree.counts) != len(self._tree.stack):
-            raise ValueError(
-                f"accumulator state has {len(self._tree.stack)} stack "
-                f"entries; {self.groups_done} completed groups imply "
-                f"{len(self._tree.counts)}")
-
-    @classmethod
-    def structure(cls, init_fn, n_chunks: Optional[int], group_chunks: int,
-                  next_chunk: int) -> "SegmentedAccumulator":
-        """Zero-filled accumulator with the stack shape implied by a
-        resume position — the like-tree for repro.ckpt restores."""
-        acc = cls(init_fn, n_chunks, group_chunks)
-        acc.groups_done = cls.groups_completed(next_chunk, n_chunks, group_chunks)
-        acc._in_group = max(0, next_chunk - acc.groups_done * group_chunks)
-        depth = PairwiseStack.depth_after(acc.groups_done)
-        acc.load_state({"current": init_fn(),
-                        "stack": tuple(init_fn() for _ in range(depth))})
-        return acc
-
-
-def reduce_group_partials(partials, init_fn, n_chunks: int,
-                          group_chunks: int = MERGE_GROUP_CHUNKS):
-    """Deterministic fixed-order tree-reduce of per-group partials:
-    ``partials`` maps group index → stats and must cover every group.
-    Reproduces the single-process segmented accumulation bitwise
-    regardless of which worker computed which group or in what order
-    they completed."""
-    acc = SegmentedAccumulator(init_fn, n_chunks, group_chunks)
-    for g in range(acc.n_groups):
-        if g not in partials:
-            raise ValueError(f"merge group {g} missing from partial set")
-        acc.push_group(g, partials[g])
-    return acc.result()
+    return merge_stats(x, y)
 
 
 # --------------------------------------------------------------------------
@@ -602,29 +438,8 @@ def randomized_cca(
 
 
 # --------------------------------------------------------------------------
-# streaming / out-of-core
+# streaming / out-of-core — shells over the repro.exec pass engine
 # --------------------------------------------------------------------------
-
-
-def _scan_pass(update_fn, init_fn, A_chunks: jax.Array, B_chunks: jax.Array,
-               Qa, Qb, merge_group: int = MERGE_GROUP_CHUNKS):
-    """One data pass over stacked row chunks, in canonical merge order:
-    a lax.scan left-folds each ``merge_group``-chunk group, group sums
-    reduce through the fixed pairwise tree.  (The scan body and an
-    eagerly jitted per-chunk update compile to bitwise-identical
-    arithmetic, so this matches the iterator/cluster paths exactly.)"""
-
-    def body(s, ab):
-        a, b = ab
-        return update_fn(s, a, b, Qa, Qb), None
-
-    nc = A_chunks.shape[0]
-    acc = SegmentedAccumulator(init_fn, nc, merge_group)
-    for lo in range(0, nc, merge_group):
-        hi = min(nc, lo + merge_group)
-        stats, _ = jax.lax.scan(body, init_fn(), (A_chunks[lo:hi], B_chunks[lo:hi]))
-        acc.push_group(lo // merge_group, stats)
-    return acc.result()
 
 
 def randomized_cca_streaming(
@@ -636,73 +451,46 @@ def randomized_cca_streaming(
     engine: str = DEFAULT_ENGINE,
     use_kernels: Optional[bool] = None,
     merge_group: int = MERGE_GROUP_CHUNKS,
+    topology=None,
 ) -> RCCAResult:
-    """Algorithm 1 where every data pass is a scan over row chunks.
+    """Algorithm 1 where every data pass is a fold over row chunks.
 
-    This is the single-device form of the production data pass: the
-    distributed version (rcca_dist) wraps the same updates in shard_map
-    and psums the accumulators.  ``engine`` selects the per-chunk update
-    implementation: ``"kernels"`` (default) runs the fused Pallas data
-    passes (interpret mode off-TPU), ``"jnp"`` the pure-jnp oracle.
+    A shell over ``repro.exec.PassEngine`` — the canonical chunk →
+    merge-group → pairwise-tree accumulation every execution topology
+    shares.  ``engine`` selects the per-chunk update implementation:
+    ``"kernels"`` (default) runs the fused Pallas data passes
+    (interpret mode off-TPU), ``"jnp"`` the pure-jnp oracle.
     ``use_kernels`` is the legacy boolean spelling of the same knob.
     ``merge_group`` is the canonical merge-group size; a
     ``repro.cluster`` coordinator run with the same value is
-    bit-identical to this driver for ANY worker count.
+    bit-identical to this driver for ANY worker count.  ``topology``
+    optionally selects ``repro.exec.Sharded()`` to fold merge groups
+    one-per-device over the local mesh (bitwise the same result); the
+    default is sequential ``Local`` execution.
     """
+    from repro.exec import Local, PassEngine, StackedChunks
+
     engine = resolve_engine(engine, use_kernels)
-    nc, c, da = A_chunks.shape
-    db = B_chunks.shape[-1]
-    kt = cfg.sketch
-    Qa, Qb = init_Q(key, da, db, cfg)
-
-    kernels = engine == "kernels"
-    upd_pow = update_power_stats_kernel if kernels else update_power_stats
-    upd_fin = update_final_stats_kernel if kernels else update_final_stats
-    init_pow = lambda: init_power_stats(da, db, kt, jnp.float32)
-    init_fin = lambda: init_final_stats(kt, da, db, jnp.float32)
-
-    for _ in range(cfg.q):
-        stats = _scan_pass(upd_pow, init_pow, A_chunks, B_chunks, Qa, Qb,
-                           merge_group)
-        Qa, Qb = power_update_Q(stats, Qa, Qb, cfg)
-
-    fstats = _scan_pass(upd_fin, init_fin, A_chunks, B_chunks, Qa, Qb,
-                        merge_group)
-    return finalize_result(fstats, Qa, Qb, cfg, da, db)
-
-
-def _open_source(source_factory, start_chunk: int):
-    """Instantiate the chunk source for one pass.
-
-    Seek-aware factories opt in by naming their first positional
-    parameter ``start`` (e.g. ``repro.store.PassRunner._source``); they
-    are asked to begin at ``start_chunk`` directly, so a resumed pass
-    never reads the skipped prefix from disk.  Anything else keeps the
-    legacy contract: ``source_factory()`` yields from chunk 0 and the
-    driver filters.  (Opt-in is by name, not arity — a factory that
-    merely happens to take a defaulted positional must not silently
-    receive a chunk index.)
-    """
-    try:
-        params = list(inspect.signature(source_factory).parameters.values())
-        seekable = bool(params) and params[0].name == "start" and \
-            params[0].kind in (params[0].POSITIONAL_ONLY,
-                               params[0].POSITIONAL_OR_KEYWORD)
-    except (TypeError, ValueError):
-        seekable = False
-    if seekable:
-        return source_factory(start_chunk), start_chunk
-    return source_factory(), 0
+    eng = PassEngine(cfg, engine=engine, merge_group=merge_group,
+                     topology=Local() if topology is None else topology)
+    return eng.run(StackedChunks(A_chunks, B_chunks), key)
 
 
 def jit_update_fn(kind: str, engine: str):
     """The jitted per-chunk update for one pass flavor — the exact
     function cluster workers and the iterator driver share."""
+    return jax.jit(update_fn(kind, engine))
+
+
+def update_fn(kind: str, engine: str):
+    """The raw (unjitted) per-chunk update for one pass flavor — what
+    the device-parallel group fold scans inside shard_map (jitting is
+    the caller's concern there)."""
     kernels = resolve_engine(engine) == "kernels"
     if kind == "power":
-        return jax.jit(update_power_stats_kernel if kernels else update_power_stats)
+        return update_power_stats_kernel if kernels else update_power_stats
     if kind == "final":
-        return jax.jit(update_final_stats_kernel if kernels else update_final_stats)
+        return update_final_stats_kernel if kernels else update_final_stats
     raise ValueError(f"unknown pass kind {kind!r}")
 
 
@@ -745,42 +533,13 @@ def randomized_cca_iterator(
     canonical merge-group size (see :func:`randomized_cca_streaming`);
     ``n_chunks``, when known, lets a cursor saved at the very last
     chunk of a pass restore correctly (``repro.store.PassRunner``
-    passes it).
+    passes it).  A shell over ``repro.exec.PassEngine.run_stream`` —
+    the engine owns the fold loop, source seeking and resume-state
+    restoration.
     """
-    engine = resolve_engine(engine, use_kernels)
-    kt = cfg.sketch
-    Qa, Qb = init_Q(key, da, db, cfg)
+    from repro.exec import PassEngine
 
-    upd_pow = jit_update_fn("power", engine)
-    upd_fin = jit_update_fn("final", engine)
-
-    start_pass, start_chunk, acc_state = 0, 0, None
-    if resume_state is not None:
-        start_pass = int(resume_state["pass_idx"])
-        start_chunk = int(resume_state["chunk_idx"])
-        acc_state = resume_state["acc"]
-        Qa, Qb = resume_state["Qa"], resume_state["Qb"]
-
-    total_passes = cfg.q + 1  # q power passes + final pass
-    for pass_idx in range(start_pass, total_passes):
-        is_final = pass_idx == cfg.q
-        kind = "final" if is_final else "power"
-        upd = upd_fin if is_final else upd_pow
-        acc = SegmentedAccumulator.structure(
-            stats_init_fn(kind, da, db, kt), n_chunks, merge_group, start_chunk)
-        if acc_state is not None:
-            acc.load_state(acc_state)
-            acc_state = None
-        source, offset = _open_source(source_factory, start_chunk)
-        for chunk_idx, (a, b) in enumerate(source, start=offset):
-            if chunk_idx < start_chunk:
-                continue
-            acc.update(chunk_idx, upd, a, b, Qa, Qb)
-            if on_pass_end is not None:
-                on_pass_end(pass_idx, chunk_idx, acc, Qa, Qb)
-        acc.flush_tail()
-        start_chunk = 0
-        if not is_final:
-            Qa, Qb = power_update_Q(acc.result(), Qa, Qb, cfg)
-
-    return finalize_result(acc.result(), Qa, Qb, cfg, da, db)
+    eng = PassEngine(cfg, engine=resolve_engine(engine, use_kernels),
+                     merge_group=merge_group)
+    return eng.run_stream(source_factory, da, db, key, n_chunks=n_chunks,
+                          resume_state=resume_state, on_pass_end=on_pass_end)

@@ -31,6 +31,7 @@ from jax.experimental.shard_map import shard_map
 
 from .linalg import sym, topk_svd, tri_solve_right
 from .rcca import DEFAULT_ENGINE, RCCAConfig, RCCAResult, finish, resolve_engine
+from repro.exec.engine import pass_schedule
 
 
 # --------------------------------------------------------------------------
@@ -263,7 +264,7 @@ def dist_randomized_cca(
     B: jax.Array,
     cfg: RCCAConfig,
     key: jax.Array,
-    mesh: Mesh,
+    mesh: Optional[Mesh] = None,
     *,
     row_axes: Sequence[str] = ("pod", "data"),
     col_axis: Optional[str] = "model",
@@ -271,16 +272,33 @@ def dist_randomized_cca(
     compute_dtype=jnp.float32,
     engine: str = DEFAULT_ENGINE,
     use_kernels: Optional[bool] = None,
+    topology=None,
 ) -> RCCAResult:
     """Run Algorithm 1 on row+feature-sharded A (n×da), B (n×db).
 
-    A/B must be shardable as P(row_axes, col_axis).  All q+1 data passes
-    execute as shard_map programs; the finish (lines 19-25) is computed
-    redundantly on every device (replicated, no host round-trip).
-    ``engine`` selects the per-microbatch update implementation inside
-    the shard_map bodies (see rcca.randomized_cca_streaming).
+    This is the RESIDENT-mode form of the ``repro.exec.Sharded``
+    topology: with a non-None ``col_axis`` no da/db-sized tensor is
+    ever replicated, at the cost of the bitwise-streaming contract (the
+    per-microbatch feature psums reassociate the row sums).  Passing a
+    ``repro.exec.Sharded`` value as ``topology`` supplies ``mesh`` and
+    ``col_axis`` in one argument.  A/B must be shardable as
+    P(row_axes, col_axis).  All q+1 data passes execute as shard_map
+    programs on the schedule shared with the streaming engine; the
+    finish (lines 19-25) is computed redundantly on every device
+    (replicated, no host round-trip).  ``engine`` selects the
+    per-microbatch update implementation inside the shard_map bodies
+    (see rcca.randomized_cca_streaming).
     """
     engine = resolve_engine(engine, use_kernels)
+    if topology is not None:
+        if topology.mesh is None and mesh is None:
+            raise ValueError(
+                "resident-mode Sharded topology needs an explicit mesh "
+                "(its axis names define the row/feature sharding)")
+        mesh = topology.mesh if mesh is None else mesh
+        col_axis = topology.col_axis
+    if mesh is None:
+        raise ValueError("dist_randomized_cca needs a mesh (or a topology)")
     row_axes = tuple(ax for ax in row_axes if ax in mesh.axis_names)
     if col_axis is not None and col_axis not in mesh.axis_names:
         col_axis = None
@@ -334,7 +352,9 @@ def dist_randomized_cca(
         Qb_new = dist_orth(Yb.astype(cfg.dtype), col_axis)
         return Qa_new, Qb_new, tra, trb, nn
 
-    for _ in range(cfg.q):
+    for _pass_idx, kind in pass_schedule(cfg.q):
+        if kind != "power":
+            break  # the final pass runs below, after final_step is built
         Qa, Qb, _, _, _ = jax.jit(power_step)(A, B, Qa, Qb)
 
     @functools.partial(

@@ -1,0 +1,60 @@
+"""Topology-aware pass execution — the one engine behind every driver.
+
+The paper's two-pass design is a sum of per-row sufficient statistics,
+so one canonical accumulation structure (chunk → merge group → pairwise
+tree, :mod:`repro.exec.accumulate`) serves every way of cutting the
+work across hardware (:mod:`repro.exec.topology`):
+
+======== ====================================================
+Local     one process, one device (sequential fold)
+Sharded   one process, merge groups one-per-device (shard_map)
+Cluster   worker processes, each folding whole merge groups
+Hybrid    worker processes × per-worker device meshes
+======== ====================================================
+
+All four produce bitwise-identical results on the same store —
+``repro.exec.fit(store, cfg, key, topology=...)`` is the single entry
+point; :class:`PassEngine` is the in-process core the drivers and the
+cluster workers are shells over.
+"""
+
+from .accumulate import (
+    MERGE_GROUP_CHUNKS,
+    PairwiseStack,
+    SegmentedAccumulator,
+    merge_stats,
+    reduce_group_partials,
+)
+from .engine import (
+    PassEngine,
+    StackedChunks,
+    fit,
+    fold_groups_on_mesh,
+    n_full_chunks,
+    open_source,
+    pass_schedule,
+    run_fold,
+)
+from .topology import Cluster, Hybrid, Local, Sharded, Topology, as_topology
+
+__all__ = [
+    "Cluster",
+    "Hybrid",
+    "Local",
+    "MERGE_GROUP_CHUNKS",
+    "PairwiseStack",
+    "PassEngine",
+    "SegmentedAccumulator",
+    "Sharded",
+    "StackedChunks",
+    "Topology",
+    "as_topology",
+    "fit",
+    "fold_groups_on_mesh",
+    "merge_stats",
+    "n_full_chunks",
+    "open_source",
+    "pass_schedule",
+    "reduce_group_partials",
+    "run_fold",
+]

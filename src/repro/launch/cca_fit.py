@@ -27,6 +27,12 @@ is bit-identical to the single-process stream mode:
     python -m repro.launch.cca_fit --smoke --mode stream \
         --data /tmp/store --ckpt-dir /tmp/cca --resume
 
+``--topology {local,sharded,cluster,hybrid}`` is the unified spelling
+of the execution layout (repro.exec): ``sharded`` folds merge groups
+one-per-device over the local mesh, ``hybrid`` = cluster workers ×
+per-worker device meshes (``--devices-per-worker``).  Every topology
+is bit-identical on the same store.
+
 Reports the paper's metrics: Σ canonical correlations (train objective),
 feasibility residuals, and — at smoke scale — agreement with the exact
 dense CCA oracle.
@@ -89,8 +95,21 @@ def main(argv=None):
                          "single-process stream mode)")
     ap.add_argument("--cluster-dir", default=None,
                     help="shared coordination directory for --workers "
-                         "(rounds/partials/cursors/logs; default "
-                         "<store>.cluster)")
+                         "(rounds/partials/cursors/heartbeats/logs; "
+                         "default <store>.cluster)")
+    ap.add_argument("--topology", default=None,
+                    choices=["local", "sharded", "cluster", "hybrid"],
+                    help="execution topology (repro.exec): local = "
+                         "sequential stream, sharded = merge groups "
+                         "one-per-device over the local mesh, cluster = "
+                         "worker processes, hybrid = worker processes x "
+                         "per-worker device meshes.  All topologies are "
+                         "bit-identical on the same store (sharded/"
+                         "cluster/hybrid need --data)")
+    ap.add_argument("--devices-per-worker", type=int, default=4,
+                    help="local devices each hybrid worker folds merge "
+                         "groups over (spawned with the forced-host-"
+                         "device XLA flag, so it works on CPU hosts)")
     args = ap.parse_args(argv)
     args.prefetch = args.prefetch if args.prefetch == "auto" else int(args.prefetch)
 
@@ -110,6 +129,14 @@ def main(argv=None):
                           rank=max(rcca.k * 2, 16), seed=args.seed)
     key = jax.random.PRNGKey(args.seed)
 
+    if args.topology is None and args.workers:
+        args.topology = "cluster"
+    if args.topology == "local":
+        args.mode = "stream"  # Local IS the sequential streaming topology
+    if args.topology in ("sharded", "cluster", "hybrid") and not args.data:
+        raise SystemExit(f"--topology {args.topology} needs an on-disk "
+                         "store: pass --data (these topologies cut a "
+                         "view store into merge groups)")
     if args.workers and not args.data:
         raise SystemExit("--workers needs an on-disk store: pass --data "
                          "(the cluster coordinator shards a view store)")
@@ -162,22 +189,38 @@ def main(argv=None):
         del a0, b0, qa0, qb0
 
     t0 = time.time()
-    if args.workers:
+    if args.topology in ("cluster", "hybrid"):
         from repro.cluster import ClusterCoordinator
 
+        n_workers = args.workers or 2
+        devices = args.devices_per_worker if args.topology == "hybrid" else 1
         cluster_dir = args.cluster_dir or args.data.rstrip("/") + ".cluster"
         if args.prefetch == "auto":
             print("[cca] --prefetch auto is per-process calibration; "
                   "cluster workers use a fixed depth 2 instead")
         coord = ClusterCoordinator(
-            reader, rcca, cluster_dir, n_workers=args.workers,
-            engine=args.engine,
+            reader, rcca, cluster_dir, n_workers=n_workers,
+            devices_per_worker=devices, engine=args.engine,
             prefetch=args.prefetch if args.prefetch != "auto" else 2)
-        print(f"[cca] cluster mode, engine={args.engine}, "
-              f"workers={args.workers}, groups={coord.n_groups}, "
+        print(f"[cca] {args.topology} mode, engine={args.engine}, "
+              f"workers={n_workers}x{devices}dev, groups={coord.n_groups}, "
               f"cluster_dir={cluster_dir}")
         res = coord.fit(key)
         print("[cca] cluster:", res.diagnostics["cluster"])
+        A = B = None
+        if reader.nbytes <= 2 << 30:
+            A, B = reader.materialize()
+    elif args.topology == "sharded":
+        from repro.exec import PassEngine, Sharded
+
+        eng = PassEngine(rcca, engine=args.engine, topology=Sharded())
+        mesh = eng.topology.build_mesh()
+        print(f"[cca] sharded mode, engine={args.engine}, "
+              f"devices={mesh.devices.size}, n={reader.n} "
+              f"chunks={reader.n_chunks} (force more CPU devices with "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+        res = eng.run_mesh(reader, key)
+        print("[cca] topology:", res.diagnostics["topology"])
         A = B = None
         if reader.nbytes <= 2 << 30:
             A, B = reader.materialize()

@@ -19,10 +19,11 @@ from .format import (
 )
 from .passes import PassRunner, choose_pipeline
 from .prefetch import ChunkPrefetcher, prefetched
-from .uri import LocalFS, StoreFS, register_scheme
+from .uri import FsspecFS, LocalFS, StoreFS, register_scheme
 
 __all__ = [
     "ChunkPrefetcher",
+    "FsspecFS",
     "LocalFS",
     "PassRunner",
     "ShardInfo",

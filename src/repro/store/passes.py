@@ -1,9 +1,9 @@
 """Pass orchestration: drive the CCA data passes from an on-disk store.
 
-``PassRunner`` is the glue between the three existing layers — the
-store (:mod:`repro.store.format`), the algorithm's pass drivers
-(:mod:`repro.core.rcca` / :mod:`repro.core.rcca_dist`) and fault
-tolerance (:mod:`repro.ckpt`):
+``PassRunner`` is the glue between three layers — the store
+(:mod:`repro.store.format`), the topology-aware pass engine
+(:mod:`repro.exec`, which owns the canonical chunk → merge-group →
+tree fold) and fault tolerance (:mod:`repro.ckpt`):
 
 - every pass streams ``ViewStoreReader.iter_chunks`` through a
   double-buffered :class:`~repro.store.prefetch.ChunkPrefetcher`, so
@@ -48,15 +48,13 @@ import jax.numpy as jnp
 from repro.ckpt import CheckpointManager
 from repro.core.rcca import (
     DEFAULT_ENGINE,
-    MERGE_GROUP_CHUNKS,
     RCCAConfig,
     RCCAResult,
-    SegmentedAccumulator,
     algo_meta,
-    randomized_cca_iterator,
     resolve_engine,
     stats_init_fn,
 )
+from repro.exec import MERGE_GROUP_CHUNKS, PassEngine, SegmentedAccumulator
 
 from .format import ViewStoreReader
 from .prefetch import prefetched
@@ -210,7 +208,7 @@ class PassRunner:
     # -- chunk source (one instantiation per pass) ------------------------
 
     def _source(self, start: int):
-        """Seekable factory handed to ``randomized_cca_iterator`` — the
+        """Seekable factory handed to ``PassEngine.run_stream`` — the
         positional ``start`` makes resume seek instead of replay."""
         self._harvest_live()
         if not self._auto_done:
@@ -378,11 +376,13 @@ class PassRunner:
             if self.mgr is not None and (chunk_idx + 1) % self.ckpt_every == 0:
                 self._save_cursor(pass_idx, chunk_idx, acc, Qa, Qb)
 
+        eng = PassEngine(self.cfg, engine=self.engine,
+                         merge_group=self.merge_group)
         try:
-            res = randomized_cca_iterator(
-                self._source, r.da, r.db, self.cfg, key,
-                resume_state=resume_state, on_pass_end=cb, engine=self.engine,
-                merge_group=self.merge_group, n_chunks=r.n_chunks,
+            res = eng.run_stream(
+                self._source, r.da, r.db, key,
+                resume_state=resume_state, on_pass_end=cb,
+                n_chunks=r.n_chunks,
             )
         finally:
             self._harvest_live()

@@ -4,6 +4,9 @@ shards.  The invariant under every recoverable failure is the same as
 the happy path — the coordinator output stays bit-identical to the
 single-process ``randomized_cca_streaming`` on the same store."""
 
+import os
+import time
+
 import numpy as np
 import pytest
 
@@ -91,6 +94,47 @@ def test_duplicate_publication_merges_once(store, ref, tmp_path):
     # fit finished — recognized as already-valid, nothing double-merges
     assert run_worker(store.path, cd, 0, 2, 0, prefetch=0) == 0
     assert run_worker(store.path, cd, 1, 2, 0, prefetch=0) == 0
+
+
+def test_stale_heartbeat_worker_redispatched(store, ref, tmp_path):
+    """A worker that WEDGES (alive process, no progress — the failure
+    mode exit codes can't see) stops beating its heartbeat; the
+    coordinator declares it stale, kills it and re-dispatches its
+    missing groups WITHOUT waiting for the wall-clock pass timeout.
+    The merged result stays bit-identical."""
+    from repro.cluster.worker import HANG_ENV
+
+    co = ClusterCoordinator(store, CFG, str(tmp_path / "cl"), n_workers=2,
+                            engine="jnp", merge_group=G,
+                            worker_timeout=600, heartbeat_timeout=12,
+                            env_overrides={0: {HANG_ENV: "0:2"}})
+    res = co.fit(jax.random.PRNGKey(KEY))
+    assert_bit_identical(ref, res)
+    passes = res.diagnostics["cluster"]["passes"]
+    assert passes[0]["stale_heartbeat_shards"] == [0]
+    assert passes[0]["redispatched_groups"]  # the hung shard's groups
+    assert passes[1]["stale_heartbeat_shards"] == []
+    # wall-clock worker_timeout (600s) was clearly NOT the trigger
+    assert passes[0]["wall_s"] < 300
+
+
+def test_stale_beacon_from_previous_fit_is_ignored(store, ref, tmp_path):
+    """Reusing a cluster_dir leaves the previous fit's heartbeat
+    beacons behind (same shard/pass keys).  Staleness is bounded by
+    time-since-spawn, so an hour-old beacon must not condemn a freshly
+    spawned worker that hasn't had time to beat yet."""
+    cd = str(tmp_path / "cl")
+    pt.touch_heartbeat(cd, 0, 0)  # "previous fit's" beacon ...
+    ancient = time.time() - 3600  # ... an hour stale
+    os.utime(pt.heartbeat_path(cd, 0, 0), (ancient, ancient))
+    co = ClusterCoordinator(store, CFG, cd, n_workers=2, engine="jnp",
+                            merge_group=G, worker_timeout=300,
+                            heartbeat_timeout=15)
+    res = co.fit(jax.random.PRNGKey(KEY))
+    assert_bit_identical(ref, res)
+    passes = res.diagnostics["cluster"]["passes"]
+    assert all(p["stale_heartbeat_shards"] == [] for p in passes)
+    assert all(p["redispatched_groups"] == [] for p in passes)
 
 
 def test_unrecoverable_shard_raises_with_missing_groups(store, tmp_path):

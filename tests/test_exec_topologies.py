@@ -1,0 +1,281 @@
+"""Topology parity for the repro.exec pass engine.
+
+THE acceptance bar of the execution-topology refactor: ``Local``,
+``Sharded``, ``Cluster`` and ``Hybrid`` all produce BIT-IDENTICAL
+``RCCAResult``s on the same store, for both data-pass engines, for any
+(workers × devices) layout.  The argument is structural — whole merge
+groups are the only unit of distribution, every group is left-folded
+on a single device with the same per-chunk update, and group sums
+reduce through the same fixed pairwise tree — so the tests assert
+array_equal, not allclose.
+
+Hybrid workers are subprocesses spawned with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``, so the
+4-device-per-worker layout is exercised even when this pytest session
+sees a single CPU device.  The in-process ``Sharded`` matrix rows use
+however many devices the session has — run the suite under the same
+XLA flag (CI's topology-matrix job, ``make verify-topology``) to give
+them a real 4-device mesh; ``test_sharded_forced_devices_subprocess``
+covers the forced-mesh case from an unflagged session.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.cluster import ClusterCoordinator, run_worker
+from repro.cluster import partials as pt
+from repro.cluster.worker import KILL_ENV
+from repro.core.rcca import RCCAConfig, randomized_cca_streaming
+from repro.data import PlantedCCAData
+from repro.exec import (
+    Cluster,
+    Hybrid,
+    Local,
+    PassEngine,
+    Sharded,
+    StackedChunks,
+    as_topology,
+    n_full_chunks,
+)
+from repro.exec import fit as exec_fit
+from repro.store import PassRunner, ingest_planted
+
+N, DA, DB, CHUNK = 1536, 28, 20, 128  # 12 chunks
+G = 2  # merge group: 6 groups → interesting splits across workers/devices
+CFG = RCCAConfig(k=4, p=8, q=1, nu=0.01, center=True)
+KEY = 5
+SRC_ROOT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+@pytest.fixture(scope="module")
+def store(tmp_path_factory):
+    data = PlantedCCAData(n=N, da=DA, db=DB, rank=5, noise=0.4,
+                          seed=11, chunk=CHUNK)
+    return ingest_planted(str(tmp_path_factory.mktemp("topo") / "store"), data)
+
+
+@pytest.fixture(scope="module")
+def streaming_ref(store):
+    """Single-process reference per engine, on the exact store bytes."""
+    A, B = store.materialize()
+    Ac = jnp.asarray(A).reshape(store.n_chunks, CHUNK, DA)
+    Bc = jnp.asarray(B).reshape(store.n_chunks, CHUNK, DB)
+    cache = {}
+
+    def get(engine):
+        if engine not in cache:
+            cache[engine] = randomized_cca_streaming(
+                Ac, Bc, CFG, jax.random.PRNGKey(KEY), engine=engine,
+                merge_group=G)
+        return cache[engine]
+
+    return get
+
+
+def assert_bit_identical(r1, r2):
+    for name in ("Xa", "Xb", "rho", "Qa", "Qb"):
+        a1, a2 = np.asarray(getattr(r1, name)), np.asarray(getattr(r2, name))
+        assert np.array_equal(a1, a2), f"{name} differs"
+
+
+# -- the topology matrix (the acceptance criterion) ------------------------
+
+
+TOPOLOGIES = [
+    pytest.param(Local(), id="local"),
+    pytest.param(Sharded(), id="sharded"),
+    pytest.param(Cluster(n_workers=2), id="cluster-2w"),
+    pytest.param(Hybrid(n_workers=1, devices_per_worker=4), id="hybrid-1wx4d"),
+    pytest.param(Hybrid(n_workers=2, devices_per_worker=4), id="hybrid-2wx4d"),
+]
+
+
+@pytest.mark.parametrize("engine", ["jnp", "kernels"])
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+def test_topology_matrix_bitwise(store, streaming_ref, tmp_path, engine,
+                                 topology):
+    """Local ≡ Sharded ≡ Cluster ≡ Hybrid, bitwise, both engines —
+    one entry point, any way of cutting the pass across hardware."""
+    res = exec_fit(store, CFG, jax.random.PRNGKey(KEY), topology=topology,
+                   engine=engine, merge_group=G, prefetch=0,
+                   cluster_dir=str(tmp_path / "cl"), worker_timeout=300)
+    assert_bit_identical(streaming_ref(engine), res)
+    if isinstance(topology, (Cluster, Hybrid)):
+        cl = res.diagnostics["cluster"]
+        assert cl["devices_per_worker"] == topology.devices_per_worker
+        assert all(p["redispatched_groups"] == [] for p in cl["passes"])
+
+
+def test_sharded_ragged_tail_bitwise(tmp_path):
+    """A store whose last merge group is ragged (short chunk count AND
+    a short last chunk) still folds bitwise-identically under the
+    device-parallel engine — the tail falls back to the sequential
+    fold with the same per-chunk update."""
+    data = PlantedCCAData(n=1472, da=DA, db=DB, rank=5, noise=0.4,
+                          seed=13, chunk=CHUNK)  # 12 chunks, last = 64 rows
+    store = ingest_planted(str(tmp_path / "ragged"), data)
+    assert n_full_chunks(store) == store.n_chunks - 1
+    for engine in ("jnp", "kernels"):
+        ref = PassRunner(store, CFG, engine=engine, prefetch=0,
+                         merge_group=G).fit(jax.random.PRNGKey(KEY))
+        res = PassEngine(CFG, engine=engine, topology=Sharded(),
+                         merge_group=G).run_mesh(store,
+                                                 jax.random.PRNGKey(KEY))
+        assert_bit_identical(ref, res)
+
+
+def test_streaming_topology_knob_matches_local(store, streaming_ref):
+    """randomized_cca_streaming(topology=Sharded()) folds the stacked
+    chunks through the mesh engine and still matches Local bitwise."""
+    A, B = store.materialize()
+    Ac = jnp.asarray(A).reshape(store.n_chunks, CHUNK, DA)
+    Bc = jnp.asarray(B).reshape(store.n_chunks, CHUNK, DB)
+    res = randomized_cca_streaming(Ac, Bc, CFG, jax.random.PRNGKey(KEY),
+                                   engine="jnp", merge_group=G,
+                                   topology=Sharded())
+    assert_bit_identical(streaming_ref("jnp"), res)
+
+
+def test_sharded_forced_devices_subprocess(store, streaming_ref):
+    """In-process Sharded over a FORCED 4-device host mesh (fresh
+    interpreter, XLA flag set before jax wakes up) reproduces the
+    1-device session result bitwise — device count is invisible."""
+    script = (
+        "import numpy as np, jax\n"
+        "from repro.core.rcca import RCCAConfig\n"
+        "from repro.exec import PassEngine, Sharded\n"
+        "from repro.store import ViewStoreReader\n"
+        f"assert jax.local_device_count() == 4, jax.devices()\n"
+        f"cfg = RCCAConfig(k={CFG.k}, p={CFG.p}, q={CFG.q}, nu={CFG.nu}, "
+        "center=True)\n"
+        f"r = ViewStoreReader({store.path!r})\n"
+        f"res = PassEngine(cfg, engine='kernels', topology=Sharded(), "
+        f"merge_group={G}).run_mesh(r, jax.random.PRNGKey({KEY}))\n"
+        "for n in ('Xa', 'Xb', 'rho', 'Qa', 'Qb'):\n"
+        "    np.save(f'{n}.npy', np.asarray(getattr(res, n)))\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC_ROOT + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=4").strip()
+    workdir = str(store.path) + ".sub"
+    os.makedirs(workdir, exist_ok=True)
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          cwd=workdir, capture_output=True, text=True,
+                          timeout=480)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    ref = streaming_ref("kernels")
+    for name in ("Xa", "Xb", "rho", "Qa", "Qb"):
+        got = np.load(os.path.join(workdir, f"{name}.npy"))
+        assert np.array_equal(np.asarray(getattr(ref, name)), got), name
+
+
+# -- hybrid worker fault tolerance -----------------------------------------
+
+
+def _publish_round(store, cluster_dir, pass_idx=0, kind="power",
+                   engine="jnp", fit_id="fitH"):
+    from repro.cluster.coordinator import algo_meta
+    from repro.core.rcca import init_Q
+
+    Qa, Qb = init_Q(jax.random.PRNGKey(KEY), store.da, store.db, CFG)
+    expect = pt.binding_meta(fit_id=fit_id, pass_idx=pass_idx, kind=kind,
+                             engine=engine, fingerprint=store.fingerprint(),
+                             merge_group=G, algo=algo_meta(CFG))
+    pt.write_round(cluster_dir, pass_idx, Qa, Qb, {**expect, "n_shards": 2})
+    return expect
+
+
+def _spawn_hybrid_worker(store, cluster_dir, shard, devices=4,
+                         extra_env=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC_ROOT + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={devices}"
+                        ).strip()
+    if extra_env:
+        env.update(extra_env)
+    cmd = [sys.executable, "-m", "repro.cluster.worker",
+           "--store", store.path, "--cluster-dir", cluster_dir,
+           "--shard", str(shard), "--n-shards", "2", "--pass-idx", "0",
+           "--devices", str(devices), "--prefetch", "0"]
+    return subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=480)
+
+
+def test_hybrid_worker_kill_resume_identical_partials(store, tmp_path):
+    """A hybrid worker killed mid-pass resumes at group granularity:
+    published groups are skipped, the rest are redone, and the final
+    partial set is bitwise identical to an unkilled SEQUENTIAL worker's
+    — the device mesh is invisible in the partials too."""
+    cd_kill = str(tmp_path / "kill")
+    cd_ref = str(tmp_path / "ref")
+    expect = _publish_round(store, cd_kill)
+    _publish_round(store, cd_ref)
+
+    # worker 0 of 2 with G=2 owns groups 0,2,4 (chunks 0,1 / 4,5 / 8,9);
+    # kill after chunk 5 → groups 0,2 published, group 4 lost
+    proc = _spawn_hybrid_worker(store, cd_kill, 0,
+                                extra_env={KILL_ENV: "0:5"})
+    assert proc.returncode == 3, proc.stdout + proc.stderr
+    have = pt.collect_partials(cd_kill, 0, 6, expect)
+    assert set(have) == {0, 2}
+
+    resumed = _spawn_hybrid_worker(store, cd_kill, 0)
+    assert resumed.returncode == 0, resumed.stdout + resumed.stderr
+    assert "published 1 partial(s)" in resumed.stdout  # only group 4 left
+
+    run_worker(store.path, cd_ref, 0, 2, 0, prefetch=0)  # sequential ref
+    for g in (0, 2, 4):
+        s1, m1 = pt.read_partial(cd_kill, 0, g)
+        s2, _ = pt.read_partial(cd_ref, 0, g)
+        assert pt.binding_matches(m1, expect)
+        for x, y in zip(s1, s2):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), g
+
+
+# -- topology declarations -------------------------------------------------
+
+
+def test_as_topology_coercion():
+    assert isinstance(as_topology("local"), Local)
+    assert as_topology("cluster", n_workers=3).n_workers == 3
+    h = as_topology("hybrid", n_workers=2, devices_per_worker=8)
+    assert (h.n_workers, h.devices_per_worker) == (2, 8)
+    t = Sharded()
+    assert as_topology(t) is t
+    with pytest.raises(ValueError, match="unknown topology"):
+        as_topology("mesh")
+
+
+def test_sharded_col_axis_rejected_for_streaming(store):
+    """Feature sharding (col_axis) is the resident-mode rcca_dist path;
+    the streaming engine must refuse it rather than silently drop the
+    bitwise contract."""
+    eng = PassEngine(CFG, engine="jnp",
+                     topology=Sharded(col_axis="model"), merge_group=G)
+    with pytest.raises(ValueError, match="col_axis"):
+        eng.run_mesh(store, jax.random.PRNGKey(KEY))
+
+
+def test_stacked_chunks_validates_pairing():
+    A = jnp.zeros((4, 8, 3))
+    B = jnp.zeros((5, 8, 2))
+    with pytest.raises(ValueError, match="paired"):
+        StackedChunks(A, B)
+
+
+def test_cluster_topologies_need_exec_fit(store):
+    eng = PassEngine(CFG, topology=Cluster(n_workers=2), merge_group=G)
+    with pytest.raises(ValueError, match="exec.fit"):
+        eng.run(store, jax.random.PRNGKey(KEY))
