@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-quick verify-cluster verify-topology bench bench-kernels bench-io bench-cluster sweep-blocks
+.PHONY: verify verify-quick verify-cluster verify-topology analyze bench bench-kernels bench-io bench-cluster sweep-blocks
 
 # full tier-1 suite + the interpret-mode kernel-parity subset
 verify:
@@ -18,6 +18,11 @@ verify-cluster:
 # + hybrid fault tolerance, under a forced 4-device host mesh
 verify-topology:
 	bash scripts/verify.sh --topology
+
+# static analysis gate: architecture lint + kernel contract checker +
+# cluster-protocol model check (+ ruff/mypy when installed)
+analyze:
+	bash scripts/verify.sh --analyze
 
 # all BENCH jsons (the committed per-PR perf trajectory under results/)
 bench: bench-kernels bench-io bench-cluster

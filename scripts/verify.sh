@@ -6,6 +6,9 @@
 #   scripts/verify.sh --cluster  # only the multi-worker cluster + store suites
 #   scripts/verify.sh --topology # exec topology-parity + hybrid suites under
 #                                # a forced 4-device host mesh
+#   scripts/verify.sh --analyze  # static analysis gate: repro.analysis
+#                                # (lint + kernel contracts + protocol model)
+#                                # plus ruff/mypy when installed
 #
 # Extra args after the mode flag are forwarded to pytest.
 set -euo pipefail
@@ -21,6 +24,9 @@ elif [[ "${1:-}" == "--cluster" ]]; then
   shift
 elif [[ "${1:-}" == "--topology" ]]; then
   mode=topology
+  shift
+elif [[ "${1:-}" == "--analyze" ]]; then
+  mode=analyze
   shift
 fi
 
@@ -51,10 +57,29 @@ topology() {
     tests/test_cluster_failures.py "$@"
 }
 
+# static analysis gate: the repro.analysis suite is mandatory (stdlib +
+# jax only); ruff and mypy run when importable and are skipped with a
+# notice otherwise (the runtime image does not ship them — CI installs
+# both from requirements-dev.txt, so the gate is strict there)
+analyze() {
+  python -m repro.analysis
+  if command -v ruff >/dev/null; then
+    ruff check src/repro tests
+  else
+    echo "analyze: ruff not installed — skipping (CI runs it)"
+  fi
+  if command -v mypy >/dev/null; then
+    mypy --config-file pyproject.toml src/repro/exec src/repro/store
+  else
+    echo "analyze: mypy not installed — skipping (CI runs it)"
+  fi
+}
+
 case "$mode" in
   quick)    parity "$@" ;;
   cluster)  cluster "$@" ;;
   topology) topology "$@" ;;
+  analyze)  analyze ;;
   *)
     # the full pytest run already covers the cluster suite; parity is
     # re-run standalone to keep the kernel gate loud and isolated

@@ -1,0 +1,40 @@
+"""Static analysis & sanitizers for the repro tree.
+
+Four checkers, one CLI (``python -m repro.analysis``), one CI gate:
+
+- :mod:`~repro.analysis.kernel_check` — verifies every registered
+  Pallas kernel's launch plan (grid × block × index-map consistency,
+  output coverage, VMEM budget, dtype rules, autotune-cache validity)
+  by abstract evaluation, no device needed.
+- :mod:`~repro.analysis.lint` — AST architecture lint (RCCA001–005)
+  pinning the disciplines the bitwise-reproducibility contract rests
+  on; ``# rcca: noqa[CODE]`` suppresses with justification.
+- :mod:`~repro.analysis.protocol` — cluster-protocol race detector: an
+  offline invariant checker over recorded publish/read/rename/merge
+  traces, plus a small-model interleaving explorer that exhaustively
+  permutes worker publish/crash orderings and model-checks the
+  coordinator's merge against the canonical pairwise tree.
+- :mod:`~repro.analysis.sanitize` — runtime determinism sanitizer
+  (``RCCA_SANITIZE=1``): fingerprints accumulator state at every
+  merge-group boundary; a comparator pinpoints the first divergent
+  group between two runs.
+
+Submodules import lazily — ``repro.analysis`` is imported by runtime
+modules (accumulate's sanitizer hook) and must stay cycle-free and
+cheap.
+"""
+
+from .report import Violation, render_report
+
+_SUBMODULES = ("kernel_check", "lint", "protocol", "report", "sanitize")
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        import importlib
+
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = ["Violation", "render_report", *_SUBMODULES]

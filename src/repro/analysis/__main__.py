@@ -1,0 +1,114 @@
+"""``python -m repro.analysis`` — the static-analysis gate.
+
+Default (no subcommand) runs the full offline suite: architecture lint
+over the tree, the kernel contract checker over every registered
+kernel + the autotune cache, and the cluster-protocol small-model
+interleaving exploration.  Exit status 0 iff everything is clean —
+this is what ``make analyze``, ``scripts/verify.sh --analyze`` and the
+CI ``analyze`` job call.
+
+Subcommands::
+
+    lint [paths...]          architecture lint (default: the whole tree)
+    kernels                  kernel contracts + autotune cache
+    protocol [--trace FILE]  trace invariants (FILE or
+                             $RCCA_PROTOCOL_TRACE) + the interleaving
+                             exploration
+    sanitize-diff A B        compare two RCCA_SANITIZE_OUT traces and
+                             name the first divergent merge boundary
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .report import render_report
+
+
+def _run_lint(paths) -> int:
+    from .lint import lint_file, lint_tree
+
+    if paths:
+        import os
+
+        vs = []
+        for p in paths:
+            # resolve the src root so rule scoping sees repro/...
+            ap = os.path.abspath(p)
+            root = ap
+            while os.path.basename(os.path.dirname(root)) and \
+                    os.path.basename(root) != "repro":
+                root = os.path.dirname(root)
+            vs.extend(lint_file(ap, os.path.dirname(root)))
+    else:
+        vs = lint_tree()
+    print(render_report(vs, title="architecture lint (RCCA0xx)"))
+    return 1 if vs else 0
+
+
+def _run_kernels() -> int:
+    from .kernel_check import check_registry
+
+    vs = check_registry()
+    print(render_report(vs, title="kernel contracts (RCCA1xx)"))
+    return 1 if vs else 0
+
+
+def _run_protocol(trace: str | None) -> int:
+    from .protocol import check_trace_file, explore_interleavings
+
+    vs = list(check_trace_file(trace))
+    report = explore_interleavings()
+    vs.extend(report.violations())
+    print(render_report(vs, title="cluster protocol (RCCA2xx)"))
+    print(f"  model: {report.n_scenarios} crash scenarios, "
+          f"{report.n_interleavings} interleavings explored")
+    return 1 if vs else 0
+
+
+def _run_sanitize_diff(a: str, b: str) -> int:
+    from .sanitize import first_divergence, load
+
+    div = first_divergence(load(a), load(b))
+    if div is None:
+        print("sanitize traces identical")
+        return 0
+    print(f"RCCA301 first divergence at record {div['index']} "
+          f"({div['reason']}):")
+    print(f"  a: {div['a']}")
+    print(f"  b: {div['b']}")
+    return 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = ap.add_subparsers(dest="cmd")
+    p_lint = sub.add_parser("lint", help="architecture lint")
+    p_lint.add_argument("paths", nargs="*")
+    sub.add_parser("kernels", help="kernel contracts + autotune cache")
+    p_proto = sub.add_parser("protocol", help="protocol trace + model check")
+    p_proto.add_argument("--trace", default=None)
+    p_diff = sub.add_parser("sanitize-diff", help="compare sanitize traces")
+    p_diff.add_argument("a")
+    p_diff.add_argument("b")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "lint":
+        return _run_lint(args.paths)
+    if args.cmd == "kernels":
+        return _run_kernels()
+    if args.cmd == "protocol":
+        return _run_protocol(args.trace)
+    if args.cmd == "sanitize-diff":
+        return _run_sanitize_diff(args.a, args.b)
+    # full gate
+    rc = _run_lint([])
+    rc |= _run_kernels()
+    rc |= _run_protocol(None)
+    print("ANALYZE: " + ("FAIL" if rc else "OK"))
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,383 @@
+"""AST architecture lint for the repro tree (rules RCCA001–RCCA005).
+
+The bitwise-reproducibility contract (DESIGN.md, README §Bitwise
+reproducibility) survives only as long as a handful of architectural
+disciplines hold.  Each rule here pins one of them:
+
+  RCCA001  accumulator-fold loops live in ``repro/exec`` only.  Any
+           loop outside it that calls the fold/merge primitives
+           (``merge_stats``, ``merge_power_stats``, ``merge_final_stats``,
+           ``push_group``, ``end_chunk``, ``flush_tail``, or a
+           ``*update_fn``) is reimplementing accumulation order — the
+           exact thing the canonical pairwise tree exists to own.
+  RCCA002  version-sensitive jax APIs (``jax.experimental.pallas.tpu``
+           a.k.a. ``pltpu``, ``jax.experimental.shard_map``) are used
+           only through :mod:`repro.kernels.compat`.  Everywhere else
+           imports the shim, so a jax upgrade is a one-file change.
+  RCCA003  view-store shard files (``shard_*.a.npy`` / ``*.b.npy``)
+           are read only by ``repro/store``.  Direct reads elsewhere
+           bypass the manifest (fingerprint, row ranges, dtype) and
+           break the store's atomic-publish guarantee.
+  RCCA004  pass-path modules (``repro/exec``, ``repro/cluster``,
+           ``repro/core/rcca.py``, ``repro/store/passes.py``) are
+           deterministic: no wall-clock (``time.time``), no ``uuid``,
+           no legacy global RNG (``random.*`` / ``np.random.*``
+           module-level calls), no iteration over ``set()`` — set
+           order is a hash-seed coin flip and merge-group iteration
+           order is part of the contract.
+  RCCA005  cluster/store file writes go through the atomic
+           staging+rename helpers (``repro.ckpt.save_pytree``, the
+           store writer's staging dir): no bare ``open(.., "w"/"wb")``
+           or ``np.save`` outside them.  A torn write that a reader
+           can observe is a protocol violation, not a perf bug.
+
+Suppression: a trailing ``# rcca: noqa`` comment silences every rule
+on that line; ``# rcca: noqa[RCCA004]`` (comma-separated codes)
+silences only those rules.  Every suppression in the tree should carry
+a justification comment — the lint is the contract's memory, noqa is
+the documented exception.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Iterable, List, Optional, Sequence
+
+from .report import Violation
+
+# ---------------------------------------------------------------------------
+# rule scoping
+# ---------------------------------------------------------------------------
+
+#: modules allowed to hold accumulator-fold loops (RCCA001)
+FOLD_HOME = ("repro/exec/",)
+
+#: the one module allowed to touch version-sensitive jax APIs (RCCA002)
+COMPAT_HOME = ("repro/kernels/compat.py",)
+
+#: modules allowed to read store shard files directly (RCCA003)
+STORE_HOME = ("repro/store/",)
+
+#: deterministic pass-path modules (RCCA004)
+PASS_PATH = ("repro/exec/", "repro/cluster/", "repro/core/rcca.py",
+             "repro/store/passes.py")
+
+#: modules whose file writes must be staged+renamed (RCCA005).
+#: ``repro/ckpt`` is the atomic helper itself and is out of scope.
+ATOMIC_WRITE_SCOPE = ("repro/cluster/", "repro/store/")
+
+#: fold/merge primitives whose looped use outside repro/exec trips RCCA001
+FOLD_CALLS = frozenset({
+    "merge_stats", "merge_power_stats", "merge_final_stats",
+    "push_group", "end_chunk", "flush_tail", "reduce_group_partials",
+})
+FOLD_FN_RE = re.compile(r"^(jit_)?update_fn$")
+
+#: version-sensitive jax modules (RCCA002) — prefix match on import path
+VERSION_SENSITIVE = ("jax.experimental.shard_map",
+                     "jax.experimental.pallas.tpu")
+
+#: view-store shard data-file naming (RCCA003)
+SHARD_FILE_RE = re.compile(r"\.(a|b)\.npy\b")
+
+NOQA_RE = re.compile(r"#\s*rcca:\s*noqa(?:\[([A-Za-z0-9,\s]+)\])?")
+
+
+def _in(relpath: str, prefixes: Sequence[str]) -> bool:
+    return any(relpath == p or relpath.startswith(p) for p in prefixes)
+
+
+# ---------------------------------------------------------------------------
+# per-rule AST visitors
+# ---------------------------------------------------------------------------
+
+
+def _call_name(node: ast.Call) -> Optional[str]:
+    """Trailing identifier of the callee: ``f(...)`` → f, ``o.m(...)`` → m."""
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` attribute chain as a dotted string, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+_LOOPS = (ast.For, ast.AsyncFor, ast.While, ast.comprehension)
+
+
+def _rule_001(tree: ast.AST, relpath: str) -> Iterable[Violation]:
+    if _in(relpath, FOLD_HOME):
+        return
+    # collect line spans of loop bodies, then flag fold calls inside them
+    loop_nodes: List[ast.AST] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.AsyncFor, ast.While)):
+            loop_nodes.append(node)
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            loop_nodes.append(node)
+    seen = set()
+    for loop in loop_nodes:
+        for node in ast.walk(loop):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node)
+            if name is None:
+                continue
+            if name in FOLD_CALLS or FOLD_FN_RE.match(name):
+                key = (node.lineno, name)
+                if key in seen:
+                    continue
+                seen.add(key)
+                yield Violation(
+                    "RCCA001", relpath, node.lineno,
+                    f"accumulator-fold call `{name}` in a loop outside "
+                    "repro/exec — fold order is owned by the canonical "
+                    "pairwise tree (repro.exec.accumulate)")
+
+
+def _rule_002(tree: ast.AST, relpath: str) -> Iterable[Violation]:
+    if _in(relpath, COMPAT_HOME):
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if any(alias.name.startswith(m) for m in VERSION_SENSITIVE):
+                    yield Violation(
+                        "RCCA002", relpath, node.lineno,
+                        f"version-sensitive import `{alias.name}` outside "
+                        "repro.kernels.compat — use the compat shim")
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            hits = [mod] if any(mod.startswith(m) for m in VERSION_SENSITIVE) \
+                else [f"{mod}.{a.name}" for a in node.names
+                      if any(f"{mod}.{a.name}".startswith(m)
+                             for m in VERSION_SENSITIVE)]
+            for h in hits:
+                yield Violation(
+                    "RCCA002", relpath, node.lineno,
+                    f"version-sensitive import `{h}` outside "
+                    "repro.kernels.compat — use the compat shim")
+        elif isinstance(node, ast.Attribute):
+            dotted = _dotted(node)
+            if dotted and (dotted.startswith("pltpu.")
+                           or any(dotted.startswith(m + ".")
+                                  for m in VERSION_SENSITIVE)):
+                yield Violation(
+                    "RCCA002", relpath, node.lineno,
+                    f"version-sensitive API use `{dotted}` outside "
+                    "repro.kernels.compat — use the compat shim")
+
+
+def _docstring_nodes(tree: ast.AST) -> set:
+    """ids of string constants that are docstrings (documentation may
+    legitimately name shard files; code must not)."""
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Module, ast.ClassDef, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            body = node.body
+            if body and isinstance(body[0], ast.Expr) \
+                    and isinstance(body[0].value, ast.Constant) \
+                    and isinstance(body[0].value.value, str):
+                out.add(id(body[0].value))
+    return out
+
+
+def _rule_003(tree: ast.AST, relpath: str) -> Iterable[Violation]:
+    if _in(relpath, STORE_HOME):
+        return
+    docstrings = _docstring_nodes(tree)
+    # constants embedded in an f-string are reported via the JoinedStr,
+    # not double-reported on their own
+    embedded = {id(v) for node in ast.walk(tree)
+                if isinstance(node, ast.JoinedStr) for v in node.values}
+    for node in ast.walk(tree):
+        if id(node) in docstrings or id(node) in embedded:
+            continue
+        text = None
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            text = node.value
+        elif isinstance(node, ast.JoinedStr):
+            text = "".join(v.value for v in node.values
+                           if isinstance(v, ast.Constant)
+                           and isinstance(v.value, str))
+        if text and SHARD_FILE_RE.search(text):
+            yield Violation(
+                "RCCA003", relpath, node.lineno,
+                "store shard data file referenced outside repro/store — "
+                "read views through ViewStoreReader (manifest-checked, "
+                "atomic-publish aware)")
+
+
+#: module-level legacy RNG entry points (unseeded global state)
+_RNG_CALLS = frozenset({
+    "random.random", "random.randint", "random.randrange", "random.choice",
+    "random.shuffle", "random.sample", "random.uniform",
+    "np.random.rand", "np.random.randn", "np.random.randint",
+    "np.random.random", "np.random.permutation", "np.random.shuffle",
+    "np.random.choice", "numpy.random.rand", "numpy.random.randn",
+    "numpy.random.randint", "numpy.random.random",
+})
+_CLOCK_CALLS = frozenset({"time.time", "time.time_ns"})
+
+
+def _rule_004(tree: ast.AST, relpath: str) -> Iterable[Violation]:
+    if not _in(relpath, PASS_PATH):
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            dotted = _dotted(node.func)
+            if dotted in _CLOCK_CALLS:
+                yield Violation(
+                    "RCCA004", relpath, node.lineno,
+                    f"wall-clock `{dotted}()` in a pass-path module — "
+                    "pass results must not depend on when they ran")
+            elif dotted in _RNG_CALLS:
+                yield Violation(
+                    "RCCA004", relpath, node.lineno,
+                    f"unseeded global RNG `{dotted}()` in a pass-path "
+                    "module — thread a seeded Generator / jax PRNG key")
+            elif dotted and (dotted == "uuid.uuid4"
+                             or dotted.startswith("uuid.uuid")):
+                yield Violation(
+                    "RCCA004", relpath, node.lineno,
+                    f"`{dotted}()` in a pass-path module — identifiers in "
+                    "the pass path must be derived, not random")
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            it = node.iter
+            is_set = (isinstance(it, ast.Call)
+                      and isinstance(it.func, ast.Name)
+                      and it.func.id in ("set", "frozenset")) \
+                or isinstance(it, ast.Set)
+            if is_set:
+                yield Violation(
+                    "RCCA004", relpath, node.lineno,
+                    "iteration over a set in a pass-path module — set "
+                    "order is hash-seed dependent; use dict.fromkeys or "
+                    "sorted() for a deterministic order")
+        if isinstance(node, ast.comprehension):
+            it = node.iter
+            if (isinstance(it, ast.Call) and isinstance(it.func, ast.Name)
+                    and it.func.id in ("set", "frozenset")):
+                yield Violation(
+                    "RCCA004", relpath, it.lineno,
+                    "comprehension over a set in a pass-path module — set "
+                    "order is hash-seed dependent; use dict.fromkeys or "
+                    "sorted() for a deterministic order")
+
+
+_SAVE_CALLS = frozenset({"np.save", "np.savez", "np.savez_compressed",
+                         "numpy.save", "numpy.savez",
+                         "numpy.savez_compressed"})
+
+
+def _rule_005(tree: ast.AST, relpath: str) -> Iterable[Violation]:
+    if not _in(relpath, ATOMIC_WRITE_SCOPE):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if dotted in _SAVE_CALLS:
+            yield Violation(
+                "RCCA005", relpath, node.lineno,
+                f"`{dotted}` in cluster/store scope — write through an "
+                "atomic staging+rename helper (repro.ckpt.save_pytree / "
+                "the store writer's staging dir)")
+            continue
+        callee = _call_name(node)
+        if callee != "open":
+            continue
+        mode = None
+        if len(node.args) >= 2:
+            a = node.args[1]
+            if isinstance(a, ast.Constant) and isinstance(a.value, str):
+                mode = a.value
+        for kw in node.keywords:
+            if kw.arg == "mode" and isinstance(kw.value, ast.Constant) \
+                    and isinstance(kw.value.value, str):
+                mode = kw.value.value
+        if mode and mode[0] in ("w", "x"):
+            yield Violation(
+                "RCCA005", relpath, node.lineno,
+                f"direct `open(.., {mode!r})` in cluster/store scope — "
+                "publish through atomic staging+rename so readers never "
+                "observe a torn file (appends are exempt)")
+
+
+_RULES = (_rule_001, _rule_002, _rule_003, _rule_004, _rule_005)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def _noqa_codes(line: str) -> Optional[frozenset]:
+    """Suppressed codes on this source line: ``frozenset()`` means ALL
+    rules (bare noqa), ``None`` means no suppression."""
+    m = NOQA_RE.search(line)
+    if not m:
+        return None
+    if not m.group(1):
+        return frozenset()
+    return frozenset(c.strip().upper() for c in m.group(1).split(","))
+
+
+def lint_source(src: str, relpath: str) -> List[Violation]:
+    """Lint one module's source.  ``relpath`` is the path relative to
+    the ``src/`` root (e.g. ``repro/cluster/worker.py``) — rule scoping
+    keys off it, which is also what makes fixture snippets testable
+    under any synthetic path."""
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Violation("RCCA000", relpath, e.lineno or 0,
+                          f"unparsable module: {e.msg}")]
+    lines = src.splitlines()
+    out: List[Violation] = []
+    for rule in _RULES:
+        for v in rule(tree, relpath):
+            line = lines[v.line - 1] if 0 < v.line <= len(lines) else ""
+            codes = _noqa_codes(line)
+            if codes is not None and (not codes or v.code in codes):
+                continue
+            out.append(v)
+    return out
+
+
+def lint_file(path: str, src_root: str) -> List[Violation]:
+    relpath = os.path.relpath(path, src_root).replace(os.sep, "/")
+    with open(path) as f:
+        return lint_source(f.read(), relpath)
+
+
+def lint_tree(src_root: Optional[str] = None) -> List[Violation]:
+    """Lint every ``repro`` module under ``src_root`` (default: the
+    source root this package was imported from)."""
+    if src_root is None:
+        src_root = os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+    out: List[Violation] = []
+    pkg_root = os.path.join(src_root, "repro")
+    for dirpath, dirnames, filenames in os.walk(pkg_root):
+        dirnames.sort()
+        for fname in sorted(filenames):
+            if fname.endswith(".py"):
+                out.extend(lint_file(os.path.join(dirpath, fname), src_root))
+    return out

@@ -1,0 +1,294 @@
+"""Cluster-protocol race detector (RCCA2xx).
+
+Two complementary halves:
+
+1. **Trace recording + offline invariant checking.**  The partial
+   store (:mod:`repro.cluster.partials`) and the coordinator emit
+   protocol events (stage/commit/twin_drop/stale_replace/read/merge)
+   through :func:`trace_event` whenever ``$RCCA_PROTOCOL_TRACE`` names
+   a JSONL file — the env var propagates to worker subprocesses, and
+   single-line O_APPEND writes keep concurrent emitters intact.
+   :func:`check_trace` then asserts the protocol invariants offline:
+
+     RCCA201  no reader ever observes a staging path (``*.stage<pid>``
+              must be invisible outside its writer).
+     RCCA202  at-most-once merge per (fit, pass, group) — a group that
+              enters the pairwise tree twice is double-counted data.
+     RCCA203  every successful partial/round read is preceded by a
+              commit of that path: a read with no commit means some
+              writer bypassed the atomic staging+rename (exactly what
+              a torn-write bug looks like in a trace).
+     RCCA204  stale replacement only across bindings: replacing a
+              partial whose binding already matches the writer's is a
+              lost-update race, not staleness.
+
+2. **Small-model interleaving exploration.**  :func:`explore_interleavings`
+   model-checks the publish/crash protocol exhaustively for a small
+   configuration (2 workers × ≤4 merge groups): every interleaving of
+   the workers' publish sequences × every crash-after-prefix point,
+   with the crashed worker's unpublished groups re-dispatched — and for
+   every ordering, the coordinator's streamed group-order merge
+   (:class:`repro.exec.accumulate.SegmentedAccumulator`) must agree
+   BITWISE with the canonical
+   :func:`repro.exec.accumulate.reduce_group_partials` on
+   order-sensitive float32 payloads.  ``mutate`` injects protocol bugs
+   (arrival-order merge, torn publish) so tests can prove the model
+   checker actually detects them.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from .report import Violation
+
+TRACE_ENV = "RCCA_PROTOCOL_TRACE"
+
+
+# ---------------------------------------------------------------------------
+# recording
+# ---------------------------------------------------------------------------
+
+
+def trace_event(op: str, path: str = "", **meta) -> None:
+    """Append one protocol event to the trace file named by
+    ``$RCCA_PROTOCOL_TRACE`` (no-op when unset).  One JSON object per
+    line; single ``os.write`` with O_APPEND so concurrent workers
+    interleave whole lines, never bytes."""
+    out = os.environ.get(TRACE_ENV)
+    if not out:
+        return
+    rec = {"op": op, "path": path, "pid": os.getpid()}
+    if meta:
+        rec["meta"] = meta
+    line = json.dumps(rec, sort_keys=True, default=str) + "\n"
+    fd = os.open(out, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+    try:
+        os.write(fd, line.encode())
+    finally:
+        os.close(fd)
+
+
+def read_trace(path: str) -> List[dict]:
+    events = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return events
+
+
+# ---------------------------------------------------------------------------
+# offline invariant checking
+# ---------------------------------------------------------------------------
+
+
+def check_trace(events: Sequence[dict], *, where: str = "trace") -> List[Violation]:
+    """RCCA201–204 over a recorded event sequence (file order = the
+    observable serialization on the shared FS)."""
+    out: List[Violation] = []
+    committed = set()
+    merged: Dict[tuple, int] = {}
+    for i, ev in enumerate(events):
+        op = ev.get("op", "?")
+        path = ev.get("path", "")
+        meta = ev.get("meta", {})
+        loc = f"{where}#{i}"
+        if op == "commit":
+            committed.add(path)
+        elif op == "read":
+            if ".stage" in os.path.basename(path):
+                out.append(Violation(
+                    "RCCA201", loc, i,
+                    f"reader observed staging path {path!r} — staged tmp "
+                    "must be invisible until the atomic rename"))
+            elif path not in committed:
+                out.append(Violation(
+                    "RCCA203", loc, i,
+                    f"read of {path!r} with no prior commit — a writer "
+                    "bypassed the atomic staging+rename publish"))
+        elif op == "merge":
+            key = (meta.get("fit_id"), meta.get("pass_idx"),
+                   meta.get("group"))
+            if key in merged:
+                out.append(Violation(
+                    "RCCA202", loc, i,
+                    f"merge group {key[2]} of pass {key[1]} entered the "
+                    f"tree twice (first at event {merged[key]}) — "
+                    "double-counted data"))
+            else:
+                merged[key] = i
+        elif op == "stale_replace":
+            if meta.get("old_binding") == meta.get("new_binding"):
+                out.append(Violation(
+                    "RCCA204", loc, i,
+                    f"stale replacement of {path!r} with an IDENTICAL "
+                    "binding — that is a lost-update race, not staleness"))
+    return out
+
+
+def check_trace_file(path: Optional[str] = None) -> List[Violation]:
+    path = path or os.environ.get(TRACE_ENV)
+    if not path or not os.path.exists(path):
+        return []
+    return check_trace(read_trace(path), where=path)
+
+
+# ---------------------------------------------------------------------------
+# small-model interleaving exploration
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ExplorationReport:
+    n_groups: int
+    n_workers: int
+    n_scenarios: int = 0
+    n_interleavings: int = 0
+    mismatches: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.mismatches
+
+    def violations(self) -> List[Violation]:
+        return [Violation("RCCA205", "model", 0, m) for m in self.mismatches]
+
+
+def _interleavings(seqs: List[List[int]]):
+    """Every merge of the (order-preserving) per-worker sequences."""
+    seqs = [s for s in seqs if s]
+    if not seqs:
+        yield []
+        return
+    for i in range(len(seqs)):
+        head, rest = seqs[i][0], [list(s) for s in seqs]
+        rest[i] = rest[i][1:]
+        for tail in _interleavings(rest):
+            yield [head] + tail
+
+
+def _group_payload(g: int):
+    """Order-sensitive fp32 stats for group ``g``: summands with wildly
+    different magnitudes, so ANY deviation from the canonical reduction
+    order changes the result bits."""
+    import numpy as np
+
+    # [1e8, -1e8, 3, 4]: pairing (1e8 + -1e8) preserves the small terms
+    # (canonical tree → 7) while (1e8 + 3) absorbs them (any other
+    # pairing → 0) — a one-position reorder flips result bits.
+    magnitude = (1e8, -1e8, 3.0, 4.0)[g % 4]
+    base = np.asarray(
+        [magnitude, 1.0 + g, 1e8 * ((-1) ** g), 0.1 * (g + 1)],
+        dtype=np.float32)
+    return {"y": base, "n": np.float32(g + 1)}
+
+
+def explore_interleavings(n_workers: int = 2, n_groups: int = 4, *,
+                          mutate: Optional[str] = None) -> ExplorationReport:
+    """Exhaustive small-model check of the publish/crash/merge protocol.
+
+    Model: ``n_groups`` merge groups strided over ``n_workers`` workers
+    (worker ``w`` owns groups ``g ≡ w (mod n_workers)``, matching the
+    cluster's shard assignment); workers publish their groups in
+    ascending order.  Scenarios: the fault-free run plus every single
+    crash (any worker, after any prefix of its publishes), with the
+    dead worker's unpublished groups re-dispatched to a repair worker.
+    For each scenario × each interleaving of the surviving publish
+    sequences, the coordinator merge is replayed as the streamed
+    group-order :class:`~repro.exec.accumulate.SegmentedAccumulator`
+    and compared BITWISE against the canonical
+    :func:`~repro.exec.accumulate.reduce_group_partials`.
+
+    ``mutate`` injects a protocol bug (for testing the checker):
+      ``"arrival_order"`` — coordinator merges in publish order instead
+      of group order; ``"torn_publish"`` — the crashed worker's last
+      publish lands half-written and is NOT re-dispatched.
+    """
+    import numpy as np
+
+    from repro.exec.accumulate import (SegmentedAccumulator,
+                                       reduce_group_partials)
+
+    if n_groups > 4 or n_workers != 2:
+        raise ValueError("small-model explorer: 2 workers, ≤4 groups")
+
+    def init_fn():
+        return {"y": np.zeros(4, np.float32), "n": np.float32(0.0)}
+
+    n_chunks = n_groups  # one chunk per group: geometry for the tree
+    canonical = reduce_group_partials(
+        {g: _group_payload(g) for g in range(n_groups)}, init_fn,
+        n_chunks, group_chunks=1)
+
+    owners = {w: [g for g in range(n_groups) if g % n_workers == w]
+              for w in range(n_workers)}
+    report = ExplorationReport(n_groups=n_groups, n_workers=n_workers)
+
+    # scenario = (crashed worker or None, #publishes before the crash)
+    scenarios = [(None, 0)]
+    for w in range(n_workers):
+        for k in range(len(owners[w])):
+            scenarios.append((w, k))
+
+    for crashed, k in scenarios:
+        report.n_scenarios += 1
+        pub: Dict[int, List[int]] = {w: list(owners[w])
+                                     for w in range(n_workers)}
+        redispatch: List[int] = []
+        torn: Optional[int] = None
+        if crashed is not None:
+            alive = pub[crashed][:k]
+            lost = pub[crashed][k:]
+            if mutate == "torn_publish" and lost:
+                # the crash tears the NEXT publish: it lands on disk
+                # half-written and nobody re-dispatches it
+                torn = lost[0]
+                alive = alive + [torn]
+                lost = lost[1:]
+            pub[crashed] = alive
+            redispatch = lost
+        # repair worker appends the re-dispatched groups, in order
+        seqs = [pub[w] for w in range(n_workers)] + \
+               ([redispatch] if redispatch else [])
+
+        for order in _interleavings([list(s) for s in seqs]):
+            report.n_interleavings += 1
+            disk = {}
+            for g in order:  # last-write-wins publish serialization
+                payload = _group_payload(g)
+                if g == torn:
+                    payload = {"y": payload["y"].copy(), "n": payload["n"]}
+                    payload["y"][2:] = 0.0  # half-written partial
+                disk[g] = payload
+            merge_order = (sorted(disk) if mutate != "arrival_order"
+                           else list(dict.fromkeys(order)))
+            acc = SegmentedAccumulator(init_fn, n_chunks, group_chunks=1)
+            try:
+                for pos, g in enumerate(merge_order):
+                    if mutate == "arrival_order":
+                        # model the buggy coordinator faithfully: feed the
+                        # tree by arrival position, not group id
+                        acc.push_group(pos, disk[g])  # rcca: noqa[RCCA001] — the model checker replays (buggy) coordinators by design
+                    else:
+                        acc.push_group(g, disk[g])  # rcca: noqa[RCCA001] — model replay of the real coordinator merge
+                got = acc.result()
+            except ValueError as e:
+                report.mismatches.append(
+                    f"scenario crash={crashed}@{k} order={order}: "
+                    f"merge rejected: {e}")
+                continue
+            same = all(
+                np.asarray(got[f]).tobytes()
+                == np.asarray(canonical[f]).tobytes()
+                for f in ("y", "n"))
+            if not same:
+                report.mismatches.append(
+                    f"scenario crash={crashed}@{k} order={order}: merged "
+                    "result differs bitwise from the canonical pairwise "
+                    "tree")
+    return report

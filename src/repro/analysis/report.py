@@ -1,0 +1,44 @@
+"""Shared violation record + rendering for every repro.analysis checker.
+
+Each checker (lint, kernel_check, protocol, sanitize comparator) emits
+:class:`Violation` records under its own code range:
+
+  RCCA0xx  architecture lint          (:mod:`repro.analysis.lint`)
+  RCCA1xx  kernel contract checker    (:mod:`repro.analysis.kernel_check`)
+  RCCA2xx  cluster-protocol detector  (:mod:`repro.analysis.protocol`)
+  RCCA3xx  determinism sanitizer      (:mod:`repro.analysis.sanitize`)
+
+The CLI (``python -m repro.analysis``) renders them one per line in the
+conventional ``path:line: CODE message`` shape and exits nonzero when
+any are present.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding: a stable rule code, where, and why."""
+
+    code: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: {self.code} {self.message}"
+
+
+def render_report(violations: Sequence[Violation], *, title: str) -> str:
+    """Human-readable block: title, sorted findings, count line."""
+    lines = [title]
+    for v in sorted(violations, key=lambda v: (v.path, v.line, v.code)):
+        lines.append("  " + v.render())
+    n = len(violations)
+    lines.append(f"  -> {n} violation{'s' if n != 1 else ''}"
+                 if n else "  -> clean")
+    return "\n".join(lines)

@@ -1,0 +1,120 @@
+"""Determinism sanitizer (RCCA301): merge-boundary fingerprints.
+
+``RCCA_SANITIZE=1`` turns on a lightweight runtime recorder: the
+canonical accumulator (:mod:`repro.exec.accumulate`) fingerprints every
+merge-group sum at its boundary — the exact points the bitwise contract
+quantifies over — and the pass engines mark pass start/end, so a run
+leaves an ordered trace of ``(label, sha256-of-leaf-bytes)`` records in
+its diagnostics (``diagnostics["sanitize"]``) and, when
+``RCCA_SANITIZE_OUT`` names a file, as a JSON dump on disk.
+
+Two runs that claim bit-identity must produce IDENTICAL traces;
+:func:`first_divergence` compares them and names the first divergent
+merge boundary — turning "the final correlations differ in ulp 3"
+into "pass 2, merge group 17 already differs", which is the difference
+between a day of bisection and a glance.
+
+This module is a LEAF: nothing here imports repro (the accumulator
+imports us), and jax/numpy load lazily inside :func:`observe` so the
+disabled path costs one env lookup.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import List, Optional
+
+_trace: List[dict] = []
+_context: dict = {}
+
+
+def enabled() -> bool:
+    return os.environ.get("RCCA_SANITIZE") == "1"
+
+
+def reset() -> None:
+    """Start a fresh trace (runs own their traces; drivers call this at
+    fit start)."""
+    _trace.clear()
+    _context.clear()
+
+
+def set_context(**kv) -> None:
+    """Attach ambient labels (pass index, kind, topology) to subsequent
+    observations; ``None`` removes a key."""
+    for k, v in kv.items():
+        if v is None:
+            _context.pop(k, None)
+        else:
+            _context[k] = v
+
+
+def observe(label: str, tree) -> None:
+    """Fingerprint one accumulator pytree at a merge boundary.  The
+    digest covers every leaf's shape, dtype and exact bytes — two
+    observations agree iff the accumulator states are bit-identical."""
+    if not enabled():
+        return
+    import jax
+    import numpy as np
+
+    h = hashlib.sha256()
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for keypath, leaf in leaves:  # canonical pytree order — deterministic
+        arr = np.asarray(leaf)
+        h.update(jax.tree_util.keystr(keypath).encode())
+        h.update(str(arr.shape).encode())
+        h.update(str(arr.dtype).encode())
+        h.update(arr.tobytes())
+    full = dict(_context)
+    full["label"] = label
+    full["digest"] = h.hexdigest()
+    _trace.append(full)
+
+
+def snapshot() -> List[dict]:
+    """The trace so far (copy — safe to stash in diagnostics)."""
+    return [dict(r) for r in _trace]
+
+
+def dump(path: Optional[str] = None) -> Optional[str]:
+    """Write the trace as JSON to ``path`` (default:
+    ``$RCCA_SANITIZE_OUT``); returns the path written, or None."""
+    path = path or os.environ.get("RCCA_SANITIZE_OUT")
+    if not path or not _trace:
+        return None
+    tmp = f"{path}.tmp{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(_trace, f, indent=1)
+    os.replace(tmp, path)
+    return path
+
+
+def load(path: str) -> List[dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _key(rec: dict) -> tuple:
+    return tuple(sorted((k, v) for k, v in rec.items() if k != "digest"))
+
+
+def first_divergence(a: List[dict], b: List[dict]) -> Optional[dict]:
+    """First merge boundary where two traces disagree, or None when
+    they are identical.  Returns a dict naming the index, the boundary
+    label(s) and both digests — the bisection starting point."""
+    for i, (ra, rb) in enumerate(zip(a, b)):
+        if _key(ra) != _key(rb):
+            return {"code": "RCCA301", "index": i, "reason": "label",
+                    "a": ra, "b": rb}
+        if ra.get("digest") != rb.get("digest"):
+            return {"code": "RCCA301", "index": i, "reason": "digest",
+                    "a": ra, "b": rb}
+    if len(a) != len(b):
+        i = min(len(a), len(b))
+        return {"code": "RCCA301", "index": i, "reason": "length",
+                "a": a[i] if i < len(a) else None,
+                "b": b[i] if i < len(b) else None}
+    return None

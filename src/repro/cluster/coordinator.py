@@ -43,6 +43,8 @@ from typing import Dict, List, Optional
 
 import jax
 
+from repro.analysis import sanitize
+from repro.analysis.protocol import trace_event
 from repro.core.rcca import (
     DEFAULT_ENGINE,
     RCCAConfig,
@@ -261,6 +263,8 @@ class ClusterCoordinator:
         # stats pytrees resident no matter how many groups the pass has
         # (the binding is re-validated per partial at merge time, the
         # at-most-once guard against a racing stale publisher).
+        sanitize.set_context(pass_idx=int(pass_idx), kind=kind,
+                             site="coordinator_merge")
         acc = SegmentedAccumulator(
             stats_init_fn(kind, r.da, r.db, self.cfg.sketch),
             r.n_chunks, self.merge_group)
@@ -270,8 +274,14 @@ class ClusterCoordinator:
             stats, meta = loaded
             if not pt.binding_matches(meta, expect):  # at-most-once guard
                 raise RuntimeError(f"stale partial for group {g} at merge time")
-            acc.push_group(g, stats)
+            trace_event("merge", pt.partial_path(self.cluster_dir, pass_idx, g),
+                        fit_id=expect["fit_id"], pass_idx=int(pass_idx),
+                        group=int(g))
+            # the sanctioned entry into the canonical tree: push_group in
+            # ascending group order, fold order owned by the accumulator
+            acc.push_group(g, stats)  # rcca: noqa[RCCA001]
         merged = acc.result()
+        sanitize.observe("pass_end", merged)
         now = time.perf_counter()
         diag = {"wall_s": round(now - t0, 4),
                 "merge_s": round(now - t_merge, 4),
@@ -287,7 +297,10 @@ class ClusterCoordinator:
         :class:`RCCAResult`, bit-identical to the single-process
         drivers on the same store."""
         r, cfg = self.reader, self.cfg
-        fit_id = uuid.uuid4().hex
+        # fit identity only (binds partials to THIS fit across worker
+        # respawns); never reaches the arithmetic or the merge order
+        fit_id = uuid.uuid4().hex  # rcca: noqa[RCCA004]
+        sanitize.reset()
         Qa, Qb = init_Q(key, r.da, r.db, cfg)
         passes = []
         for pass_idx in range(cfg.q + 1):
@@ -317,4 +330,7 @@ class ClusterCoordinator:
             "fit_id": fit_id,
             "passes": passes,
         }
+        if sanitize.enabled():
+            res.diagnostics["sanitize"] = sanitize.snapshot()
+            sanitize.dump()
         return res

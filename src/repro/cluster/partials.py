@@ -47,6 +47,7 @@ from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro.analysis.protocol import trace_event
 from repro.ckpt import load_flat, load_metadata, save_pytree
 from repro.core.rcca import FinalStats, PowerStats
 
@@ -91,7 +92,9 @@ def heartbeat_age(cluster_dir: str, shard: int, pass_idx: int) -> Optional[float
     """Seconds since the shard last beat, or None if it never has —
     the coordinator compares this against its staleness threshold."""
     try:
-        return max(0.0, time.time() - os.path.getmtime(
+        # liveness wall-clock: feeds only the staleness policy (whether
+        # to re-dispatch), never the pass arithmetic
+        return max(0.0, time.time() - os.path.getmtime(  # rcca: noqa[RCCA004]
             heartbeat_path(cluster_dir, shard, pass_idx)))
     except OSError:
         return None
@@ -118,8 +121,9 @@ def binding_matches(meta: Optional[dict], expect: dict) -> bool:
 
 
 def write_round(cluster_dir: str, pass_idx: int, Qa, Qb, meta: dict) -> None:
-    save_pytree({"Qa": Qa, "Qb": Qb}, round_dir(cluster_dir, pass_idx),
-                metadata=meta)
+    d = round_dir(cluster_dir, pass_idx)
+    save_pytree({"Qa": Qa, "Qb": Qb}, d, metadata=meta)
+    trace_event("commit", d, pass_idx=int(pass_idx))
 
 
 def read_round(cluster_dir: str, pass_idx: int, *,
@@ -134,6 +138,7 @@ def read_round(cluster_dir: str, pass_idx: int, *,
                 f"no round published for pass {pass_idx} under {cluster_dir!r}")
         time.sleep(0.05)
     flat, meta = load_flat(d)
+    trace_event("read", d, pass_idx=int(pass_idx))
     return jnp.asarray(flat["Qa"]), jnp.asarray(flat["Qb"]), meta
 
 
@@ -160,15 +165,25 @@ def write_partial(cluster_dir: str, pass_idx: int, group: int, stats,
     save_pytree(stats._asdict(), staging,
                 metadata={**meta, "group": int(group), "shard": int(shard),
                           "n_shards": int(n_shards)})
+    trace_event("stage_write", staging, group=int(group), shard=int(shard))
     try:
         os.rename(staging, final)
+        trace_event("commit", final, group=int(group), shard=int(shard))
     except OSError:
         existing = partial_meta(cluster_dir, pass_idx, group)
         if binding_matches(existing, meta):
             shutil.rmtree(staging, ignore_errors=True)  # a twin won the race
+            trace_event("twin_drop", final, group=int(group),
+                        shard=int(shard))
         else:  # stale leftover from an earlier fit — replace it
             shutil.rmtree(final, ignore_errors=True)
             os.rename(staging, final)
+            trace_event("stale_replace", final, group=int(group),
+                        shard=int(shard),
+                        old_binding={k: existing.get(k) for k in BINDING_KEYS}
+                        if existing else None,
+                        new_binding={k: meta.get(k) for k in BINDING_KEYS})
+            trace_event("commit", final, group=int(group), shard=int(shard))
 
 
 def read_partial(cluster_dir: str, pass_idx: int,
@@ -177,6 +192,7 @@ def read_partial(cluster_dir: str, pass_idx: int,
     if not os.path.exists(os.path.join(d, "manifest.json")):
         return None
     flat, meta = load_flat(d)
+    trace_event("read", d, group=int(group))
     return _stats_from_flat(flat, meta["kind"]), meta
 
 

@@ -7,7 +7,6 @@ and ``smoke_config()`` (a reduced same-family variant for CPU tests).
 from __future__ import annotations
 
 import importlib
-from typing import Dict
 
 ARCH_IDS = [
     "gemma3_1b",

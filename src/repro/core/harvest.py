@@ -16,7 +16,7 @@ device: harvest → pass accumulators is a single jit program per chunk.
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +52,6 @@ def paired_activation_stream(model_a, params_a, model_b, params_b,
 def layer_views(model, params, batch: Dict[str, jax.Array], layer_frac: float):
     """SVCCA-style: hidden states at a fractional depth.  Implemented by
     truncating the stacked layer params before the forward pass."""
-    import copy
 
     cfg = model.cfg
     if model.family != "attn":

@@ -35,7 +35,6 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .exact import CCASolution
 from .linalg import orth, sym, topk_svd, tri_solve_right
 from jax.scipy.linalg import solve_triangular
 
@@ -255,7 +254,7 @@ def update_final_stats(
 # here because these names are part of this module's long-standing API.
 # --------------------------------------------------------------------------
 
-from repro.exec.accumulate import (  # noqa: E402  (re-exports)
+from repro.exec.accumulate import (  # noqa: E402, F401  (re-exports)
     MERGE_GROUP_CHUNKS,
     PairwiseStack,
     SegmentedAccumulator,

@@ -25,11 +25,10 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.scipy.linalg import solve_triangular
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from repro.kernels.compat import shard_map
 
-from .linalg import sym, topk_svd, tri_solve_right
+from .linalg import sym, tri_solve_right
 from .rcca import DEFAULT_ENGINE, RCCAConfig, RCCAResult, finish, resolve_engine
 from repro.exec.engine import pass_schedule
 

@@ -10,7 +10,7 @@ trick, applied to range-finder accumulators).
 
 from __future__ import annotations
 
-from typing import Callable, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -20,9 +20,15 @@ and FinalStats in ``repro.core.rcca`` are the two instances).
 from __future__ import annotations
 
 import operator
-from typing import Callable, Optional
+from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional
 
 import jax
+
+from repro.analysis import sanitize
+
+#: A "stats" value is any pytree of arrays whose merge is elementwise
+#: addition; generic code here treats it opaquely.
+Stats = Any
 
 #: Chunks per merge group — the granularity of the canonical reduction
 #: and therefore of cluster partials and device-parallel group folds.
@@ -32,7 +38,7 @@ import jax
 MERGE_GROUP_CHUNKS = 8
 
 
-def merge_stats(x, y):
+def merge_stats(x: Stats, y: Stats) -> Stats:
     """Combine two accumulators over disjoint row sets: elementwise
     addition on every pytree leaf.  Exact as algebra (every field is a
     plain sum over rows); the fp ADD still rounds — which is why the
@@ -53,9 +59,10 @@ class PairwiseStack:
     bitwise.  Live memory is O(log #groups) stats pytrees.
     """
 
-    def __init__(self, stack=None, counts=None):
-        self.stack = list(stack) if stack is not None else []
-        self.counts = list(counts) if counts is not None else []
+    def __init__(self, stack: Optional[Iterable[Stats]] = None,
+                 counts: Optional[Iterable[int]] = None):
+        self.stack: List[Stats] = list(stack) if stack is not None else []
+        self.counts: List[int] = list(counts) if counts is not None else []
 
     @staticmethod
     def depth_after(m: int) -> int:
@@ -63,7 +70,7 @@ class PairwiseStack:
         checkpoint restore rebuild the like-tree from a chunk index."""
         return bin(m).count("1")
 
-    def push(self, s) -> None:
+    def push(self, s: Stats) -> None:
         self.stack.append(s)
         self.counts.append(1)
         while len(self.counts) >= 2 and self.counts[-1] == self.counts[-2]:
@@ -71,7 +78,7 @@ class PairwiseStack:
             self.stack[-1] = merge_stats(self.stack[-1], hi)
             self.counts[-1] += self.counts.pop()
 
-    def result(self):
+    def result(self) -> Optional[Stats]:
         """Fold the leftover unequal-weight entries newest→oldest (the
         deterministic completion of the tree)."""
         if not self.stack:
@@ -94,9 +101,9 @@ class SegmentedAccumulator:
     execution topologies.
     """
 
-    def __init__(self, init_fn, n_chunks: Optional[int],
+    def __init__(self, init_fn: Callable[[], Stats], n_chunks: Optional[int],
                  group_chunks: int = MERGE_GROUP_CHUNKS,
-                 sink: Optional[Callable[[int, object], None]] = None):
+                 sink: Optional[Callable[[int, Stats], None]] = None):
         if group_chunks <= 0:
             raise ValueError("merge group size must be positive")
         self.init_fn = init_fn
@@ -127,7 +134,8 @@ class SegmentedAccumulator:
 
     # -- folding ----------------------------------------------------------
 
-    def update(self, chunk_idx: int, update_fn, a, b, Qa, Qb) -> None:
+    def update(self, chunk_idx: int, update_fn: Callable[..., Stats],
+               a: Any, b: Any, Qa: Any, Qb: Any) -> None:
         """Fold one chunk, closing the merge group at its boundary."""
         self.current = update_fn(self.current, a, b, Qa, Qb)
         self.end_chunk(chunk_idx)
@@ -146,6 +154,10 @@ class SegmentedAccumulator:
             self._push_current()
 
     def _push_current(self) -> None:
+        if sanitize.enabled():  # merge-group boundary: the contract's unit
+            sanitize.observe(
+                f"group:{self._last_chunk // self.group_chunks}",
+                self.current)
         if self.sink is not None:
             self.sink(self._last_chunk // self.group_chunks, self.current)
         else:
@@ -154,7 +166,7 @@ class SegmentedAccumulator:
         self.groups_done += 1
         self._in_group = 0
 
-    def push_group(self, group_idx: int, stats) -> None:
+    def push_group(self, group_idx: int, stats: Stats) -> None:
         """Feed a pre-computed merge-group sum (a cluster partial or a
         device-folded group) — MUST be called in ascending group order
         with no gaps."""
@@ -162,21 +174,23 @@ class SegmentedAccumulator:
             raise ValueError(
                 f"merge groups must arrive in order: got {group_idx}, "
                 f"expected {self.groups_done}")
+        if sanitize.enabled():
+            sanitize.observe(f"group:{group_idx}", stats)
         self._tree.push(stats)
         self.groups_done += 1
 
-    def result(self):
+    def result(self) -> Stats:
         r = self._tree.result()
         return self.init_fn() if r is None else r
 
     # -- checkpointing ----------------------------------------------------
 
-    def state(self) -> dict:
+    def state(self) -> Dict[str, Any]:
         """Checkpointable pytree snapshot (jax arrays are immutable, so
         no copies are needed — only the containers are frozen)."""
         return {"current": self.current, "stack": tuple(self._tree.stack)}
 
-    def load_state(self, state: dict) -> None:
+    def load_state(self, state: Mapping[str, Any]) -> None:
         self.current = state["current"]
         self._tree.stack = list(state["stack"])
         # counts are implied by groups_done's binary digits (descending)
@@ -190,7 +204,7 @@ class SegmentedAccumulator:
                 f"{len(self._tree.counts)}")
 
     @classmethod
-    def structure(cls, init_fn, n_chunks: Optional[int], group_chunks: int,
+    def structure(cls, init_fn: Callable[[], Stats], n_chunks: Optional[int], group_chunks: int,
                   next_chunk: int) -> "SegmentedAccumulator":
         """Zero-filled accumulator with the stack shape implied by a
         resume position — the like-tree for repro.ckpt restores."""
@@ -204,8 +218,9 @@ class SegmentedAccumulator:
         return acc
 
 
-def reduce_group_partials(partials, init_fn, n_chunks: int,
-                          group_chunks: int = MERGE_GROUP_CHUNKS):
+def reduce_group_partials(partials: Mapping[int, Stats],
+                          init_fn: Callable[[], Stats], n_chunks: int,
+                          group_chunks: int = MERGE_GROUP_CHUNKS) -> Stats:
     """Deterministic fixed-order tree-reduce of per-group partials:
     ``partials`` maps group index → stats and must cover every group.
     Reproduces the single-process segmented accumulation bitwise

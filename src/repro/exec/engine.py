@@ -38,10 +38,12 @@ from typing import Callable, Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis import sanitize
+
 import jax
 
 from .accumulate import MERGE_GROUP_CHUNKS, SegmentedAccumulator
-from .topology import Cluster, Hybrid, Local, Sharded, Topology, as_topology
+from .topology import Local, Sharded, Topology, as_topology
 
 
 # --------------------------------------------------------------------------
@@ -162,8 +164,9 @@ def _mesh_group_fold(update_fn, init_fn, mesh, axis: str):
     per-batch calls within a pass — reuse one trace instead of
     recompiling the identical shard_map program every time (callers
     hoist their per-kind functions for exactly this reason)."""
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.compat import shard_map
 
     def body(a_blk, b_blk, qa, qb):
         def step(s, ab):
@@ -221,7 +224,8 @@ def fold_groups_on_mesh(get_chunk, groups: Sequence[int], update_fn,
             ids = uniform[lo:lo + D]
             padded = ids + [ids[0]] * (D - len(ids))
             blocks = {}
-            for g in set(padded):
+            # dict.fromkeys, not set(): deterministic first-seen order
+            for g in dict.fromkeys(padded):
                 pairs = [get_chunk(c) for c in range(g * G, (g + 1) * G)]
                 blocks[g] = (np.stack([np.asarray(a) for a, _ in pairs]),
                              np.stack([np.asarray(b) for _, b in pairs]))
@@ -300,6 +304,7 @@ class PassEngine:
         from repro.core.rcca import init_Q, jit_update_fn, power_update_Q
 
         cfg = self.cfg
+        sanitize.reset()
         Qa, Qb = init_Q(key, da, db, cfg)
         upd = {k: jit_update_fn(k, self.engine) for k in ("power", "final")}
 
@@ -313,6 +318,7 @@ class PassEngine:
         for pass_idx, kind in pass_schedule(cfg.q):
             if pass_idx < start_pass:
                 continue
+            sanitize.set_context(pass_idx=pass_idx, kind=kind, site="stream")
             acc = SegmentedAccumulator.structure(
                 self._init_fn(kind, da, db), n_chunks, self.merge_group,
                 start_chunk)
@@ -327,10 +333,16 @@ class PassEngine:
             run_fold(enumerate(source, start=offset), upd[kind], acc, Qa, Qb,
                      start_chunk=start_chunk, on_chunk=cb)
             start_chunk = 0
+            if sanitize.enabled():
+                sanitize.observe("pass_end", acc.result())
             if kind == "power":
                 Qa, Qb = power_update_Q(acc.result(), Qa, Qb, cfg)
 
-        return self._finish(acc.result(), Qa, Qb, da, db)
+        res = self._finish(acc.result(), Qa, Qb, da, db)
+        if sanitize.enabled():
+            res.diagnostics["sanitize"] = sanitize.snapshot()
+            sanitize.dump()
+        return res
 
     # -- device-parallel (Sharded) ---------------------------------------
 
@@ -356,6 +368,7 @@ class PassEngine:
                 "repro.core.rcca_dist.dist_randomized_cca")
         mesh = mesh if mesh is not None else topo.build_mesh()
         cfg = self.cfg
+        sanitize.reset()
         da, db = access.da, access.db
         nc = access.n_chunks
         n_groups = -(-nc // self.merge_group)
@@ -370,16 +383,22 @@ class PassEngine:
         init_fns = {k: self._init_fn(k, da, db) for k in kinds}
 
         for pass_idx, kind in pass_schedule(cfg.q):
+            sanitize.set_context(pass_idx=pass_idx, kind=kind, site="mesh")
             acc = SegmentedAccumulator(init_fns[kind], nc, self.merge_group)
             fold_groups_on_mesh(
                 access.get_chunk, range(n_groups), upd_raw[kind],
                 upd_jit[kind], init_fns[kind], Qa, Qb, mesh=mesh,
                 merge_group=self.merge_group, n_chunks=nc,
                 full_chunks=n_full_chunks(access), emit=acc.push_group)
+            if sanitize.enabled():
+                sanitize.observe("pass_end", acc.result())
             if kind == "power":
                 Qa, Qb = power_update_Q(acc.result(), Qa, Qb, cfg)
 
         res = self._finish(acc.result(), Qa, Qb, da, db)
+        if sanitize.enabled():
+            res.diagnostics["sanitize"] = sanitize.snapshot()
+            sanitize.dump()
         res.diagnostics["topology"] = {
             "name": "sharded", "devices": int(mesh.devices.size),
             "n_groups": n_groups, "merge_group": self.merge_group,

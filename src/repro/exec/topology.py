@@ -65,7 +65,7 @@ class Sharded:
     col_axis: Optional[str] = None
     name: str = dataclasses.field(default="sharded", init=False, repr=False)
 
-    def build_mesh(self):
+    def build_mesh(self) -> object:
         """The group-parallel mesh: the given one, or all local devices
         on a single ``"dev"`` axis."""
         if self.mesh is not None:
@@ -92,7 +92,7 @@ class Cluster:
     n_workers: int = 2
     name: str = dataclasses.field(default="cluster", init=False, repr=False)
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.n_workers < 1:
             raise ValueError("need at least one worker")
 
@@ -113,7 +113,7 @@ class Hybrid:
     devices_per_worker: int = 4
     name: str = dataclasses.field(default="hybrid", init=False, repr=False)
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.n_workers < 1:
             raise ValueError("need at least one worker")
         if self.devices_per_worker < 1:
@@ -123,7 +123,7 @@ class Hybrid:
 Topology = Union[Local, Sharded, Cluster, Hybrid]
 
 
-def as_topology(spec, **kwargs) -> Topology:
+def as_topology(spec: Union[str, Topology], **kwargs: object) -> Topology:
     """Coerce a CLI-style spec (``"local"``, ``"sharded"``,
     ``"cluster"``, ``"hybrid"``) or an existing topology value."""
     if isinstance(spec, (Local, Sharded, Cluster, Hybrid)):

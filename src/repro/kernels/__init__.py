@@ -37,17 +37,137 @@ trace time: sweep before a shape's first jitted use in the process, or
 the already-compiled blocks stay live until restart.
 """
 
-from . import autotune, compat, ops, ref
-from .matmul import pallas_matmul
-from .powerpass import power_project_accumulate
-from .projgram import projgram
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+from . import autotune, compat, ops, plan, ref
+from .matmul import pallas_matmul, plan_matmul
+from .powerpass import plan_powerpass, power_project_accumulate
+from .projgram import plan_projgram, projgram
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelDef:
+    """One registered Pallas kernel — everything the static contract
+    checker (:mod:`repro.analysis.kernel_check`) needs to verify it
+    with no device:
+
+    - ``plan``: probe dict → :class:`~repro.kernels.plan.KernelPlan`
+      (or ``None`` on the kernel's documented unfused-fallback shapes);
+    - ``probes``: representative problem shapes, small enough that the
+      checker can walk the full grid, including at least one bucketed
+      and one fallback shape where the kernel has those regimes;
+    - ``abstract``: probe dict → (callable, arg ShapeDtypeStructs) for
+      ``jax.eval_shape`` — the abstract-eval cross-check that the live
+      wrapper and the plan agree on output geometry.
+
+    A probe is a plain dict of problem dims + ``dtype``.
+    """
+
+    name: str
+    plan: Callable[[dict], Optional["plan.KernelPlan"]]
+    probes: Tuple[dict, ...]
+    abstract: Callable[[dict], tuple]
+
+
+def _sds(shape, dtype):
+    import jax
+
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _matmul_probe_plan(p: dict, transpose_lhs: bool):
+    return plan_matmul(p["M"], p["K"], p["N"], p["dtype"],
+                       transpose_lhs=transpose_lhs)
+
+
+def _matmul_abstract(p: dict, transpose_lhs: bool):
+    import functools
+
+    fn = functools.partial(pallas_matmul, transpose_lhs=transpose_lhs,
+                           interpret=True)
+    if transpose_lhs:
+        x = _sds((p["K"], p["M"]), p["dtype"])
+    else:
+        x = _sds((p["M"], p["K"]), p["dtype"])
+    return fn, (x, _sds((p["K"], p["N"]), p["dtype"]))
+
+
+#: The registry the kernel contract checker walks: every production
+#: Pallas kernel of the data-pass engine, with plan builders and
+#: abstract-eval probes.  Registering here is what puts a new kernel
+#: under ``python -m repro.analysis kernels`` / the CI analyze gate.
+KERNEL_REGISTRY: dict = {
+    "matmul_nn": KernelDef(
+        name="matmul_nn",
+        plan=lambda p: _matmul_probe_plan(p, False),
+        probes=(
+            {"M": 512, "K": 384, "N": 256, "dtype": "float32"},
+            {"M": 200, "K": 100, "N": 60, "dtype": "bfloat16"},
+        ),
+        abstract=lambda p: _matmul_abstract(p, False),
+    ),
+    "matmul_tn": KernelDef(
+        name="matmul_tn",
+        plan=lambda p: _matmul_probe_plan(p, True),
+        probes=(
+            {"M": 256, "K": 512, "N": 384, "dtype": "float32"},
+            {"M": 60, "K": 200, "N": 100, "dtype": "bfloat16"},
+        ),
+        abstract=lambda p: _matmul_abstract(p, True),
+    ),
+    "powerpass": KernelDef(
+        name="powerpass",
+        plan=lambda p: plan_powerpass(p["n"], p["da"], p["db"], p["kt"],
+                                      p["dtype"]),
+        probes=(
+            {"n": 256, "da": 500, "db": 300, "kt": 64, "dtype": "float32"},
+            # forced multi-bucket regime: dap·k̃p blows one block
+            {"n": 256, "da": 4096, "db": 256, "kt": 512, "dtype": "float32"},
+            {"n": 128, "da": 256, "db": 128, "kt": 64, "dtype": "bfloat16"},
+            # degenerate fallback regime: k̃p > 8192 → plan is None
+            {"n": 128, "da": 128, "db": 128, "kt": 8320, "dtype": "float32"},
+        ),
+        abstract=lambda p: (
+            __import__("functools").partial(power_project_accumulate,
+                                            interpret=True),
+            (_sds((p["n"], p["da"]), p["dtype"]),
+             _sds((p["n"], p["db"]), p["dtype"]),
+             _sds((p["db"], p["kt"]), p["dtype"])),
+        ),
+    ),
+    "projgram": KernelDef(
+        name="projgram",
+        plan=lambda p: plan_projgram(p["n"], p["d"], p["kt"], p["dtype"]),
+        probes=(
+            {"n": 256, "d": 500, "kt": 64, "dtype": "float32"},
+            # forced multi-bucket regime: k̃p² blows one block
+            {"n": 256, "d": 256, "kt": 2048, "dtype": "float32"},
+            {"n": 128, "d": 200, "kt": 64, "dtype": "bfloat16"},
+            # degenerate fallback regime: k̃p > 8192 → plan is None
+            {"n": 128, "d": 128, "kt": 8320, "dtype": "float32"},
+        ),
+        abstract=lambda p: (
+            __import__("functools").partial(projgram, interpret=True),
+            (_sds((p["n"], p["d"]), p["dtype"]),
+             _sds((p["d"], p["kt"]), p["dtype"])),
+        ),
+    ),
+}
+
 
 __all__ = [
     "autotune",
     "compat",
     "ops",
+    "plan",
     "ref",
+    "KernelDef",
+    "KERNEL_REGISTRY",
     "pallas_matmul",
+    "plan_matmul",
+    "plan_powerpass",
+    "plan_projgram",
     "power_project_accumulate",
     "projgram",
 ]

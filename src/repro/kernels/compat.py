@@ -16,6 +16,15 @@ never touch them directly:
   ``jax.core`` containers (the fused-vs-fallback regression metric
   used by tests and benchmarks; jaxpr internals move between jax
   versions, so the walk lives here).
+- ``vmem(shape, dtype)`` — a VMEM scratch allocation
+  (``pltpu.VMEM``); the ``pltpu`` namespace itself is the
+  version-sensitive surface, so kernel modules go through this helper.
+- ``shard_map(f, mesh=..., in_specs=..., out_specs=..., check_rep=...)``
+  — ``jax.shard_map`` (jax ≥ 0.6, where ``check_rep`` became
+  ``check_vma``) vs ``jax.experimental.shard_map.shard_map``.
+
+``repro.analysis`` lint rule RCCA002 enforces the discipline: no
+``pltpu.`` / ``jax.experimental.shard_map`` use outside this module.
 
 Both helpers resolve the spelling at call time (not import time) so a
 jax upgrade — or a test monkeypatching one spelling — is picked up
@@ -75,6 +84,33 @@ def count_pallas_calls(closed_jaxpr) -> int:
         return n
 
     return walk(closed_jaxpr.jaxpr)
+
+
+def vmem(shape, dtype):
+    """A VMEM scratch-buffer allocation for ``pl.pallas_call``
+    (``scratch_shapes=[vmem((bm, bn), jnp.float32)]``) — the one place
+    the kernels touch the ``pltpu`` namespace for memory spaces."""
+    return pltpu.VMEM(tuple(shape), dtype)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep=False):
+    """``shard_map`` under either jax spelling.
+
+    jax ≥ 0.6 promotes it to ``jax.shard_map`` and renames
+    ``check_rep`` → ``check_vma``; jax 0.4.x has only
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep``.
+    Usable directly or as ``functools.partial(shard_map, mesh=...)``
+    decoration, exactly like the upstream function.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm  # noqa: PLC0415
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_rep)
+    except TypeError:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_rep)
 
 
 @contextlib.contextmanager

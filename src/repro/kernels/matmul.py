@@ -20,10 +20,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from . import autotune
 from .compat import tpu_compiler_params
+from .plan import BlockDef, KernelPlan, ScratchDef, launch_args
 
 
 # --------------------------------------------------------------------------
@@ -109,6 +109,42 @@ def _pad2(x: jax.Array, r: int, c: int) -> jax.Array:
     return jnp.pad(x, ((0, pr), (0, pc)))
 
 
+def plan_matmul(M: int, K: int, N: int, dtype, *, transpose_lhs: bool = False,
+                block_m: int | None = None, block_n: int | None = None,
+                block_k: int | None = None,
+                out_dtype=jnp.float32) -> KernelPlan:
+    """Launch plan for ``pallas_matmul`` on an (M, K) @ (K, N) problem
+    — grid, blocks, index maps and scratch, resolved exactly as the
+    wrapper resolves them (autotune cache, then the 512³ heuristic).
+    Pure and trace-free: the static kernel checker consumes the same
+    plan the wrapper launches."""
+    Mp, Np, Kp = _round_up(M, 128), _round_up(N, 128), _round_up(K, 128)
+    if block_m is None or block_n is None or block_k is None:
+        op = "matmul_tn" if transpose_lhs else "matmul_nn"
+        tuned = autotune.lookup(op, Mp, Kp, Np, dtype)
+        block_m = tuned[0] if block_m is None else block_m
+        block_n = tuned[1] if block_n is None else block_n
+        block_k = tuned[2] if block_k is None else block_k
+    bm, bn, bk = _pick_block(Mp, block_m), _pick_block(Np, block_n), _pick_block(Kp, block_k)
+    gm, gn, gk = Mp // bm, Np // bn, Kp // bk
+    in_dt = str(jnp.dtype(dtype))
+    if transpose_lhs:
+        x_spec = BlockDef((bk, bm), lambda i, j, k: (k, i), (Kp, Mp), in_dt)
+    else:
+        x_spec = BlockDef((bm, bk), lambda i, j, k: (i, k), (Mp, Kp), in_dt)
+    return KernelPlan(
+        name="matmul_tn" if transpose_lhs else "matmul_nn",
+        grid=(gm, gn, gk),
+        in_specs=(x_spec,
+                  BlockDef((bk, bn), lambda i, j, k: (k, j), (Kp, Np), in_dt)),
+        out_specs=(BlockDef((bm, bn), lambda i, j, k: (i, j), (Mp, Np),
+                            str(jnp.dtype(out_dtype))),),
+        scratch=(ScratchDef((bm, bn), "float32"),),
+        out_shape=((M, N),),
+        accum_outputs=(0,) if jnp.dtype(out_dtype) == jnp.float32 else (),
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("transpose_lhs", "block_m", "block_n", "block_k", "out_dtype", "interpret"),
@@ -143,33 +179,17 @@ def pallas_matmul(
         K2, N = y.shape
     assert K == K2, f"contraction mismatch {K} vs {K2}"
 
-    Mp, Np, Kp = _round_up(M, 128), _round_up(N, 128), _round_up(K, 128)
-    if block_m is None or block_n is None or block_k is None:
-        op = "matmul_tn" if transpose_lhs else "matmul_nn"
-        tuned = autotune.lookup(op, Mp, Kp, Np, x.dtype)
-        block_m = tuned[0] if block_m is None else block_m
-        block_n = tuned[1] if block_n is None else block_n
-        block_k = tuned[2] if block_k is None else block_k
-    bm, bn, bk = _pick_block(Mp, block_m), _pick_block(Np, block_n), _pick_block(Kp, block_k)
-    gm, gn, gk = Mp // bm, Np // bn, Kp // bk
-
-    if transpose_lhs:
-        xp = _pad2(x, Kp, Mp)
-        x_spec = pl.BlockSpec((bk, bm), lambda i, j, k: (k, i))
-        kernel = functools.partial(_mm_tn_kernel, n_k_steps=gk)
-    else:
-        xp = _pad2(x, Mp, Kp)
-        x_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
-        kernel = functools.partial(_mm_nn_kernel, n_k_steps=gk)
-    yp = _pad2(y, Kp, Np)
+    plan = plan_matmul(M, K, N, x.dtype, transpose_lhs=transpose_lhs,
+                       block_m=block_m, block_n=block_n, block_k=block_k,
+                       out_dtype=out_dtype)
+    body = _mm_tn_kernel if transpose_lhs else _mm_nn_kernel
+    kernel = functools.partial(body, n_k_steps=plan.grid[2])
+    xp = _pad2(x, *plan.in_specs[0].padded)
+    yp = _pad2(y, *plan.in_specs[1].padded)
 
     out = pl.pallas_call(
         kernel,
-        grid=(gm, gn, gk),
-        in_specs=[x_spec, pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        **launch_args(plan),
         interpret=interpret,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),

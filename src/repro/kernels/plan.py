@@ -1,0 +1,109 @@
+"""Declarative kernel launch plans — the checkable kernel contract.
+
+Every Pallas wrapper in this package assembles its ``pallas_call`` from
+a :class:`KernelPlan` built by a pure, trace-free ``plan_*`` function
+(``matmul.plan_matmul``, ``powerpass.plan_powerpass``,
+``projgram.plan_projgram``).  The plan is the single source of truth
+for the launch geometry: grid, block shapes, index maps, padded
+operand/output shapes, scratch allocations and dtypes.  Because the
+wrapper and the static checker (:mod:`repro.analysis.kernel_check`)
+consume the *same* plan object, the checker verifies exactly what runs
+— grid × block × index-map consistency, full output coverage, VMEM
+residency against the shared budget
+(:data:`repro.kernels.matmul.VMEM_BLOCK_ELEMS`) and the
+bf16-in/f32-accum dtype rules — with no device and no duplicated
+sizing logic that could drift.
+
+A ``plan_*`` function returns ``None`` when the shape is degenerate
+for its fused kernel (the documented unfused-fallback condition); the
+wrapper then decomposes into :func:`~repro.kernels.matmul.pallas_matmul`
+calls whose own plans remain checkable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+IndexMap = Callable[..., Tuple[int, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDef:
+    """One blocked operand of a ``pallas_call``: the block shape, the
+    grid-position → block-coordinate index map, the full padded array
+    shape the blocks tile, and the element dtype name."""
+
+    shape: Tuple[int, ...]
+    index_map: IndexMap
+    padded: Tuple[int, ...]
+    dtype: str
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class ScratchDef:
+    """One VMEM scratch allocation (no index map — scratch is
+    grid-invariant and always fully resident)."""
+
+    shape: Tuple[int, ...]
+    dtype: str
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """The complete launch geometry of one fused-kernel invocation."""
+
+    name: str
+    grid: Tuple[int, ...]
+    in_specs: Tuple[BlockDef, ...]
+    out_specs: Tuple[BlockDef, ...]
+    scratch: Tuple[ScratchDef, ...]
+    #: logical (unpadded) output shapes, in out_specs order
+    out_shape: Tuple[Tuple[int, ...], ...]
+    #: indices into out_specs of f32 accumulator outputs (dtype rule)
+    accum_outputs: Tuple[int, ...] = ()
+
+    @property
+    def n_steps(self) -> int:
+        n = 1
+        for g in self.grid:
+            n *= g
+        return n
+
+
+def launch_args(plan: KernelPlan) -> dict:
+    """``pl.pallas_call`` keyword arguments realized from a plan —
+    the one bridge from the declarative contract to a live launch, so
+    a wrapper cannot diverge from what the checker verified."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    from .compat import vmem
+
+    out_specs = [pl.BlockSpec(b.shape, b.index_map) for b in plan.out_specs]
+    out_shape = [jax.ShapeDtypeStruct(b.padded, jnp.dtype(b.dtype))
+                 for b in plan.out_specs]
+    single = len(out_specs) == 1
+    return dict(
+        grid=plan.grid,
+        in_specs=[pl.BlockSpec(b.shape, b.index_map) for b in plan.in_specs],
+        out_specs=out_specs[0] if single else out_specs,
+        out_shape=out_shape[0] if single else out_shape,
+        scratch_shapes=[vmem(s.shape, jnp.dtype(s.dtype))
+                        for s in plan.scratch],
+    )

@@ -55,11 +55,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from . import autotune
 from .compat import tpu_compiler_params
 from .matmul import _pad2, _pick_block, _round_up, pallas_matmul, vmem_row_cap
+from .plan import BlockDef, KernelPlan, ScratchDef, launch_args
 
 
 def _powerpass_kernel(a_ref, b_ref, q_ref, y_ref, p_acc, *, n_k_steps: int):
@@ -110,6 +110,44 @@ def resolve_blocks(
     return bn, bdb, bda
 
 
+def plan_powerpass(n: int, da: int, db: int, kt: int, dtype, *,
+                   block_n: int | None = None, block_db: int | None = None,
+                   block_da: int | None = None) -> KernelPlan | None:
+    """Launch plan for the fused project+accumulate kernel, or ``None``
+    for the degenerate unfused-fallback shapes (k̃p > 8192).  Resolves
+    blocks exactly as the wrapper does (autotune cache, then the shared
+    VMEM budget) — the static checker consumes the same plan."""
+    dap = _round_up(da, 128)
+    ktp = _round_up(kt, 128)
+    np_, dbp = _round_up(n, 128), _round_up(db, 128)
+    if block_n is None or block_db is None or block_da is None:
+        tuned = autotune.lookup("powerpass", np_, dbp, ktp, dtype, extra=dap)
+        block_n = tuned[0] if block_n is None else block_n
+        block_db = tuned[1] if block_db is None else block_db
+        block_da = tuned[2] if block_da is None else block_da
+    blocks = resolve_blocks(np_, dap, dbp, ktp, block_n, block_db, block_da)
+    if blocks is None:
+        return None
+    bn, bdb, bda = blocks
+    in_dt = str(jnp.dtype(dtype))
+    return KernelPlan(
+        name="powerpass",
+        grid=(dap // bda, np_ // bn, dbp // bdb),
+        in_specs=(
+            BlockDef((bn, bda), lambda j, i, k: (i, j), (np_, dap), in_dt),
+            BlockDef((bn, bdb), lambda j, i, k: (i, k), (np_, dbp), in_dt),
+            BlockDef((bdb, ktp), lambda j, i, k: (k, 0), (dbp, ktp), in_dt),
+        ),
+        out_specs=(
+            BlockDef((bda, ktp), lambda j, i, k: (j, 0), (dap, ktp),
+                     "float32"),
+        ),
+        scratch=(ScratchDef((bn, ktp), "float32"),),
+        out_shape=((da, kt),),
+        accum_outputs=(0,),
+    )
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_n", "block_db", "block_da", "interpret")
 )
@@ -137,37 +175,20 @@ def power_project_accumulate(
     assert n == n2, f"row mismatch {n} vs {n2}"
     assert db == db2, f"contraction mismatch {db} vs {db2}"
 
-    dap = _round_up(da, 128)
-    ktp = _round_up(kt, 128)
-    np_, dbp = _round_up(n, 128), _round_up(db, 128)
-    if block_n is None or block_db is None or block_da is None:
-        tuned = autotune.lookup("powerpass", np_, dbp, ktp, a.dtype, extra=dap)
-        block_n = tuned[0] if block_n is None else block_n
-        block_db = tuned[1] if block_db is None else block_db
-        block_da = tuned[2] if block_da is None else block_da
-    blocks = resolve_blocks(np_, dap, dbp, ktp, block_n, block_db, block_da)
-    if blocks is None:
+    plan = plan_powerpass(n, da, db, kt, a.dtype, block_n=block_n,
+                          block_db=block_db, block_da=block_da)
+    if plan is None:
         # k̃p > 8192: even a 128-row block blows VMEM — unfused pair
         p = pallas_matmul(b, q, out_dtype=jnp.float32, interpret=interpret)
         return pallas_matmul(a, p, transpose_lhs=True, out_dtype=jnp.float32,
                              interpret=interpret)
-    bn, bdb, bda = blocks
-    gj, gn, gk = dap // bda, np_ // bn, dbp // bdb
-    ap = _pad2(a, np_, dap)
-    bp = _pad2(b, np_, dbp)
-    qp = _pad2(q, dbp, ktp)
+    ap = _pad2(a, *plan.in_specs[0].padded)
+    bp = _pad2(b, *plan.in_specs[1].padded)
+    qp = _pad2(q, *plan.in_specs[2].padded)
 
     out = pl.pallas_call(
-        functools.partial(_powerpass_kernel, n_k_steps=gk),
-        grid=(gj, gn, gk),
-        in_specs=[
-            pl.BlockSpec((bn, bda), lambda j, i, k: (i, j)),
-            pl.BlockSpec((bn, bdb), lambda j, i, k: (i, k)),
-            pl.BlockSpec((bdb, ktp), lambda j, i, k: (k, 0)),
-        ],
-        out_specs=pl.BlockSpec((bda, ktp), lambda j, i, k: (j, 0)),
-        out_shape=jax.ShapeDtypeStruct((dap, ktp), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bn, ktp), jnp.float32)],
+        functools.partial(_powerpass_kernel, n_k_steps=plan.grid[2]),
+        **launch_args(plan),
         interpret=interpret,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),

@@ -48,11 +48,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from . import autotune
 from .compat import tpu_compiler_params
 from .matmul import _pad2, _pick_block, _round_up, pallas_matmul, vmem_row_cap
+from .plan import BlockDef, KernelPlan, ScratchDef, launch_args
 
 
 def _projgram_kernel(x_ref, q_ref, p_ref, c_ref, acc_ref,
@@ -104,6 +104,44 @@ def resolve_blocks(
     return bn, bd, bc
 
 
+def plan_projgram(n: int, d: int, kt: int, dtype, *,
+                  block_n: int | None = None, block_d: int | None = None,
+                  block_c: int | None = None,
+                  p_dtype=jnp.float32) -> KernelPlan | None:
+    """Launch plan for the fused project+gram kernel, or ``None`` for
+    the degenerate unfused-fallback shapes (k̃p > 8192).  Block caps
+    resolve exactly as in the wrapper (autotune cache, then the shared
+    VMEM budget) — the static checker consumes the same plan."""
+    np_, dp, ktp = _round_up(n, 128), _round_up(d, 128), _round_up(kt, 128)
+    if block_n is None or block_d is None or block_c is None:
+        tuned = autotune.lookup("projgram", np_, dp, ktp, dtype)
+        block_n = tuned[0] if block_n is None else block_n
+        block_d = tuned[1] if block_d is None else block_d
+        block_c = tuned[2] if block_c is None else block_c
+    blocks = resolve_blocks(np_, dp, ktp, block_n, block_d, block_c)
+    if blocks is None:
+        return None
+    bn, bd, bc = blocks
+    in_dt = str(jnp.dtype(dtype))
+    return KernelPlan(
+        name="projgram",
+        grid=(ktp // bc, np_ // bn, dp // bd),
+        in_specs=(
+            BlockDef((bn, bd), lambda j, i, k: (i, k), (np_, dp), in_dt),
+            BlockDef((bd, ktp), lambda j, i, k: (k, 0), (dp, ktp), in_dt),
+        ),
+        out_specs=(
+            BlockDef((bn, ktp), lambda j, i, k: (i, 0), (np_, ktp),
+                     str(jnp.dtype(p_dtype))),
+            BlockDef((ktp, bc), lambda j, i, k: (0, j), (ktp, ktp),
+                     "float32"),
+        ),
+        scratch=(ScratchDef((bn, ktp), "float32"),),
+        out_shape=((n, kt), (kt, kt)),
+        accum_outputs=(1,),
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("block_n", "block_d", "block_c", "interpret", "p_dtype"),
@@ -127,39 +165,20 @@ def projgram(
     n, d = x.shape
     d2, kt = q.shape
     assert d == d2
-    np_, dp, ktp = _round_up(n, 128), _round_up(d, 128), _round_up(kt, 128)
-    if block_n is None or block_d is None or block_c is None:
-        tuned = autotune.lookup("projgram", np_, dp, ktp, x.dtype)
-        block_n = tuned[0] if block_n is None else block_n
-        block_d = tuned[1] if block_d is None else block_d
-        block_c = tuned[2] if block_c is None else block_c
-    blocks = resolve_blocks(np_, dp, ktp, block_n, block_d, block_c)
-    if blocks is None:
+    plan = plan_projgram(n, d, kt, x.dtype, block_n=block_n, block_d=block_d,
+                         block_c=block_c, p_dtype=p_dtype)
+    if plan is None:
         # k̃p > 8192: no 128-wide block fits the budget — unfused fallback
         p = pallas_matmul(x, q, out_dtype=p_dtype, interpret=interpret)
         c = pallas_matmul(p, p, transpose_lhs=True, interpret=interpret)
         return p, c
-    bn, bd, bc = blocks
-    gj, gn, gd = ktp // bc, np_ // bn, dp // bd
-    xp = _pad2(x, np_, dp)
-    qp = _pad2(q, dp, ktp)
+    xp = _pad2(x, *plan.in_specs[0].padded)
+    qp = _pad2(q, *plan.in_specs[1].padded)
 
     p, c = pl.pallas_call(
-        functools.partial(_projgram_kernel, n_d_steps=gd, block_c=bc),
-        grid=(gj, gn, gd),
-        in_specs=[
-            pl.BlockSpec((bn, bd), lambda j, i, k: (i, k)),
-            pl.BlockSpec((bd, ktp), lambda j, i, k: (k, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bn, ktp), lambda j, i, k: (i, 0)),
-            pl.BlockSpec((ktp, bc), lambda j, i, k: (0, j)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((np_, ktp), p_dtype),
-            jax.ShapeDtypeStruct((ktp, ktp), jnp.float32),
-        ],
-        scratch_shapes=[pltpu.VMEM((bn, ktp), jnp.float32)],
+        functools.partial(_projgram_kernel, n_d_steps=plan.grid[2],
+                          block_c=plan.out_specs[1].shape[1]),
+        **launch_args(plan),
         interpret=interpret,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),

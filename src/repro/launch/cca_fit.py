@@ -41,7 +41,6 @@ dense CCA oracle.
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
@@ -52,7 +51,7 @@ from repro.ckpt import CheckpointManager
 from repro.configs.europarl_cca import config as europarl_config
 from repro.configs.europarl_cca import smoke_config as europarl_smoke
 from repro.core import exact_cca, feasibility_errors
-from repro.core.rcca import DEFAULT_ENGINE, RCCAConfig, randomized_cca_iterator
+from repro.core.rcca import DEFAULT_ENGINE, randomized_cca_iterator
 from repro.core.rcca_dist import dist_randomized_cca
 from repro.data import PlantedCCAData
 from repro.launch.mesh import make_host_mesh

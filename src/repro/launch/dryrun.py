@@ -99,7 +99,7 @@ def lower_cca_cell(shape_name: str, mesh, *, microbatch: int = 512,
 
     §Perf knobs: microbatch / int8_reduce / reduce_buckets."""
     import functools
-    from jax.experimental.shard_map import shard_map
+    from repro.kernels.compat import shard_map
     from repro.configs.europarl_cca import config as cca_config
     from repro.core.rcca_dist import final_pass_local, power_pass_local
 

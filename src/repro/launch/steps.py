@@ -15,15 +15,15 @@ Everything the dry-run, trainer and server share:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models import EncDecModel, LMModel, build_model
+from repro.models import EncDecModel
 from repro.models.common import BATCH_AXES, MODEL_AXIS
-from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim import AdamWConfig, adamw_update
 
 
 # --------------------------------------------------------------------------

@@ -17,8 +17,7 @@ Design notes
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +34,6 @@ from .common import (
     init_rmsnorm,
     rmsnorm,
     shard,
-    sinusoidal_positions,
     softcap,
 )
 from .config import ModelConfig

@@ -103,7 +103,7 @@ class _CalibratingSource:
         self.rows = 0
         self.bytes = 0
 
-    def __iter__(self):
+    def __iter__(self) -> "_CalibratingSource":
         return self
 
     def __next__(self):

@@ -54,7 +54,7 @@ class ChunkPrefetcher:
         self._thread = threading.Thread(target=self._produce, daemon=True)
         self._thread.start()
 
-    def _stage(self, item):
+    def _stage(self, item: Tuple) -> Tuple:
         if self._transform is not None:
             item = self._transform(item)
         if self._device_put:
@@ -92,7 +92,7 @@ class ChunkPrefetcher:
     def __iter__(self) -> Iterator[Tuple]:
         return self
 
-    def __next__(self):
+    def __next__(self) -> Tuple:
         t0 = time.perf_counter()
         item = self._q.get()
         self.stall_s += time.perf_counter() - t0
@@ -139,7 +139,7 @@ class SyncChunkMeter:
     def __iter__(self) -> Iterator[Tuple]:
         return self
 
-    def __next__(self):
+    def __next__(self) -> Tuple:
         t0 = time.perf_counter()
         a, b = next(self._src)
         if self._device_put:

@@ -1,0 +1,242 @@
+"""Cluster-protocol race detector: trace invariants (RCCA201–204),
+live trace recording through the real partial store (including a
+broken-atomic-rename injection the checker must catch), and the
+small-model interleaving explorer (RCCA205) with its mutation tests.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import protocol
+from repro.cluster import partials
+from repro.core.rcca import init_final_stats
+
+
+def codes(violations):
+    return sorted(v.code for v in violations)
+
+
+# ---------------------------------------------------------------------------
+# offline invariant checking over synthetic traces
+# ---------------------------------------------------------------------------
+
+
+def ev(op, path, **meta):
+    e = {"op": op, "path": path, "pid": 1}
+    if meta:
+        e["meta"] = meta
+    return e
+
+
+GOOD_TRACE = [
+    ev("stage_write", "/c/pass0/partial_0.stage7", group=0),
+    ev("commit", "/c/pass0/partial_0", group=0),
+    ev("read", "/c/pass0/partial_0", group=0),
+    ev("merge", "/c/pass0/partial_0", fit_id="f", pass_idx=0, group=0),
+    ev("merge", "/c/pass0/partial_1", fit_id="f", pass_idx=0, group=1),
+    ev("merge", "/c/pass1/partial_0", fit_id="f", pass_idx=1, group=0),
+]
+
+
+def test_clean_trace_passes():
+    assert protocol.check_trace(GOOD_TRACE) == []
+
+
+def test_rcca201_read_of_staging_path():
+    trace = GOOD_TRACE + [ev("read", "/c/pass0/partial_0.stage7", group=0)]
+    assert codes(protocol.check_trace(trace)) == ["RCCA201"]
+
+
+def test_rcca202_double_merge_of_same_group():
+    trace = GOOD_TRACE + [
+        ev("merge", "/c/pass0/partial_1", fit_id="f", pass_idx=0, group=1)]
+    vs = protocol.check_trace(trace)
+    assert codes(vs) == ["RCCA202"]
+    assert "twice" in vs[0].message
+    # same group in a DIFFERENT pass or fit is fine
+    ok = GOOD_TRACE + [
+        ev("merge", "/x", fit_id="f2", pass_idx=0, group=1),
+        ev("merge", "/y", fit_id="f", pass_idx=2, group=1)]
+    assert protocol.check_trace(ok) == []
+
+
+def test_rcca203_read_without_commit():
+    trace = [ev("read", "/c/pass0/partial_0", group=0)]
+    vs = protocol.check_trace(trace)
+    assert codes(vs) == ["RCCA203"]
+    assert "bypassed" in vs[0].message
+
+
+def test_rcca204_stale_replace_with_identical_binding():
+    b = {"fit_id": "f", "pass_idx": 0}
+    trace = [ev("stale_replace", "/c/p", old_binding=b, new_binding=dict(b))]
+    assert codes(protocol.check_trace(trace)) == ["RCCA204"]
+    trace = [ev("stale_replace", "/c/p", old_binding=b,
+                new_binding={"fit_id": "g", "pass_idx": 0})]
+    assert protocol.check_trace(trace) == []
+
+
+def test_check_trace_file_missing_is_clean(tmp_path, monkeypatch):
+    monkeypatch.delenv(protocol.TRACE_ENV, raising=False)
+    assert protocol.check_trace_file() == []
+    assert protocol.check_trace_file(str(tmp_path / "nope.jsonl")) == []
+
+
+# ---------------------------------------------------------------------------
+# live recording through the real partial store
+# ---------------------------------------------------------------------------
+
+
+def _stats(k=2, da=3, db=3, val=1.0):
+    z = init_final_stats(k, da, db, jnp.float32)
+    return z._replace(n=jnp.float32(val))
+
+
+def _meta(fit_id="fit-a", pass_idx=0, group=0):
+    return partials.binding_meta(
+        fit_id=fit_id, pass_idx=pass_idx, kind="final", engine="jnp",
+        fingerprint="fp", merge_group=8, algo={"k": 2})
+
+
+@pytest.fixture
+def traced(tmp_path, monkeypatch):
+    trace = str(tmp_path / "trace.jsonl")
+    monkeypatch.setenv(protocol.TRACE_ENV, trace)
+    return trace
+
+
+def test_trace_event_roundtrip(traced):
+    protocol.trace_event("commit", "/a/b", group=3)
+    protocol.trace_event("read", "/a/b")
+    events = protocol.read_trace(traced)
+    assert [e["op"] for e in events] == ["commit", "read"]
+    assert events[0]["meta"]["group"] == 3 and events[0]["path"] == "/a/b"
+
+
+def test_trace_event_noop_when_unset(tmp_path, monkeypatch):
+    monkeypatch.delenv(protocol.TRACE_ENV, raising=False)
+    protocol.trace_event("commit", "/a/b")  # must not raise or write
+    assert list(tmp_path.iterdir()) == []
+
+
+def test_real_write_read_partial_trace_is_clean(tmp_path, traced):
+    cdir = str(tmp_path / "cluster")
+    partials.write_partial(cdir, 0, 0, _stats(), _meta(),
+                           shard=0, n_shards=1)
+    got = partials.read_partial(cdir, 0, 0)
+    assert got is not None
+    events = protocol.read_trace(traced)
+    assert [e["op"] for e in events] == ["stage_write", "commit", "read"]
+    assert protocol.check_trace(events) == []
+
+
+def test_broken_atomic_rename_injection_is_caught(tmp_path, traced):
+    """A writer that skips the staging+rename publish: the partial
+    appears on disk and the read succeeds, but the trace has no commit
+    — exactly the torn-write signature RCCA203 exists for."""
+    from repro.ckpt import save_pytree
+
+    cdir = str(tmp_path / "cluster")
+    meta = _meta()
+
+    def broken_write_partial(cluster_dir, pass_idx, group, stats, meta, *,
+                             shard, n_shards):
+        final = partials.partial_path(cluster_dir, pass_idx, group)
+        # writes DIRECTLY to the final path: no staging, no commit
+        save_pytree(stats._asdict(), final,
+                    metadata={**meta, "group": group, "shard": shard,
+                              "n_shards": n_shards})
+
+    broken_write_partial(cdir, 0, 0, _stats(), meta, shard=0, n_shards=1)
+    assert partials.read_partial(cdir, 0, 0) is not None  # reader can't tell
+    vs = protocol.check_trace_file(traced)  # ...but the trace can
+    assert codes(vs) == ["RCCA203"]
+
+
+def test_stale_replace_records_both_bindings(tmp_path, traced):
+    """Cross-fit staleness: the second fit's writer replaces the first
+    fit's partial, and the recorded bindings differ (no RCCA204)."""
+    cdir = str(tmp_path / "cluster")
+    partials.write_partial(cdir, 0, 0, _stats(), _meta(fit_id="fit-a"),
+                           shard=0, n_shards=1)
+    partials.write_partial(cdir, 0, 0, _stats(val=2.0),
+                           _meta(fit_id="fit-b"), shard=0, n_shards=1)
+    events = protocol.read_trace(traced)
+    assert "stale_replace" in [e["op"] for e in events]
+    sr = next(e for e in events if e["op"] == "stale_replace")
+    assert sr["meta"]["old_binding"]["fit_id"] == "fit-a"
+    assert sr["meta"]["new_binding"]["fit_id"] == "fit-b"
+    assert protocol.check_trace(events) == []
+
+
+# ---------------------------------------------------------------------------
+# small-model interleaving exploration (RCCA205)
+# ---------------------------------------------------------------------------
+
+
+def test_explorer_covers_all_orderings_and_agrees_bitwise():
+    """2 workers × 4 groups: fault-free + every crash point, every
+    interleaving — and every merged result is bitwise-identical to the
+    canonical pairwise tree (the explorer's own assertion; `ok` means
+    zero mismatches over the whole space)."""
+    rep = protocol.explore_interleavings(n_workers=2, n_groups=4)
+    assert rep.ok and rep.violations() == []
+    # 1 fault-free + (2 workers × 2 owned groups) crash points
+    assert rep.n_scenarios == 5
+    # fault-free C(4,2)=6; crash@0 → 6; crash@1 → 12; per worker
+    assert rep.n_interleavings == 42
+
+
+def test_explorer_payloads_are_order_sensitive():
+    """The model's fp32 payloads must make reduction order observable,
+    or the bitwise assertion would be vacuous."""
+    a = protocol._group_payload(0)["y"].astype(np.float32)
+    b = protocol._group_payload(1)["y"].astype(np.float32)
+    c = protocol._group_payload(2)["y"].astype(np.float32)
+    assert ((a + b) + c != a + (b + c)).any()
+
+
+def test_explorer_detects_arrival_order_merge():
+    rep = protocol.explore_interleavings(mutate="arrival_order")
+    assert not rep.ok
+    assert all(v.code == "RCCA205" for v in rep.violations())
+
+
+def test_explorer_detects_torn_publish():
+    rep = protocol.explore_interleavings(mutate="torn_publish")
+    assert not rep.ok
+
+
+def test_explorer_rejects_large_models():
+    with pytest.raises(ValueError):
+        protocol.explore_interleavings(n_workers=3, n_groups=4)
+    with pytest.raises(ValueError):
+        protocol.explore_interleavings(n_groups=9)
+
+
+# ---------------------------------------------------------------------------
+# end to end: a real 2-worker cluster fit leaves a clean trace
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_fit_trace_is_clean(tmp_path, traced):
+    import jax
+
+    from repro.cluster import ClusterCoordinator
+    from repro.core.rcca import RCCAConfig
+    from repro.data import PlantedCCAData
+    from repro.store import ingest_planted
+
+    data = PlantedCCAData(n=256, da=8, db=6, rank=3, noise=0.4,
+                          seed=11, chunk=64)
+    store = ingest_planted(str(tmp_path / "store"), data)
+    cfg = RCCAConfig(k=2, p=2, q=1)
+    coord = ClusterCoordinator(store, cfg, str(tmp_path / "cluster"),
+                               n_workers=2, merge_group=2)
+    res = coord.fit(jax.random.PRNGKey(0))
+    assert res.rho.shape == (2,)
+    events = protocol.read_trace(traced)
+    ops = {e["op"] for e in events}
+    assert {"stage_write", "commit", "read", "merge"} <= ops
+    assert protocol.check_trace(events) == []

@@ -4,7 +4,6 @@ criteria, and the block-size autotuner."""
 
 import contextlib
 import json
-import os
 
 import jax
 import jax.numpy as jnp

@@ -29,7 +29,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.cluster import ClusterCoordinator, run_worker
+from repro.cluster import run_worker
 from repro.cluster import partials as pt
 from repro.cluster.worker import KILL_ENV
 from repro.core.rcca import RCCAConfig, randomized_cca_streaming

@@ -135,12 +135,6 @@ def test_expert_ffn_custom_vjp_matches_autodiff():
 
 def test_cca_reduce_options_equivalent():
     """bf16/bucketed reduction options stay within sketch tolerance."""
-    import functools
-    import os
-    import subprocess
-    import sys
-    import textwrap
-
     # runs in-process: single device → psums are identity; the numerics
     # of the dtype cast path still execute
     from repro.core.rcca_dist import power_pass_local

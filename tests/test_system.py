@@ -4,7 +4,6 @@ activation harvesting)."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import (
