@@ -218,15 +218,79 @@ def bucketed_report(out_path: str = "results/BENCH_bucketed.json",
     return bench
 
 
+def seeded_report(out_path: str = "results/BENCH_seeded.json",
+                  rows: list | None = None) -> dict:
+    """Seeded-Ω vs materialized fused chunk updates: same block configs,
+    so the outputs must agree BITWISE (the generator runs in-kernel on
+    the very tiles the materialized path loads).  The json tracks both
+    timings plus the Ω HBM residency the seeded path eliminates — on
+    CPU interpret mode the in-kernel generation costs wall clock; the
+    TPU trade is k̃·4 bytes of VMEM traffic per generated row against a
+    (d, k̃) HBM read per bucket."""
+    from repro.kernels import rand
+
+    key = jax.random.PRNGKey(0)
+    n, da, db, kt = 1024, 512, 384, 256
+    a = jax.random.normal(key, (n, da), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, db), jnp.float32)
+    seed_a = jnp.array([11, 12], jnp.uint32)
+    seed_b = jnp.array([21, 22], jnp.uint32)
+    qa = rand.dense_omega(seed_a, da, kt)
+    qb = rand.dense_omega(seed_b, db, kt)
+
+    cases = [
+        ("power_pass_chunk",
+         lambda: ops.power_pass_chunk_seeded(a, b, seed_a, seed_b,
+                                             kt=kt, q_dtype=jnp.float32),
+         lambda: ops.power_pass_chunk(a, b, qa, qb)),
+        ("final_pass_chunk",
+         lambda: ops.final_pass_chunk_seeded(a, b, seed_a, seed_b,
+                                             kt=kt, q_dtype=jnp.float32),
+         lambda: ops.final_pass_chunk(a, b, qa, qb)),
+    ]
+    omega_bytes = 4 * (da * kt + db * kt)
+    results = []
+    for name, run_s, run_m in cases:
+        out_s = jax.tree.leaves(run_s())
+        out_m = jax.tree.leaves(run_m())
+        bitwise = all(bool(jnp.array_equal(gs, gm))
+                      for gs, gm in zip(out_s, out_m))
+        us_s = time_us(run_s)
+        us_m = time_us(run_m)
+        results.append({"name": name, "shape": [n, da, db, kt],
+                        "seeded_us": round(us_s, 1),
+                        "materialized_us": round(us_m, 1),
+                        "bitwise_equal": bitwise,
+                        "omega_hbm_bytes_saved": omega_bytes})
+        if rows is not None:
+            rows.append((f"seeded_{name}", us_s,
+                         f"bitwise_equal={bitwise} "
+                         f"omega_bytes_saved={omega_bytes}"))
+
+    bench = {
+        "bench": "cca_seeded_omega",
+        "backend": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "results": results,
+    }
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+    print("BENCH " + json.dumps(bench))
+    return bench
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="results/kernel_bench.json")
     ap.add_argument("--bucketed-out", default="results/BENCH_bucketed.json")
+    ap.add_argument("--seeded-out", default="results/BENCH_seeded.json")
     args = ap.parse_args(argv)
     rows: list = []
     kernel_benchmarks(rows)
     engine_comparison(args.out, rows)
     bucketed_report(args.bucketed_out, rows)
+    seeded_report(args.seeded_out, rows)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

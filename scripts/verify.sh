@@ -31,11 +31,13 @@ elif [[ "${1:-}" == "--analyze" ]]; then
 fi
 
 # interpret-mode kernel parity: every Pallas kernel against its jnp
-# oracle, the engine-parity sweep of the data-pass drivers, and the
-# column-bucketed fused-kernel parity/regression suite
+# oracle, the engine-parity sweep of the data-pass drivers, the
+# column-bucketed fused-kernel parity/regression suite, and the
+# seeded-Ω tile-PRNG bitwise-parity suite
 parity() {
   python -m pytest -q tests/test_kernels.py tests/test_engine_parity.py \
-    tests/test_bucketed_kernels.py tests/test_bucketed_properties.py "$@"
+    tests/test_bucketed_kernels.py tests/test_bucketed_properties.py \
+    tests/test_seeded_omega.py "$@"
 }
 
 # multi-worker map/combine/reduce: coordinator merge parity (bitwise vs

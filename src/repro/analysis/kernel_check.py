@@ -32,6 +32,11 @@ device, no kernel execution):
            shape under the entry's block caps yields a plan that passes
            RCCA101–105 — a hand-edited or stale cache cannot smuggle an
            inconsistent launch into production.
+  RCCA108  PRNG-bearing plans: a ``*_seeded`` kernel draws its Ω tiles
+           from a counter-based PRNG, so its ONLY source of randomness
+           must be the seed plumbed as an SMEM scalar operand — exactly
+           one scalar, integer dtype, a handful of words (a seed, never
+           a data array smuggled around the blocked specs).
 """
 
 from __future__ import annotations
@@ -146,6 +151,20 @@ def check_plan(plan, *, where: str = "", budget: Optional[int] = None) -> List[V
             and any(b.dtype == "bfloat16" for b in plan.out_specs):
         v("RCCA105", "bf16 inputs with bf16 outputs and no declared f32 "
           "accumulator output — bf16 accumulation loses the contract")
+
+    # -- RCCA108: PRNG-bearing plans — the seed is the only entropy -------
+    if plan.name.endswith("_seeded") and len(plan.scalars) != 1:
+        v("RCCA108", f"seeded kernel declares {len(plan.scalars)} scalar "
+          "operands — the counter-based PRNG contract is exactly one "
+          "SMEM seed")
+    for i, s in enumerate(plan.scalars):
+        if s.dtype not in ("uint32", "int32", "uint64", "int64"):
+            v("RCCA108", f"scalars[{i}]: dtype {s.dtype} — scalar operands "
+              "are integer seeds/sizes")
+        if s.elems > 8:
+            v("RCCA108", f"scalars[{i}]: {s.shape} = {s.elems} elems — a "
+              "scalar operand is a seed, not a data array routed around "
+              "the blocked specs")
     return out
 
 

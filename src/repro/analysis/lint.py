@@ -30,6 +30,12 @@ disciplines hold.  Each rule here pins one of them:
            store writer's staging dir): no bare ``open(.., "w"/"wb")``
            or ``np.save`` outside them.  A torn write that a reader
            can observe is a protocol violation, not a perf bug.
+  RCCA006  jax PRNG draws in the pass path happen only in
+           ``repro/core/rcca.py`` (``init_Q`` / ``omega_seeds``).  A
+           ``jax.random.*`` call anywhere else in the pass path is a
+           second entropy source the seeded-Ω contract can't see:
+           every execution mode must derive identical randomness from
+           the one fit key (or the 8-byte Ω seed it produces).
 
 Suppression: a trailing ``# rcca: noqa`` comment silences every rule
 on that line; ``# rcca: noqa[RCCA004]`` (comma-separated codes)
@@ -67,6 +73,9 @@ PASS_PATH = ("repro/exec/", "repro/cluster/", "repro/core/rcca.py",
 #: modules whose file writes must be staged+renamed (RCCA005).
 #: ``repro/ckpt`` is the atomic helper itself and is out of scope.
 ATOMIC_WRITE_SCOPE = ("repro/cluster/", "repro/store/")
+
+#: the one pass-path module allowed to draw from the jax PRNG (RCCA006)
+RNG_HOME = ("repro/core/rcca.py",)
 
 #: fold/merge primitives whose looped use outside repro/exec trips RCCA001
 FOLD_CALLS = frozenset({
@@ -320,7 +329,25 @@ def _rule_005(tree: ast.AST, relpath: str) -> Iterable[Violation]:
                 "observe a torn file (appends are exempt)")
 
 
-_RULES = (_rule_001, _rule_002, _rule_003, _rule_004, _rule_005)
+def _rule_006(tree: ast.AST, relpath: str) -> Iterable[Violation]:
+    if not _in(relpath, PASS_PATH) or _in(relpath, RNG_HOME):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if dotted and (dotted.startswith("jax.random.")
+                       or dotted.startswith("jrandom.")
+                       or dotted.startswith("random.PRNGKey")):
+            yield Violation(
+                "RCCA006", relpath, node.lineno,
+                f"`{dotted}()` in a pass-path module outside rcca.py — "
+                "Ω/seed derivation lives in repro.core.rcca (init_Q / "
+                "omega_seeds); a second draw site breaks the seeded-Ω "
+                "equivalence across engines and topologies")
+
+
+_RULES = (_rule_001, _rule_002, _rule_003, _rule_004, _rule_005, _rule_006)
 
 
 # ---------------------------------------------------------------------------

@@ -52,8 +52,10 @@ from repro.core.rcca import (
     algo_meta,
     finalize_result,
     init_Q,
+    omega_seeds,
     power_update_Q,
     resolve_engine,
+    resolve_omega,
     stats_init_fn,
 )
 from repro.exec import MERGE_GROUP_CHUNKS, SegmentedAccumulator
@@ -84,6 +86,12 @@ class ClusterCoordinator:
                     MUST equal the single-process driver's value for
                     bit-identical results (default: the shared
                     ``repro.exec.MERGE_GROUP_CHUNKS``).
+    omega:          Ω provenance (``rcca.OMEGA_MODES``), binding for
+                    every round and partial.  ``"seeded"`` publishes
+                    the pass-0 round with the per-view (2,)-uint32
+                    seeds in the Qa/Qb slots — an 8-byte broadcast
+                    instead of the ``(d, k̃)`` bases; workers re-derive
+                    (jnp) or in-kernel generate (kernels) Ω from it.
     prefetch:       per-worker chunk prefetch depth.
     worker_timeout: seconds a pass may run before live workers are
                     declared stragglers, killed and their missing
@@ -104,7 +112,8 @@ class ClusterCoordinator:
     def __init__(self, store, cfg: RCCAConfig, cluster_dir: str, *,
                  n_workers: int = 2, devices_per_worker: int = 1,
                  engine: str = DEFAULT_ENGINE,
-                 merge_group: int = MERGE_GROUP_CHUNKS, prefetch: int = 2,
+                 merge_group: int = MERGE_GROUP_CHUNKS,
+                 omega: str = "materialized", prefetch: int = 2,
                  ckpt_every: int = 4, worker_timeout: float = 600.0,
                  heartbeat_timeout: Optional[float] = None,
                  max_redispatch: int = 3,
@@ -120,6 +129,7 @@ class ClusterCoordinator:
         self.devices_per_worker = int(devices_per_worker)
         self.engine = resolve_engine(engine)
         self.merge_group = int(merge_group)
+        self.omega = resolve_omega(omega)
         self.prefetch = int(prefetch)
         self.ckpt_every = int(ckpt_every)
         self.worker_timeout = worker_timeout
@@ -132,6 +142,9 @@ class ClusterCoordinator:
         if self.devices_per_worker < 1:
             raise ValueError("need at least one device per worker")
         os.makedirs(os.path.join(cluster_dir, "logs"), exist_ok=True)
+        # (pass_idx, group) → error for stale-partial removals that
+        # failed — surfaced in diagnostics, retried at every pass sweep
+        self._clean_pending: Dict[tuple, str] = {}
 
     # -- process management -----------------------------------------------
 
@@ -211,6 +224,16 @@ class ClusterCoordinator:
                   expect: dict) -> tuple:
         """Spawn → barrier → streamed tree merge (+ per-pass diagnostics)."""
         t0 = time.perf_counter()
+        # stale-partial hygiene BEFORE the barrier polls: retry removals
+        # that failed in earlier passes, then sweep this pass's group
+        # range for leftovers of other fits.  Failures are never
+        # swallowed — they land in diagnostics and stay queued.
+        for p_old, g_old in list(self._clean_pending):
+            if pt.clear_stale_partial(self.cluster_dir, p_old, g_old) is None:
+                del self._clean_pending[(p_old, g_old)]
+        for g, err in pt.sweep_stale_partials(
+                self.cluster_dir, pass_idx, self.n_groups, expect).items():
+            self._clean_pending[(pass_idx, g)] = err
         pt.write_round(self.cluster_dir, pass_idx, Qa, Qb,
                        {**expect, "n_shards": self.n_workers})
         procs = {s: self._spawn(s, pass_idx,
@@ -287,10 +310,23 @@ class ClusterCoordinator:
                 "merge_s": round(now - t_merge, 4),
                 "workers_spawned": n_spawned,
                 "redispatched_groups": sorted(set(redispatched)),
-                "stale_heartbeat_shards": sorted(set(stale_shards))}
+                "stale_heartbeat_shards": sorted(set(stale_shards)),
+                "stale_clean_failures": {
+                    f"p{p:05d}_g{g:05d}": e
+                    for (p, g), e in sorted(self._clean_pending.items())}}
         return merged, diag
 
     # -- driving ----------------------------------------------------------
+
+    def _materialize_omega(self, seed_a, seed_b):
+        """(2,)-uint32 seeds → the tile-PRNG Ω bases, at a pass
+        boundary where the coordinator itself needs the arrays
+        (centering corrections, q = 0 finalize)."""
+        from repro.kernels import rand as krand
+
+        r, cfg = self.reader, self.cfg
+        return (krand.dense_omega(seed_a, r.da, cfg.sketch, cfg.dtype),
+                krand.dense_omega(seed_b, r.db, cfg.sketch, cfg.dtype))
 
     def fit(self, key: jax.Array) -> RCCAResult:
         """All q+1 passes across ``n_workers`` processes →
@@ -301,14 +337,21 @@ class ClusterCoordinator:
         # respawns); never reaches the arithmetic or the merge order
         fit_id = uuid.uuid4().hex  # rcca: noqa[RCCA004]
         sanitize.reset()
-        Qa, Qb = init_Q(key, r.da, r.db, cfg)
+        seeded = self.omega == "seeded"
+        if seeded:
+            # pass-0 rounds ship the 8-byte seeds in the Qa/Qb slots;
+            # workers re-derive (jnp) or in-kernel generate (kernels) Ω
+            Qa, Qb = omega_seeds(key)
+        else:
+            Qa, Qb = init_Q(key, r.da, r.db, cfg, omega=self.omega)
         passes = []
         for pass_idx in range(cfg.q + 1):
             kind = "final" if pass_idx == cfg.q else "power"
             expect = pt.binding_meta(
                 fit_id=fit_id, pass_idx=pass_idx, kind=kind,
                 engine=self.engine, fingerprint=r.fingerprint(),
-                merge_group=self.merge_group, algo=algo_meta(cfg))
+                merge_group=self.merge_group, algo=algo_meta(cfg),
+                omega=self.omega)
             stats, diag = self._run_pass(pass_idx, kind, Qa, Qb, expect)
             passes.append(diag)
             # n is an f32 accumulator: allow its rounding at huge row
@@ -319,7 +362,11 @@ class ClusterCoordinator:
                     f"store has {r.n} — a merge group folded the wrong "
                     "chunks")
             if kind == "power":
+                if seeded and pass_idx == 0 and cfg.center:
+                    Qa, Qb = self._materialize_omega(Qa, Qb)
                 Qa, Qb = power_update_Q(stats, Qa, Qb, cfg)
+        if seeded and cfg.q == 0:  # finalize needs the actual Ω
+            Qa, Qb = self._materialize_omega(Qa, Qb)
         res = finalize_result(stats, Qa, Qb, cfg, r.da, r.db)
         res.diagnostics["cluster"] = {
             "n_workers": self.n_workers,
@@ -327,6 +374,7 @@ class ClusterCoordinator:
             "topology": "hybrid" if self.devices_per_worker > 1 else "cluster",
             "n_groups": self.n_groups,
             "merge_group": self.merge_group,
+            "omega": self.omega,
             "fit_id": fit_id,
             "passes": passes,
         }

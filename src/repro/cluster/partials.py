@@ -12,8 +12,12 @@ the shape Scalable-CCA frames for Hadoop-style execution):
   hyper-parameters, merge-group size and the shard that produced it;
 - a ROUND is the coordinator's per-pass broadcast: the ``Qa``/``Qb``
   bases every worker of that pass projects against, under the same
-  binding metadata.  Workers read the round, stream their merge
-  groups, and publish one partial per group;
+  binding metadata.  Under ``omega="seeded"`` the first pass's round
+  carries the per-view ``(2,)``-uint32 Ω seeds in the Qa/Qb slots
+  instead of the ``(d, k̃)`` bases — workers are stateless for pass 0
+  (kernels engine: Ω tiles generated in-kernel; jnp engine: Ω
+  re-derived locally from the seed).  Workers read the round, stream
+  their merge groups, and publish one partial per group;
 - the coordinator merges partials with ``rcca.reduce_group_partials``
   — the fixed pairwise tree over group indices — so the result is
   bit-identical to the single-process drivers for ANY worker count and
@@ -54,9 +58,11 @@ from repro.core.rcca import FinalStats, PowerStats
 PARTIAL_VERSION = 1
 
 #: Metadata keys that must agree between a round and every partial
-#: merged under it — the at-most-once / staleness guard.
+#: merged under it — the at-most-once / staleness guard.  ``omega`` is
+#: binding because Ω provenance changes what a pass-0 round's Qa/Qb
+#: payload even IS (seeded rounds ship (2,)-uint32 seeds, not bases).
 BINDING_KEYS = ("version", "fit_id", "pass_idx", "kind", "engine",
-                "fingerprint", "merge_group", "algo")
+                "fingerprint", "merge_group", "algo", "omega")
 
 
 def round_dir(cluster_dir: str, pass_idx: int) -> str:
@@ -101,11 +107,12 @@ def heartbeat_age(cluster_dir: str, shard: int, pass_idx: int) -> Optional[float
 
 
 def binding_meta(*, fit_id: str, pass_idx: int, kind: str, engine: str,
-                 fingerprint: str, merge_group: int, algo: dict) -> dict:
+                 fingerprint: str, merge_group: int, algo: dict,
+                 omega: str = "materialized") -> dict:
     return {"version": PARTIAL_VERSION, "fit_id": fit_id,
             "pass_idx": int(pass_idx), "kind": kind, "engine": engine,
             "fingerprint": fingerprint, "merge_group": int(merge_group),
-            "algo": algo}
+            "algo": algo, "omega": omega}
 
 
 def binding_matches(meta: Optional[dict], expect: dict) -> bool:
@@ -205,9 +212,44 @@ def partial_meta(cluster_dir: str, pass_idx: int, group: int) -> Optional[dict]:
         return None
 
 
-def clear_stale_partial(cluster_dir: str, pass_idx: int, group: int) -> None:
-    shutil.rmtree(partial_path(cluster_dir, pass_idx, group),
-                  ignore_errors=True)
+def clear_stale_partial(cluster_dir: str, pass_idx: int,
+                        group: int) -> Optional[str]:
+    """Remove a stale partial directory; returns an error string on
+    failure, None on success (including already-gone).
+
+    A failed removal is never silently swallowed: staleness is decided
+    by binding metadata, so a leftover directory cannot corrupt a
+    merge, but an undeletable one means the shared FS is misbehaving —
+    the coordinator surfaces it in diagnostics and retries at the next
+    sweep, and the protocol trace records both outcomes.
+    """
+    path = partial_path(cluster_dir, pass_idx, group)
+    if not os.path.lexists(path):
+        return None
+    try:
+        shutil.rmtree(path)
+    except OSError as e:
+        trace_event("clean_fail", path, group=int(group), error=str(e))
+        return f"{path}: {e}"
+    trace_event("clean", path, group=int(group))
+    return None
+
+
+def sweep_stale_partials(cluster_dir: str, pass_idx: int, n_groups: int,
+                         expect: dict) -> Dict[int, str]:
+    """Delete every published partial of a pass whose binding does NOT
+    match ``expect`` (leftovers of an earlier fit in a reused
+    cluster_dir).  Returns {group: error} for removals that FAILED —
+    empty when the directory is clean."""
+    failures: Dict[int, str] = {}
+    for g in range(n_groups):
+        meta = partial_meta(cluster_dir, pass_idx, g)
+        if meta is None or binding_matches(meta, expect):
+            continue
+        err = clear_stale_partial(cluster_dir, pass_idx, g)
+        if err is not None:
+            failures[g] = err
+    return failures
 
 
 def collect_partials(cluster_dir: str, pass_idx: int, n_groups: int,

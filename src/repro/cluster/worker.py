@@ -7,7 +7,11 @@ Runnable under any external scheduler (the coordinator's subprocess
 spawn is just one such scheduler): everything a worker needs beyond its
 shard identity comes from the store manifest and the pass ROUND the
 coordinator published (Qa/Qb bases, engine, merge-group size, binding
-metadata).  The worker streams its merge groups — strided whole-group
+metadata).  Under ``omega="seeded"`` the pass-0 round's Qa/Qb slots
+hold the per-view (2,)-uint32 Ω seeds instead of bases: the kernels
+engine generates Ω tiles inside the fused kernels (never materializing
+the ``(d, k̃)`` array), the jnp engine re-derives Ω locally — either
+way the worker stays stateless and the broadcast is 8 bytes per view.  The worker streams its merge groups — strided whole-group
 assignment via ``ViewStoreReader.row_shard(group=...)``, prefetched
 through :class:`~repro.store.prefetch.ChunkPrefetcher` — folds each
 group's chunks through the ONE canonical fold loop
@@ -66,7 +70,8 @@ import numpy as np
 import jax
 
 from repro.ckpt import CheckpointManager
-from repro.core.rcca import jit_update_fn, stats_init_fn, update_fn
+from repro.core.rcca import (jit_seeded_update_fn, jit_update_fn,
+                             seeded_update_fn, stats_init_fn, update_fn)
 from repro.exec import (SegmentedAccumulator, fold_groups_on_mesh,
                         n_full_chunks, run_fold)
 from repro.store import ViewStoreReader, prefetched, shard_chunks
@@ -123,9 +128,28 @@ def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
     G = int(meta["merge_group"])
     n_chunks = reader.n_chunks
     n_groups = -(-n_chunks // G)
-    kt = Qa.shape[1]
+    # k̃ comes from the binding metadata, not the payload shape: a
+    # seeded pass-0 round's Qa/Qb slots hold (2,)-uint32 seeds
+    algo = meta["algo"]
+    kt = int(algo["k"]) + int(algo["p"])
+    q_dtype = np.dtype(algo["dtype"])
+    seeds = meta.get("omega", "materialized") == "seeded" and pass_idx == 0
+    if seeds and engine != "kernels":
+        # jnp engine: re-derive Ω locally from the 8-byte seed (still
+        # stateless — nothing but the round was read), then run the
+        # standard update path
+        from repro.kernels import rand as krand
+
+        Qa = krand.dense_omega(Qa, reader.da, kt, q_dtype)
+        Qb = krand.dense_omega(Qb, reader.db, kt, q_dtype)
+        seeds = False
     init_fn = stats_init_fn(kind, reader.da, reader.db, kt)
-    upd = jit_update_fn(kind, engine)
+    if seeds:  # kernels engine: Ω tiles generated inside the kernels
+        upd = jit_seeded_update_fn(kind, kt, q_dtype)
+        upd_raw = seeded_update_fn(kind, kt, q_dtype)
+    else:
+        upd = jit_update_fn(kind, engine)
+        upd_raw = update_fn(kind, engine)
     Qa, Qb = jax.device_put(Qa), jax.device_put(Qb)
     pt.touch_heartbeat(cluster_dir, shard, pass_idx)
 
@@ -179,7 +203,7 @@ def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
                     f"injected kill after group {g} (chunk {last_chunk})")
 
         fold_groups_on_mesh(
-            lambda i: reader.get_chunk(i), todo, update_fn(kind, engine),
+            lambda i: reader.get_chunk(i), todo, upd_raw,
             upd, init_fn, Qa, Qb, mesh=mesh, merge_group=G,
             n_chunks=n_chunks, full_chunks=n_full_chunks(reader), emit=emit)
         return state["published"]

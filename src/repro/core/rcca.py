@@ -322,13 +322,57 @@ def resolve_lambdas(cfg: RCCAConfig, tr_a, tr_b, da: int, db: int):
 # --------------------------------------------------------------------------
 
 
-def init_Q(key: jax.Array, da: int, db: int, cfg: RCCAConfig):
+#: The Ω-provenance knob of the seeded-sketch path:
+#: - ``"materialized"``   — classic ``jax.random.normal`` draw, array
+#:   threaded everywhere (the default; pre-existing behavior).
+#: - ``"seeded"``         — Ω is a pure function of a (2,)-uint32 seed
+#:   (:mod:`repro.kernels.rand`); the first data pass generates its
+#:   tiles inside the Pallas kernels and never materializes the
+#:   ``(d, k̃)`` array, and cluster rounds ship the seed, not the array.
+#: - ``"seeded-materialized"`` — the same tile-PRNG Ω, but materialized
+#:   up front and run through the standard update path: the bitwise
+#:   oracle ``omega="seeded"`` is validated against.
+OMEGA_MODES = ("materialized", "seeded", "seeded-materialized")
+
+
+def resolve_omega(omega: str) -> str:
+    """Normalize/validate the Ω-provenance knob."""
+    if omega not in OMEGA_MODES:
+        raise ValueError(
+            f"unknown omega {omega!r}; expected one of {OMEGA_MODES}")
+    return omega
+
+
+def omega_seeds(key: jax.Array):
+    """Per-view (2,)-uint32 Ω seeds for the seeded modes — the 64-bit
+    payload that replaces the (d, k̃) broadcast, identically derived
+    from the PRNG key by every execution mode."""
+    from repro.kernels import rand as krand
+
+    return krand.seeds_from_key(key)
+
+
+def init_Q(key: jax.Array, da: int, db: int, cfg: RCCAConfig,
+           omega: str = "materialized"):
     """Line 1-2: the Gaussian sketch bases, identically derived from the
-    PRNG key by every execution mode."""
-    ka, kb = jax.random.split(key)
-    Qa = jax.random.normal(ka, (da, cfg.sketch), cfg.dtype)
-    Qb = jax.random.normal(kb, (db, cfg.sketch), cfg.dtype)
-    return Qa, Qb
+    PRNG key by every execution mode.
+
+    Always generated in f32 with a single cast to ``cfg.dtype`` —
+    drawing directly in bf16 would quantize the underlying uniforms
+    and lose entropy, and it would diverge from the seeded kernels'
+    generate-in-f32-then-cast semantics.  The seeded modes materialize
+    the tile-PRNG Ω (the cross-engine oracle of the in-kernel path).
+    """
+    from repro.kernels import rand as krand
+
+    if resolve_omega(omega) == "materialized":
+        ka, kb = jax.random.split(key)
+        Qa = jax.random.normal(ka, (da, cfg.sketch), jnp.float32)
+        Qb = jax.random.normal(kb, (db, cfg.sketch), jnp.float32)
+        return Qa.astype(cfg.dtype), Qb.astype(cfg.dtype)
+    seed_a, seed_b = omega_seeds(key)
+    return (krand.dense_omega(seed_a, da, cfg.sketch, cfg.dtype),
+            krand.dense_omega(seed_b, db, cfg.sketch, cfg.dtype))
 
 
 def power_update_Q(stats: PowerStats, Qa, Qb, cfg: RCCAConfig):
@@ -404,8 +448,9 @@ def randomized_cca(
     kt = cfg.sketch
     ka, kb = jax.random.split(key)
     dt = cfg.dtype
-    Qa = jax.random.normal(ka, (da, kt), dt)
-    Qb = jax.random.normal(kb, (db, kt), dt)
+    # f32 generation + single cast — same entropy semantics as init_Q
+    Qa = jax.random.normal(ka, (da, kt), jnp.float32).astype(dt)
+    Qb = jax.random.normal(kb, (db, kt), jnp.float32).astype(dt)
 
     if cfg.center:
         A = A - jnp.mean(A, axis=0, keepdims=True)
@@ -493,6 +538,55 @@ def update_fn(kind: str, engine: str):
     raise ValueError(f"unknown pass kind {kind!r}")
 
 
+def seeded_update_fn(kind: str, kt: int, q_dtype):
+    """The raw per-chunk update for a seeded-Ω pass (kernels engine):
+    Ω tiles are generated inside the fused Pallas kernels, so the Qa/Qb
+    operand slots carry the (2,)-uint32 seeds instead of (d, k̃) arrays
+    — same arity as :func:`update_fn`'s result, which is what lets the
+    fold loop, shard_map specs, cursors and cluster rounds stay
+    structurally unchanged.  Bitwise identical to the materialized
+    update fed ``rand.dense_omega(seed, d, kt, q_dtype)``."""
+    from repro.kernels import ops as kops
+
+    f32 = jnp.float32
+    if kind == "power":
+        def upd(s: PowerStats, a, b, seed_a, seed_b) -> PowerStats:
+            dYa, dYb = kops.power_pass_chunk_seeded(a, b, seed_a, seed_b,
+                                                    kt=kt, q_dtype=q_dtype)
+            return s._replace(
+                Ya=s.Ya + dYa.astype(s.Ya.dtype),
+                Yb=s.Yb + dYb.astype(s.Yb.dtype),
+                sa=s.sa + jnp.sum(a, axis=0, dtype=f32).astype(s.sa.dtype),
+                sb=s.sb + jnp.sum(b, axis=0, dtype=f32).astype(s.sb.dtype),
+                n=s.n + a.shape[0],
+                tr_a=s.tr_a + jnp.sum(a.astype(f32) ** 2),
+                tr_b=s.tr_b + jnp.sum(b.astype(f32) ** 2),
+            )
+        return upd
+    if kind == "final":
+        def upd(s: FinalStats, a, b, seed_a, seed_b) -> FinalStats:
+            dCa, dCb, dF = kops.final_pass_chunk_seeded(a, b, seed_a, seed_b,
+                                                        kt=kt, q_dtype=q_dtype)
+            return s._replace(
+                Ca=s.Ca + dCa.astype(s.Ca.dtype),
+                Cb=s.Cb + dCb.astype(s.Cb.dtype),
+                F=s.F + dF.astype(s.F.dtype),
+                sa=s.sa + jnp.sum(a, axis=0, dtype=f32).astype(s.sa.dtype),
+                sb=s.sb + jnp.sum(b, axis=0, dtype=f32).astype(s.sb.dtype),
+                n=s.n + a.shape[0],
+                tr_a=s.tr_a + jnp.sum(a.astype(f32) ** 2),
+                tr_b=s.tr_b + jnp.sum(b.astype(f32) ** 2),
+            )
+        return upd
+    raise ValueError(f"unknown pass kind {kind!r}")
+
+
+def jit_seeded_update_fn(kind: str, kt: int, q_dtype):
+    """Jitted :func:`seeded_update_fn` — what streaming drivers and
+    cluster workers run for a seeded pass."""
+    return jax.jit(seeded_update_fn(kind, kt, q_dtype))
+
+
 def stats_init_fn(kind: str, da: int, db: int, sketch: int):
     """Zero accumulators for one pass flavor (f32 — the accumulator
     precision every execution mode shares)."""
@@ -515,6 +609,7 @@ def randomized_cca_iterator(
     engine: str = DEFAULT_ENGINE,
     use_kernels: Optional[bool] = None,
     merge_group: int = MERGE_GROUP_CHUNKS,
+    omega: str = "materialized",
     n_chunks: Optional[int] = None,
 ) -> RCCAResult:
     """True out-of-core driver: ``source_factory()`` yields (a, b) row
@@ -539,6 +634,6 @@ def randomized_cca_iterator(
     from repro.exec import PassEngine
 
     eng = PassEngine(cfg, engine=resolve_engine(engine, use_kernels),
-                     merge_group=merge_group)
+                     merge_group=merge_group, omega=omega)
     return eng.run_stream(source_factory, da, db, key, n_chunks=n_chunks,
                           resume_state=resume_state, on_pass_end=on_pass_end)

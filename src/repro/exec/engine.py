@@ -266,19 +266,73 @@ class PassEngine:
     same result.  ``Cluster``/``Hybrid`` fits are driven by
     ``repro.cluster.ClusterCoordinator`` (see :func:`fit`), which calls
     back into this module for the worker-side fold.
+
+    ``omega`` selects Ω provenance (see ``repro.core.rcca.OMEGA_MODES``).
+    With ``omega="seeded"`` and the kernels engine, pass 0 runs the
+    seeded per-chunk update: the (2,)-uint32 per-view seeds ride in the
+    Qa/Qb operand slots (same fold/cursor/round plumbing) and the
+    ``(d, k̃)`` Ω array is never materialized — tiles are generated
+    inside the Pallas kernels.  The jnp engine materializes Ω locally
+    from the same seeds (its documented fallback), and
+    ``"seeded-materialized"`` materializes the same tile-PRNG Ω up
+    front for every engine — the bitwise oracle of the seeded path.
     """
 
     def __init__(self, cfg, *, engine: Optional[str] = None,
                  topology: Topology = Local(),
-                 merge_group: int = MERGE_GROUP_CHUNKS):
-        from repro.core.rcca import DEFAULT_ENGINE, resolve_engine
+                 merge_group: int = MERGE_GROUP_CHUNKS,
+                 omega: str = "materialized"):
+        from repro.core.rcca import DEFAULT_ENGINE, resolve_engine, resolve_omega
 
         self.cfg = cfg
         self.engine = resolve_engine(DEFAULT_ENGINE if engine is None else engine)
         self.topology = topology
         self.merge_group = int(merge_group)
+        self.omega = resolve_omega(omega)
 
     # -- per-pass pieces --------------------------------------------------
+
+    @property
+    def seeds_in_slots(self) -> bool:
+        """True when pass 0's Qa/Qb operand slots carry seeds, not
+        arrays (seeded mode under the kernels engine)."""
+        return self.omega == "seeded" and self.engine == "kernels"
+
+    def _init_payload(self, key, da: int, db: int):
+        """Pass-0 Qa/Qb payload: seeds for the in-kernel path, arrays
+        otherwise (each omega mode's own generator)."""
+        from repro.core.rcca import init_Q, omega_seeds
+
+        if self.seeds_in_slots:
+            return omega_seeds(key)
+        if self.omega == "seeded":
+            # jnp engine: materialize the tile-PRNG Ω locally — a
+            # worker needs only the seed to re-derive it (stateless).
+            return init_Q(key, da, db, self.cfg, omega="seeded")
+        return init_Q(key, da, db, self.cfg, omega=self.omega)
+
+    def _boundary_Q(self, Qa, Qb, pass_idx: int, da: int, db: int):
+        """Materialize Ω at a pass boundary when the slots carry seeds
+        and downstream actually needs the arrays (centering correction,
+        or the q = 0 finalize).  Ya is already a (da, k̃) array at every
+        boundary, so this stays in the same memory class as the stats —
+        the in-pass data path is what never materializes Ω."""
+        from repro.kernels import rand as krand
+
+        if not self.seeds_in_slots or pass_idx != 0:
+            return Qa, Qb
+        return (krand.dense_omega(Qa, da, self.cfg.sketch, self.cfg.dtype),
+                krand.dense_omega(Qb, db, self.cfg.sketch, self.cfg.dtype))
+
+    def _updaters(self, seeded: bool):
+        """Jitted per-kind chunk updates for one pass flavor family."""
+        from repro.core.rcca import jit_seeded_update_fn, jit_update_fn
+
+        kinds = ("power", "final")
+        if seeded:
+            return {k: jit_seeded_update_fn(k, self.cfg.sketch, self.cfg.dtype)
+                    for k in kinds}
+        return {k: jit_update_fn(k, self.engine) for k in kinds}
 
     def _init_fn(self, kind: str, da: int, db: int):
         from repro.core.rcca import stats_init_fn
@@ -301,12 +355,13 @@ class PassEngine:
         always exposed — see its docstring for the resume-state and
         seekable-factory details; it is now a shell over this method.
         """
-        from repro.core.rcca import init_Q, jit_update_fn, power_update_Q
+        from repro.core.rcca import power_update_Q
 
         cfg = self.cfg
         sanitize.reset()
-        Qa, Qb = init_Q(key, da, db, cfg)
-        upd = {k: jit_update_fn(k, self.engine) for k in ("power", "final")}
+        Qa, Qb = self._init_payload(key, da, db)
+        upd = self._updaters(False)
+        upd_seeded = self._updaters(True) if self.seeds_in_slots else None
 
         start_pass, start_chunk, acc_state = 0, 0, None
         if resume_state is not None:
@@ -330,14 +385,19 @@ class PassEngine:
             if on_pass_end is not None:
                 cb = (lambda ci, a_, _p=pass_idx, _qa=Qa, _qb=Qb:
                       on_pass_end(_p, ci, a_, _qa, _qb))
-            run_fold(enumerate(source, start=offset), upd[kind], acc, Qa, Qb,
+            fn = (upd_seeded[kind] if upd_seeded is not None and pass_idx == 0
+                  else upd[kind])
+            run_fold(enumerate(source, start=offset), fn, acc, Qa, Qb,
                      start_chunk=start_chunk, on_chunk=cb)
             start_chunk = 0
             if sanitize.enabled():
                 sanitize.observe("pass_end", acc.result())
             if kind == "power":
+                if cfg.center:  # μ corrections need the actual Ω
+                    Qa, Qb = self._boundary_Q(Qa, Qb, pass_idx, da, db)
                 Qa, Qb = power_update_Q(acc.result(), Qa, Qb, cfg)
 
+        Qa, Qb = self._boundary_Q(Qa, Qb, pass_idx, da, db)  # q = 0 finalize
         res = self._finish(acc.result(), Qa, Qb, da, db)
         if sanitize.enabled():
             res.diagnostics["sanitize"] = sanitize.snapshot()
@@ -357,7 +417,7 @@ class PassEngine:
         checkpointing is a sequential-stream feature; device-parallel
         passes restart at pass granularity.
         """
-        from repro.core.rcca import (init_Q, jit_update_fn, power_update_Q,
+        from repro.core.rcca import (power_update_Q, seeded_update_fn,
                                      update_fn)
 
         topo = self.topology if isinstance(self.topology, Sharded) else Sharded()
@@ -372,29 +432,40 @@ class PassEngine:
         da, db = access.da, access.db
         nc = access.n_chunks
         n_groups = -(-nc // self.merge_group)
-        Qa, Qb = init_Q(key, da, db, cfg)
+        Qa, Qb = self._init_payload(key, da, db)
 
         # per-kind functions hoisted out of the pass loop: repeated
         # power passes must hit one trace of the mesh fold program, not
         # recompile it per pass (see _mesh_group_fold's memoization)
         kinds = ("power", "final")
         upd_raw = {k: update_fn(k, self.engine) for k in kinds}
-        upd_jit = {k: jit_update_fn(k, self.engine) for k in kinds}
+        upd_jit = self._updaters(False)
+        sd_raw = sd_jit = None
+        if self.seeds_in_slots:
+            sd_raw = {k: seeded_update_fn(k, cfg.sketch, cfg.dtype)
+                      for k in kinds}
+            sd_jit = self._updaters(True)
         init_fns = {k: self._init_fn(k, da, db) for k in kinds}
 
         for pass_idx, kind in pass_schedule(cfg.q):
             sanitize.set_context(pass_idx=pass_idx, kind=kind, site="mesh")
+            seeded = sd_raw is not None and pass_idx == 0
+            raw = sd_raw[kind] if seeded else upd_raw[kind]
+            jit = sd_jit[kind] if seeded else upd_jit[kind]
             acc = SegmentedAccumulator(init_fns[kind], nc, self.merge_group)
             fold_groups_on_mesh(
-                access.get_chunk, range(n_groups), upd_raw[kind],
-                upd_jit[kind], init_fns[kind], Qa, Qb, mesh=mesh,
+                access.get_chunk, range(n_groups), raw,
+                jit, init_fns[kind], Qa, Qb, mesh=mesh,
                 merge_group=self.merge_group, n_chunks=nc,
                 full_chunks=n_full_chunks(access), emit=acc.push_group)
             if sanitize.enabled():
                 sanitize.observe("pass_end", acc.result())
             if kind == "power":
+                if cfg.center:  # μ corrections need the actual Ω
+                    Qa, Qb = self._boundary_Q(Qa, Qb, pass_idx, da, db)
                 Qa, Qb = power_update_Q(acc.result(), Qa, Qb, cfg)
 
+        Qa, Qb = self._boundary_Q(Qa, Qb, pass_idx, da, db)  # q = 0 finalize
         res = self._finish(acc.result(), Qa, Qb, da, db)
         if sanitize.enabled():
             res.diagnostics["sanitize"] = sanitize.snapshot()
@@ -428,6 +499,7 @@ class PassEngine:
 
 def fit(store, cfg, key, *, topology: Topology = Local(),
         engine: Optional[str] = None, merge_group: int = MERGE_GROUP_CHUNKS,
+        omega: str = "materialized",
         cluster_dir: Optional[str] = None, prefetch=2,
         ckpt_dir: Optional[str] = None, resume: bool = False,
         **cluster_kwargs):
@@ -439,6 +511,11 @@ def fit(store, cfg, key, *, topology: Topology = Local(),
     ``Hybrid`` the multi-process coordinator (``cluster_dir`` required —
     extra keyword arguments are forwarded to it).  Every topology
     returns a bitwise-identical ``RCCAResult`` on the same store.
+
+    ``omega`` selects Ω provenance (``repro.core.rcca.OMEGA_MODES``):
+    ``"seeded"`` runs the first data pass from an 8-byte seed — the
+    kernels engine generates Ω tiles in-kernel and cluster rounds ship
+    the seed instead of the ``(d, k̃)`` bases.
     """
     from repro.core.rcca import DEFAULT_ENGINE
     from repro.store import PassRunner, ViewStoreReader
@@ -450,12 +527,12 @@ def fit(store, cfg, key, *, topology: Topology = Local(),
     if isinstance(topo, Local):
         runner = PassRunner(reader, cfg, engine=engine,
                             prefetch=prefetch, ckpt_dir=ckpt_dir,
-                            merge_group=merge_group)
+                            merge_group=merge_group, omega=omega)
         return runner.fit(key, resume=resume)
 
     if isinstance(topo, Sharded):
         eng = PassEngine(cfg, engine=engine, topology=topo,
-                         merge_group=merge_group)
+                         merge_group=merge_group, omega=omega)
         return eng.run_mesh(reader, key)
 
     # Cluster / Hybrid
@@ -468,7 +545,7 @@ def fit(store, cfg, key, *, topology: Topology = Local(),
     coord = ClusterCoordinator(
         reader, cfg, cluster_dir, n_workers=topo.n_workers,
         devices_per_worker=topo.devices_per_worker,
-        engine=engine, merge_group=merge_group,
+        engine=engine, merge_group=merge_group, omega=omega,
         prefetch=prefetch if isinstance(prefetch, int) else 2,
         **cluster_kwargs)
     return coord.fit(key)

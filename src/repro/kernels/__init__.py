@@ -9,6 +9,10 @@ powerpass.py — fused project+accumulate (one HBM read of A and B per
                da (Europarl d = 2^19 included)
 projgram.py  — fused project+gram (one HBM read of X per final pass);
                C-column bucketing covers sketches past k̃p = 1024
+rand.py      — counter-based tile PRNG (Threefry-2x32 + Box–Muller);
+               both fused kernels have ``*_seeded`` variants that
+               generate their Ω tiles in-kernel from a (2,)-uint32
+               SMEM seed, bitwise identical to the materialized path
 autotune.py  — persistent block-size autotuner (matmuls + the fused
                kernels' block/bucket caps; benchmarks/sweep_blocks.py)
 ops.py       — jitted public wrappers (interpret-mode on CPU)
@@ -40,10 +44,12 @@ the already-compiled blocks stay live until restart.
 import dataclasses
 from typing import Callable, Optional, Tuple
 
-from . import autotune, compat, ops, plan, ref
+from . import autotune, compat, ops, plan, rand, ref
 from .matmul import pallas_matmul, plan_matmul
-from .powerpass import plan_powerpass, power_project_accumulate
-from .projgram import plan_projgram, projgram
+from .powerpass import (plan_powerpass, plan_powerpass_seeded,
+                        power_project_accumulate,
+                        power_project_accumulate_seeded)
+from .projgram import plan_projgram, plan_projgram_seeded, projgram, projgram_seeded
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +142,27 @@ KERNEL_REGISTRY: dict = {
              _sds((p["db"], p["kt"]), p["dtype"])),
         ),
     ),
+    "powerpass_seeded": KernelDef(
+        name="powerpass_seeded",
+        plan=lambda p: plan_powerpass_seeded(p["n"], p["da"], p["db"],
+                                             p["kt"], p["dtype"]),
+        probes=(
+            {"n": 256, "da": 500, "db": 300, "kt": 64, "dtype": "float32"},
+            # forced multi-bucket regime: dap·k̃p blows one block
+            {"n": 256, "da": 4096, "db": 256, "kt": 512, "dtype": "float32"},
+            {"n": 128, "da": 256, "db": 128, "kt": 64, "dtype": "bfloat16"},
+            # degenerate fallback regime: k̃p > 8192 → plan is None
+            {"n": 128, "da": 128, "db": 128, "kt": 8320, "dtype": "float32"},
+        ),
+        abstract=lambda p: (
+            __import__("functools").partial(power_project_accumulate_seeded,
+                                            kt=p["kt"], q_dtype=p["dtype"],
+                                            interpret=True),
+            (_sds((p["n"], p["da"]), p["dtype"]),
+             _sds((p["n"], p["db"]), p["dtype"]),
+             _sds((2,), "uint32")),
+        ),
+    ),
     "projgram": KernelDef(
         name="projgram",
         plan=lambda p: plan_projgram(p["n"], p["d"], p["kt"], p["dtype"]),
@@ -153,6 +180,26 @@ KERNEL_REGISTRY: dict = {
              _sds((p["d"], p["kt"]), p["dtype"])),
         ),
     ),
+    "projgram_seeded": KernelDef(
+        name="projgram_seeded",
+        plan=lambda p: plan_projgram_seeded(p["n"], p["d"], p["kt"],
+                                            p["dtype"]),
+        probes=(
+            {"n": 256, "d": 500, "kt": 64, "dtype": "float32"},
+            # forced multi-bucket regime: k̃p² blows one block
+            {"n": 256, "d": 256, "kt": 2048, "dtype": "float32"},
+            {"n": 128, "d": 200, "kt": 64, "dtype": "bfloat16"},
+            # degenerate fallback regime: k̃p > 8192 → plan is None
+            {"n": 128, "d": 128, "kt": 8320, "dtype": "float32"},
+        ),
+        abstract=lambda p: (
+            __import__("functools").partial(projgram_seeded, kt=p["kt"],
+                                            q_dtype=p["dtype"],
+                                            interpret=True),
+            (_sds((p["n"], p["d"]), p["dtype"]),
+             _sds((2,), "uint32")),
+        ),
+    ),
 }
 
 
@@ -161,13 +208,18 @@ __all__ = [
     "compat",
     "ops",
     "plan",
+    "rand",
     "ref",
     "KernelDef",
     "KERNEL_REGISTRY",
     "pallas_matmul",
     "plan_matmul",
     "plan_powerpass",
+    "plan_powerpass_seeded",
     "plan_projgram",
+    "plan_projgram_seeded",
     "power_project_accumulate",
+    "power_project_accumulate_seeded",
     "projgram",
+    "projgram_seeded",
 ]

@@ -19,6 +19,9 @@ never touch them directly:
 - ``vmem(shape, dtype)`` — a VMEM scratch allocation
   (``pltpu.VMEM``); the ``pltpu`` namespace itself is the
   version-sensitive surface, so kernel modules go through this helper.
+- ``smem_spec()`` — a ``pl.BlockSpec`` placing a small scalar operand
+  (e.g. the Ω PRNG seed) in SMEM (``pltpu.SMEM``), the scalar-operand
+  path for the seeded kernels.
 - ``shard_map(f, mesh=..., in_specs=..., out_specs=..., check_rep=...)``
   — ``jax.shard_map`` (jax ≥ 0.6, where ``check_rep`` became
   ``check_vma``) vs ``jax.experimental.shard_map.shard_map``.
@@ -91,6 +94,25 @@ def vmem(shape, dtype):
     (``scratch_shapes=[vmem((bm, bn), jnp.float32)]``) — the one place
     the kernels touch the ``pltpu`` namespace for memory spaces."""
     return pltpu.VMEM(tuple(shape), dtype)
+
+
+def smem_spec():
+    """A ``pl.BlockSpec`` that places a small scalar operand (a PRNG
+    seed, a size, ...) in SMEM: no block shape, the full array is
+    handed to the kernel and read elementwise (``seed_ref[0]``).
+
+    This is the scalar-operand path for PRNG-bearing kernels — the
+    seed rides as data (visible to jit, binding metadata and the
+    contract checker), never as a Python-level constant baked into the
+    trace.  ``pltpu`` memory spaces are version-sensitive spelling, so
+    the helper lives here with :func:`vmem`.
+    """
+    from jax.experimental import pallas as pl
+
+    space = getattr(pltpu, "SMEM", None)
+    if space is None:  # pragma: no cover - future jax spelling
+        space = pltpu.TPUMemorySpace.SMEM
+    return pl.BlockSpec(memory_space=space)
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_rep=False):

@@ -14,8 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from .matmul import pallas_matmul
-from .powerpass import power_project_accumulate
-from .projgram import projgram
+from .powerpass import power_project_accumulate, power_project_accumulate_seeded
+from .projgram import projgram, projgram_seeded
 
 # interpret=True on CPU hosts (including the dry-run container), False on TPU.
 def _default_interpret() -> bool:
@@ -66,5 +66,38 @@ def final_pass_chunk(a, b, Qa, Qb, *, interpret: bool | None = None):
     interpret = _default_interpret() if interpret is None else interpret
     pa, Ca = projgram(a, Qa, interpret=interpret)
     pb, Cb = projgram(b, Qb, interpret=interpret)
+    F = pallas_matmul(pa, pb, transpose_lhs=True, out_dtype=jnp.float32, interpret=interpret)
+    return Ca, Cb, F
+
+
+@functools.partial(jax.jit, static_argnames=("kt", "q_dtype", "interpret"))
+def power_pass_chunk_seeded(a, b, seed_a, seed_b, *, kt: int, q_dtype,
+                            interpret: bool | None = None):
+    """Seeded-Ω variant of :func:`power_pass_chunk`:
+    ΔYa = Aᵀ(B Ω(seed_b)), ΔYb = Bᵀ(A Ω(seed_a)) with both Ω generated
+    tile-by-tile inside the kernels (``rand.normal_tile``) — no
+    ``(d, k̃)`` array exists anywhere in this update.  Bitwise identical
+    to ``power_pass_chunk(a, b, Qa, Qb)`` with
+    ``Q* = rand.dense_omega(seed_*, d*, kt, q_dtype)``."""
+    interpret = _default_interpret() if interpret is None else interpret
+    dYa = power_project_accumulate_seeded(a, b, seed_b, kt=kt,
+                                          q_dtype=q_dtype, interpret=interpret)
+    dYb = power_project_accumulate_seeded(b, a, seed_a, kt=kt,
+                                          q_dtype=q_dtype, interpret=interpret)
+    return dYa, dYb
+
+
+@functools.partial(jax.jit, static_argnames=("kt", "q_dtype", "interpret"))
+def final_pass_chunk_seeded(a, b, seed_a, seed_b, *, kt: int, q_dtype,
+                            interpret: bool | None = None):
+    """Seeded-Ω variant of :func:`final_pass_chunk` (the q = 0 direct
+    sketch): ΔCa, ΔCb, ΔF against in-kernel generated Ω(seed_a),
+    Ω(seed_b).  The cross term F reuses the emitted Pa, Pb exactly as
+    the materialized path does."""
+    interpret = _default_interpret() if interpret is None else interpret
+    pa, Ca = projgram_seeded(a, seed_a, kt=kt, q_dtype=q_dtype,
+                             interpret=interpret)
+    pb, Cb = projgram_seeded(b, seed_b, kt=kt, q_dtype=q_dtype,
+                             interpret=interpret)
     F = pallas_matmul(pa, pb, transpose_lhs=True, out_dtype=jnp.float32, interpret=interpret)
     return Ca, Cb, F

@@ -64,6 +64,25 @@ class ScratchDef:
 
 
 @dataclasses.dataclass(frozen=True)
+class ScalarDef:
+    """One SMEM-resident scalar operand (e.g. a PRNG seed): the full
+    small array is passed to the kernel un-blocked, ahead of the
+    blocked operands.  PRNG-bearing plans MUST route their seed through
+    one of these — never through a trace-time constant — so the
+    contract checker (rule RCCA108) can verify the plumbing."""
+
+    shape: Tuple[int, ...]
+    dtype: str
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
 class KernelPlan:
     """The complete launch geometry of one fused-kernel invocation."""
 
@@ -76,6 +95,8 @@ class KernelPlan:
     out_shape: Tuple[Tuple[int, ...], ...]
     #: indices into out_specs of f32 accumulator outputs (dtype rule)
     accum_outputs: Tuple[int, ...] = ()
+    #: SMEM scalar operands, passed BEFORE the blocked in_specs
+    scalars: Tuple[ScalarDef, ...] = ()
 
     @property
     def n_steps(self) -> int:
@@ -93,15 +114,17 @@ def launch_args(plan: KernelPlan) -> dict:
     import jax.numpy as jnp
     from jax.experimental import pallas as pl
 
-    from .compat import vmem
+    from .compat import smem_spec, vmem
 
     out_specs = [pl.BlockSpec(b.shape, b.index_map) for b in plan.out_specs]
     out_shape = [jax.ShapeDtypeStruct(b.padded, jnp.dtype(b.dtype))
                  for b in plan.out_specs]
     single = len(out_specs) == 1
+    in_specs = [smem_spec() for _ in plan.scalars]
+    in_specs += [pl.BlockSpec(b.shape, b.index_map) for b in plan.in_specs]
     return dict(
         grid=plan.grid,
-        in_specs=[pl.BlockSpec(b.shape, b.index_map) for b in plan.in_specs],
+        in_specs=in_specs,
         out_specs=out_specs[0] if single else out_specs,
         out_shape=out_shape[0] if single else out_shape,
         scratch_shapes=[vmem(s.shape, jnp.dtype(s.dtype))

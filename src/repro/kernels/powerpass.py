@@ -46,20 +46,36 @@ Block caps resolve from the autotune cache (``op="powerpass"``, keyed
 by the padded (n, db, k̃) problem plus the bucketed dap) — see
 :func:`repro.kernels.autotune.autotune_powerpass` and
 ``benchmarks/sweep_blocks.py``.
+
+Ω-RESIDENCY ACCOUNTING (the ``omega="seeded"`` variant): with a
+materialized sketch the power pass holds Ω = ``d·k̃`` elements resident
+in HBM for the whole fit (Europarl: 2^19 × 2060 ≈ 4.3 GB f32, or
+2.2 GB bf16) and every chunk's kernel launch streams ``bdb·k̃p`` Q
+tiles from HBM — ``d·k̃·bytes`` of Ω reads per chunk per bucket, on
+top of the A/B reads.  :func:`power_project_accumulate_seeded` instead
+regenerates each Q tile inside the kernel from a 64-bit seed
+(:mod:`repro.kernels.rand`): Ω's HBM residency drops from ``d·k̃·bytes``
+to 8 bytes and its read traffic to zero, at the cost of ~40 uint32
+ALU ops per generated element (Threefry-2x32 + Box–Muller) — VPU work
+that overlaps the MXU dot on real hardware.  Per power-pass chunk the
+HBM bytes are then ``n·(da+db)·bytes`` (the data reads) instead of
+``n·(da+db)·bytes + n_buckets·d·k̃·bytes`` with materialized Ω tiles,
+and cluster rounds ship the 8-byte seed instead of the 4 GB array.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from . import autotune
+from . import autotune, rand
 from .compat import tpu_compiler_params
 from .matmul import _pad2, _pick_block, _round_up, pallas_matmul, vmem_row_cap
-from .plan import BlockDef, KernelPlan, ScratchDef, launch_args
+from .plan import BlockDef, KernelPlan, ScalarDef, ScratchDef, launch_args
 
 
 def _powerpass_kernel(a_ref, b_ref, q_ref, y_ref, p_acc, *, n_k_steps: int):
@@ -194,4 +210,120 @@ def power_project_accumulate(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
     )(ap, bp, qp)
+    return out[:da, :kt]
+
+
+def _powerpass_seeded_kernel(seed_ref, a_ref, b_ref, y_ref, p_acc, *,
+                             n_k_steps: int, bdb: int, ktp: int,
+                             db: int, kt: int, q_dtype):
+    """y_bucket += a_bucketᵀ(b Ω_tile(seed)); Ω never touches HBM.
+
+    Identical schedule to :func:`_powerpass_kernel`; the (bdb, k̃p) Q
+    tile is regenerated from the SMEM seed at global row offset
+    ``k_step·bdb`` instead of being streamed from HBM.  The tile is
+    generated in f32, masked to zero outside the logical (db, k̃)
+    bounds, and cast once to the data dtype — bitwise identical to a
+    zero-padded materialized ``rand.dense_omega`` tile.
+    """
+    n_step = pl.program_id(1)
+    k_step = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(n_step == 0, k_step == 0))
+    def _init_y():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    @pl.when(k_step == 0)
+    def _init_p():
+        p_acc[...] = jnp.zeros_like(p_acc)
+
+    q_tile = rand.normal_tile(
+        seed_ref[0], seed_ref[1],
+        (k_step * bdb).astype(rand.U32), rand.U32(0),
+        (bdb, ktp), row_limit=db, col_limit=kt,
+    ).astype(q_dtype)
+    p_acc[...] += jax.lax.dot_general(
+        b_ref[...], q_tile, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k_step == n_k_steps - 1)
+    def _accumulate():
+        y_ref[...] += jax.lax.dot_general(
+            a_ref[...], p_acc[...], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(y_ref.dtype)
+
+
+def plan_powerpass_seeded(n: int, da: int, db: int, kt: int, dtype, *,
+                          block_n: int | None = None,
+                          block_db: int | None = None,
+                          block_da: int | None = None) -> KernelPlan | None:
+    """Launch plan for the seeded fused kernel: the materialized plan's
+    geometry with the Q operand replaced by a (2,)-uint32 SMEM seed
+    scalar — Ω has no HBM block, which is the point."""
+    base = plan_powerpass(n, da, db, kt, dtype, block_n=block_n,
+                          block_db=block_db, block_da=block_da)
+    if base is None:
+        return None
+    return dataclasses.replace(
+        base,
+        name="powerpass_seeded",
+        in_specs=base.in_specs[:2],
+        scalars=(ScalarDef((2,), "uint32"),),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kt", "q_dtype", "block_n", "block_db", "block_da",
+                     "interpret"),
+)
+def power_project_accumulate_seeded(
+    a: jax.Array,
+    b: jax.Array,
+    seed: jax.Array,
+    *,
+    kt: int,
+    q_dtype=None,
+    block_n: int | None = None,
+    block_db: int | None = None,
+    block_da: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Return ΔY = aᵀ (b @ Ω(seed)) with Ω generated inside the kernel.
+
+    a: (n, da), b: (n, db), seed: (2,) uint32 → (da, k̃) in f32.
+    Bitwise identical to ``power_project_accumulate(a, b, Q)`` where
+    ``Q = rand.dense_omega(seed, db, kt, q_dtype)`` — the materialized
+    oracle — because the in-kernel tiles are the same counter-PRNG
+    values cast the same way.  Only the degenerate unfused fallback
+    (k̃p > 8192) materializes Ω transiently.
+    """
+    n, da = a.shape
+    n2, db = b.shape
+    assert n == n2, f"row mismatch {n} vs {n2}"
+    q_dtype = a.dtype if q_dtype is None else jnp.dtype(q_dtype)
+
+    plan = plan_powerpass_seeded(n, da, db, kt, a.dtype, block_n=block_n,
+                                 block_db=block_db, block_da=block_da)
+    if plan is None:
+        # k̃p > 8192: unfused pair; Ω materialized transiently (documented)
+        q = rand.dense_omega(seed, db, kt, q_dtype)
+        p = pallas_matmul(b, q, out_dtype=jnp.float32, interpret=interpret)
+        return pallas_matmul(a, p, transpose_lhs=True, out_dtype=jnp.float32,
+                             interpret=interpret)
+    ap = _pad2(a, *plan.in_specs[0].padded)
+    bp = _pad2(b, *plan.in_specs[1].padded)
+    bdb = plan.in_specs[1].shape[1]
+    ktp = plan.out_specs[0].shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_powerpass_seeded_kernel, n_k_steps=plan.grid[2],
+                          bdb=bdb, ktp=ktp, db=db, kt=kt, q_dtype=q_dtype),
+        **launch_args(plan),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+    )(jnp.asarray(seed, jnp.uint32), ap, bp)
     return out[:da, :kt]

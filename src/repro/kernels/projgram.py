@@ -43,16 +43,17 @@ Block caps resolve from the autotune cache (``op="projgram"``) — see
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from . import autotune
+from . import autotune, rand
 from .compat import tpu_compiler_params
 from .matmul import _pad2, _pick_block, _round_up, pallas_matmul, vmem_row_cap
-from .plan import BlockDef, KernelPlan, ScratchDef, launch_args
+from .plan import BlockDef, KernelPlan, ScalarDef, ScratchDef, launch_args
 
 
 def _projgram_kernel(x_ref, q_ref, p_ref, c_ref, acc_ref,
@@ -184,4 +185,113 @@ def projgram(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
     )(xp, qp)
+    return p[:n, :kt], c[:kt, :kt]
+
+
+def _projgram_seeded_kernel(seed_ref, x_ref, p_ref, c_ref, acc_ref, *,
+                            n_d_steps: int, block_c: int, bd: int, ktp: int,
+                            d: int, kt: int, q_dtype):
+    """Seeded-Ω variant of :func:`_projgram_kernel`: the (bd, k̃p) Q
+    tile is regenerated from the SMEM seed at global row offset
+    ``d_step·bd`` (f32 → zero-mask outside (d, k̃) → one cast), bitwise
+    identical to streaming a zero-padded ``rand.dense_omega`` tile."""
+    c_step = pl.program_id(0)
+    n_step = pl.program_id(1)
+    d_step = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(n_step == 0, d_step == 0))
+    def _init_c():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    @pl.when(d_step == 0)
+    def _init_p():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_tile = rand.normal_tile(
+        seed_ref[0], seed_ref[1],
+        (d_step * bd).astype(rand.U32), rand.U32(0),
+        (bd, ktp), row_limit=d, col_limit=kt,
+    ).astype(q_dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], q_tile, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(d_step == n_d_steps - 1)
+    def _flush():
+        p = acc_ref[...]
+        p_ref[...] = p.astype(p_ref.dtype)
+        pj = acc_ref[:, pl.ds(c_step * block_c, block_c)]
+        c_ref[...] += jax.lax.dot_general(
+            p, pj, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        ).astype(c_ref.dtype)
+
+
+def plan_projgram_seeded(n: int, d: int, kt: int, dtype, *,
+                         block_n: int | None = None,
+                         block_d: int | None = None,
+                         block_c: int | None = None,
+                         p_dtype=jnp.float32) -> KernelPlan | None:
+    """Launch plan for the seeded project+gram kernel: the materialized
+    plan's geometry with the Q operand replaced by a (2,)-uint32 SMEM
+    seed scalar."""
+    base = plan_projgram(n, d, kt, dtype, block_n=block_n, block_d=block_d,
+                         block_c=block_c, p_dtype=p_dtype)
+    if base is None:
+        return None
+    return dataclasses.replace(
+        base,
+        name="projgram_seeded",
+        in_specs=base.in_specs[:1],
+        scalars=(ScalarDef((2,), "uint32"),),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kt", "q_dtype", "block_n", "block_d", "block_c",
+                     "interpret", "p_dtype"),
+)
+def projgram_seeded(
+    x: jax.Array,
+    seed: jax.Array,
+    *,
+    kt: int,
+    q_dtype=None,
+    block_n: int | None = None,
+    block_d: int | None = None,
+    block_c: int | None = None,
+    p_dtype=jnp.float32,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Return (P = x @ Ω(seed), C = PᵀP) with Ω generated in-kernel.
+
+    x: (n, d), seed: (2,) uint32.  Bitwise identical to
+    ``projgram(x, rand.dense_omega(seed, d, kt, q_dtype))``; only the
+    degenerate unfused fallback (k̃p > 8192) materializes Ω transiently.
+    """
+    n, d = x.shape
+    q_dtype = x.dtype if q_dtype is None else jnp.dtype(q_dtype)
+    plan = plan_projgram_seeded(n, d, kt, x.dtype, block_n=block_n,
+                                block_d=block_d, block_c=block_c,
+                                p_dtype=p_dtype)
+    if plan is None:
+        q = rand.dense_omega(seed, d, kt, q_dtype)
+        p = pallas_matmul(x, q, out_dtype=p_dtype, interpret=interpret)
+        c = pallas_matmul(p, p, transpose_lhs=True, interpret=interpret)
+        return p, c
+    xp = _pad2(x, *plan.in_specs[0].padded)
+    bd = plan.in_specs[0].shape[1]
+    ktp = plan.out_specs[0].shape[1]
+
+    p, c = pl.pallas_call(
+        functools.partial(_projgram_seeded_kernel, n_d_steps=plan.grid[2],
+                          block_c=plan.out_specs[1].shape[1],
+                          bd=bd, ktp=ktp, d=d, kt=kt, q_dtype=q_dtype),
+        **launch_args(plan),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+    )(jnp.asarray(seed, jnp.uint32), xp)
     return p[:n, :kt], c[:kt, :kt]

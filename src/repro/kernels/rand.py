@@ -1,0 +1,144 @@
+"""Counter-based tile PRNG for the seeded-Ω path.
+
+The randomized CCA range finder multiplies every data chunk against a
+Gaussian sketch ``Ω: (d, k̃)``.  At Europarl scale that is
+``2^19 × 2060`` ≈ 4 GB f32 — it dominates HBM residency in the power
+pass and must be broadcast (or identically re-derived) by every
+cluster worker.  This module removes the array entirely: Ω is a pure
+function of a 64-bit seed and the element coordinates, so any tile of
+it can be generated *inside* a Pallas kernel (or on the host) with
+
+    ``Ω[i, j] = boxmuller(threefry2x32(seed, counter=(i, j)))``
+
+**Bitwise contract.**  Everything here is ordinary ``jnp`` uint32 /
+f32 element-wise arithmetic — no stateful PRNG primitives — so the
+exact same function body runs inside a Pallas kernel, under
+``interpret=True``, and as the host-side reference.  Because each
+element depends only on ``(seed, i, j)``, the generated values are
+invariant to block shape, bucket split and grid partitioning: a
+``(bdb, k̃p)`` tile generated at row offset ``k·bdb`` is bitwise equal
+to the corresponding slice of :func:`dense_omega`.  That invariance is
+what makes ``omega="seeded"`` bitwise comparable to the materialized
+oracle (``omega="seeded-materialized"``), and it is pinned by
+``tests/test_seeded_omega.py``.
+
+**Generator.**  Threefry-2x32 with the full 20 rounds (the same cipher
+family as jax's own threefry PRNG), keyed on the two seed words, with
+the global ``(row, col)`` coordinates as the 64-bit counter.  The two
+output words feed one Box–Muller cosine branch:
+
+    ``u ~ U[0,1)`` via exponent-patching (``(bits >> 9) | 0x3F800000``
+    bitcast to f32 in ``[1, 2)``), then
+    ``z = sqrt(-2·log(2 - f0)) · cos(2π·(f1 - 1))``.
+
+``2 - f0`` is exact in f32 (Sterbenz) and keeps the log argument in
+``[2^-23, 1]``.  One sharp edge makes the bitwise contract hold:
+XLA CPU's vectorized transcendentals (``log``, ``exp``) round their
+*scalar remainder lanes* differently from the vector lanes, so a
+generator evaluation is only bitwise stable on lane-aligned shapes.
+Kernel tiles are always ``(block, k̃p)`` with 128-multiples, and
+:func:`dense_omega` generates at the 128-padded shape behind an
+``optimization_barrier`` before slicing — never evaluate the
+generator on a ragged shape.  Padding
+rows/columns (beyond the logical ``d × k̃``) are masked to exactly 0.0
+so a generated padded tile equals the zero-padded materialized Ω
+bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+_TWO_PI = 6.283185307179586
+
+
+def _rot(x, r: int):
+    return (x << U32(r)) | (x >> U32(32 - r))
+
+
+def threefry2x32(k0, k1, c0, c1):
+    """Threefry-2x32, 20 rounds: encrypt counter ``(c0, c1)`` under key
+    ``(k0, k1)``.  All operands uint32; broadcasts elementwise."""
+    ks2 = k0 ^ k1 ^ U32(0x1BD11BDA)
+    x0 = c0 + k0
+    x1 = c1 + k1
+    ks = (k0, k1, ks2)
+    rotations = ((13, 15, 26, 6), (17, 29, 16, 24))
+    for i in range(5):
+        for r in rotations[i % 2]:
+            x0 = x0 + x1
+            x1 = _rot(x1, r) ^ x0
+        x0 = x0 + ks[(i + 1) % 3]
+        x1 = x1 + ks[(i + 2) % 3] + U32(i + 1)
+    return x0, x1
+
+
+def _f12(bits):
+    """uint32 bits → f32 in ``[1, 2)`` by exponent patching (keeps the
+    top 23 bits of entropy; exact, division-free)."""
+    return jax.lax.bitcast_convert_type(
+        (bits >> U32(9)) | U32(0x3F800000), jnp.float32)
+
+
+def normal_tile(s0, s1, r0, c0, shape, *, row_limit=None, col_limit=None):
+    """One f32 ``N(0, 1)`` tile of Ω(seed): element ``(i, j)`` of the
+    tile is Ω's global element ``(r0 + i, c0 + j)``.
+
+    ``s0, s1`` are the uint32 seed words; ``r0, c0`` the uint32 global
+    offsets of the tile (traced scalars inside a kernel).  When
+    ``row_limit``/``col_limit`` are given, elements at or beyond the
+    logical bound are exactly 0.0 — matching zero-padded materialized
+    operands bit-for-bit.
+    """
+    rows = jax.lax.broadcasted_iota(U32, shape, 0) + r0
+    cols = jax.lax.broadcasted_iota(U32, shape, 1) + c0
+    b0, b1 = threefry2x32(s0, s1, rows, cols)
+    f0 = _f12(b0)
+    u1 = _f12(b1) - jnp.float32(1.0)
+    r = jnp.sqrt(jnp.float32(-2.0) * jnp.log(jnp.float32(2.0) - f0))
+    z = r * jnp.cos(jnp.float32(_TWO_PI) * u1)
+    if row_limit is not None or col_limit is not None:
+        ok = True
+        if row_limit is not None:
+            ok = rows < U32(row_limit)
+        if col_limit is not None:
+            ok = ok & (cols < U32(col_limit))
+        z = jnp.where(ok, z, jnp.float32(0.0))
+    return z
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def dense_omega(seed, d: int, kt: int, dtype=jnp.float32):
+    """Materialize the full ``(d, kt)`` Ω for ``seed`` — the oracle the
+    seeded kernels are bitwise-compared against, and the local
+    materialization used by the jnp engine.  Generated in f32, cast
+    once (the same generate-in-f32-then-cast semantics as the kernels).
+
+    Generation happens at the 128-aligned padded shape and is then
+    sliced: XLA CPU's vectorized transcendentals round their scalar
+    remainder lanes differently, so ragged shapes are not bitwise
+    stable — every generator evaluation (here and in the kernels,
+    whose tiles are (block, k̃p)) uses lane-aligned shapes only.
+    """
+    seed = jnp.asarray(seed, U32)
+    shape = (_round_up(d, 128), _round_up(kt, 128))
+    z = normal_tile(seed[0], seed[1], U32(0), U32(0), shape,
+                    row_limit=d, col_limit=kt)
+    # Barrier: without it XLA fuses the slice into the generation and
+    # re-narrows the compute domain to the ragged (d, kt) shape.
+    z = jax.lax.optimization_barrier(z)
+    return z[:d, :kt].astype(dtype)
+
+
+def seeds_from_key(key):
+    """Per-view ``(2,)``-uint32 Ω seeds derived from a jax PRNG key,
+    mirroring ``init_Q``'s split order (first half → view a)."""
+    ka, kb = jax.random.split(key)
+    seed_a = jax.random.bits(ka, (2,), U32)
+    seed_b = jax.random.bits(kb, (2,), U32)
+    return seed_a, seed_b

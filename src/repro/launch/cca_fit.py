@@ -64,6 +64,15 @@ def main(argv=None):
     ap.add_argument("--engine", default=DEFAULT_ENGINE, choices=["kernels", "jnp"],
                     help="data-pass engine: fused Pallas kernels (default; "
                          "interpret-mode off-TPU) or the pure-jnp oracle path")
+    ap.add_argument("--omega", default="materialized",
+                    choices=["materialized", "seeded", "seeded-materialized"],
+                    help="Gaussian-sketch provenance: 'seeded' runs the "
+                         "first data pass from an 8-byte counter-PRNG seed "
+                         "(kernels engine generates Omega tiles in-kernel; "
+                         "cluster rounds ship the seed, not the (d, k~) "
+                         "bases); 'seeded-materialized' materializes the "
+                         "same tile-PRNG Omega up front — the bitwise "
+                         "oracle of the seeded path")
     ap.add_argument("--autotune", action="store_true",
                     help="before fitting, sweep the fused powerpass/projgram "
                          "block+bucket sizes for this workload's chunk shape "
@@ -200,8 +209,10 @@ def main(argv=None):
         coord = ClusterCoordinator(
             reader, rcca, cluster_dir, n_workers=n_workers,
             devices_per_worker=devices, engine=args.engine,
+            omega=args.omega,
             prefetch=args.prefetch if args.prefetch != "auto" else 2)
         print(f"[cca] {args.topology} mode, engine={args.engine}, "
+              f"omega={args.omega}, "
               f"workers={n_workers}x{devices}dev, groups={coord.n_groups}, "
               f"cluster_dir={cluster_dir}")
         res = coord.fit(key)
@@ -212,9 +223,10 @@ def main(argv=None):
     elif args.topology == "sharded":
         from repro.exec import PassEngine, Sharded
 
-        eng = PassEngine(rcca, engine=args.engine, topology=Sharded())
+        eng = PassEngine(rcca, engine=args.engine, topology=Sharded(),
+                         omega=args.omega)
         mesh = eng.topology.build_mesh()
-        print(f"[cca] sharded mode, engine={args.engine}, "
+        print(f"[cca] sharded mode, engine={args.engine}, omega={args.omega}, "
               f"devices={mesh.devices.size}, n={reader.n} "
               f"chunks={reader.n_chunks} (force more CPU devices with "
               f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
@@ -224,6 +236,11 @@ def main(argv=None):
         if reader.nbytes <= 2 << 30:
             A, B = reader.materialize()
     elif args.mode == "dist":
+        if args.omega != "materialized":
+            # the resident-mode shard_map driver has no streaming pass
+            # to de-materialize — Ω lives on the mesh either way
+            print(f"[cca] --omega {args.omega} only affects the streaming "
+                  "topologies; dist mode keeps the materialized sketch")
         A, B = reader.materialize() if reader is not None else data.materialize()
         mesh = make_host_mesh()
         print(f"[cca] dist mode, engine={args.engine}, "
@@ -235,9 +252,11 @@ def main(argv=None):
         from repro.store import PassRunner
 
         runner = PassRunner(reader, rcca, engine=args.engine,
-                            prefetch=args.prefetch, ckpt_dir=args.ckpt_dir)
+                            prefetch=args.prefetch, ckpt_dir=args.ckpt_dir,
+                            omega=args.omega)
         print(f"[cca] stream mode (store-backed), engine={args.engine}, "
-              f"prefetch={args.prefetch}, n={reader.n} chunks={reader.n_chunks}")
+              f"omega={args.omega}, prefetch={args.prefetch}, "
+              f"n={reader.n} chunks={reader.n_chunks}")
         res = runner.fit(key, resume=args.resume)
         print("[cca] io:", res.diagnostics["io"])
         # evaluation materializes — only do it for corpora that fit
@@ -257,10 +276,11 @@ def main(argv=None):
                     metadata={"pass_idx": pass_idx, "chunk_idx": chunk_idx},
                 )
 
-        print(f"[cca] stream mode, engine={args.engine}, n={wl.n} chunks={data.n_chunks}")
+        print(f"[cca] stream mode, engine={args.engine}, omega={args.omega}, "
+              f"n={wl.n} chunks={data.n_chunks}")
         res = randomized_cca_iterator(
             lambda: iter(data), wl.da, wl.db, rcca, key, on_pass_end=on_chunk,
-            engine=args.engine,
+            engine=args.engine, omega=args.omega,
         )
         A, B = data.materialize()  # for evaluation only
 

@@ -52,6 +52,7 @@ from repro.core.rcca import (
     RCCAResult,
     algo_meta,
     resolve_engine,
+    resolve_omega,
     stats_init_fn,
 )
 from repro.exec import MERGE_GROUP_CHUNKS, PassEngine, SegmentedAccumulator
@@ -173,6 +174,10 @@ class PassRunner:
     merge_group: chunks per canonical merge group (see
                  ``rcca.MERGE_GROUP_CHUNKS``) — a ``repro.cluster``
                  coordinator with the same value is bit-identical.
+    omega:       Ω provenance (``rcca.OMEGA_MODES``).  ``"seeded"``
+                 runs pass 0 from an 8-byte seed: under the kernels
+                 engine the Qa/Qb cursor slots hold the seed and the
+                 ``(d, k̃)`` sketch is generated tile-by-tile in-kernel.
     """
 
     def __init__(self, reader, cfg: RCCAConfig, *, engine: str = DEFAULT_ENGINE,
@@ -180,10 +185,12 @@ class PassRunner:
                  ckpt_every: int = 8, keep: int = 2,
                  sync_chunks: Union[int, str] = 4,
                  merge_group: int = MERGE_GROUP_CHUNKS,
+                 omega: str = "materialized",
                  calib_chunks: int = 4):
         self.reader = reader if isinstance(reader, ViewStoreReader) else ViewStoreReader(reader)
         self.cfg = cfg
         self.engine = resolve_engine(engine)
+        self.omega = resolve_omega(omega)
         # each knob calibrates independently: an explicit value for the
         # other one is never clobbered (prefetch=0 stays the documented
         # synchronous baseline even under sync_chunks="auto")
@@ -273,6 +280,7 @@ class PassRunner:
                 "next_chunk": chunk_idx + 1,  # acc already includes chunk_idx
                 "engine": self.engine,
                 "merge_group": self.merge_group,
+                "omega": self.omega,
                 "fingerprint": self.reader.fingerprint(),
                 "algo": self._algo_meta(),
             },
@@ -319,14 +327,23 @@ class PassRunner:
                 f"pass cursor merge_group {meta['merge_group']} != runner "
                 f"merge_group {self.merge_group} — the canonical merge "
                 "structure is part of the accumulator state")
+        if meta.get("omega", "materialized") != self.omega:
+            raise ValueError(
+                f"pass cursor omega {meta.get('omega', 'materialized')!r} != "
+                f"runner omega {self.omega!r} — Ω provenance is part of the "
+                "pass state (pass-0 cursors may hold seeds, not bases)")
         pass_idx, next_chunk = int(meta["pass_idx"]), int(meta["next_chunk"])
         like = self._acc_like(pass_idx, next_chunk)
         z = jnp.zeros
         r, kt = self.reader, self.cfg.sketch
-        tree, _ = self.mgr.restore(
-            {"acc": like.state(), "Qa": z((r.da, kt), self.cfg.dtype),
-             "Qb": z((r.db, kt), self.cfg.dtype)},
-            step=step)
+        if self.omega == "seeded" and self.engine == "kernels" and pass_idx == 0:
+            # seeded pass 0: the Qa/Qb cursor slots hold the (2,)-uint32
+            # Ω seeds, not the (d, k̃) bases (see PassEngine.seeds_in_slots)
+            q_like = {"Qa": z((2,), jnp.uint32), "Qb": z((2,), jnp.uint32)}
+        else:
+            q_like = {"Qa": z((r.da, kt), self.cfg.dtype),
+                      "Qb": z((r.db, kt), self.cfg.dtype)}
+        tree, _ = self.mgr.restore({"acc": like.state(), **q_like}, step=step)
         return {
             "pass_idx": pass_idx,
             "chunk_idx": next_chunk,
@@ -377,7 +394,7 @@ class PassRunner:
                 self._save_cursor(pass_idx, chunk_idx, acc, Qa, Qb)
 
         eng = PassEngine(self.cfg, engine=self.engine,
-                         merge_group=self.merge_group)
+                         merge_group=self.merge_group, omega=self.omega)
         try:
             res = eng.run_stream(
                 self._source, r.da, r.db, key,

@@ -32,8 +32,10 @@ class ChunkPrefetcher:
     device inside the producer thread (numpy mmap reads and the H2D
     copy both release the GIL, so they genuinely overlap compute).
     Exceptions in the producer propagate to the consumer at the point
-    of the failing chunk.  ``close()`` (or exhausting the iterator)
-    shuts the thread down; the prefetcher is single-use.
+    of the failing chunk; an error the consumer never reached (it
+    closed the pipeline first) is re-raised by ``close()`` — a failed
+    read is never silently discarded.  ``close()`` (or exhausting the
+    iterator) shuts the thread down; the prefetcher is single-use.
     """
 
     def __init__(self, chunks: Iterable[Tuple], *, depth: int = 2,
@@ -46,6 +48,8 @@ class ChunkPrefetcher:
         self._device_put = device_put
         self._transform = transform
         self._stop = threading.Event()
+        self._error: Optional[BaseException] = None  # producer failure
+        self._delivered = False  # error already raised in __next__
         self.read_s = 0.0  # producer: disk read + H2D staging
         self.stall_s = 0.0  # consumer: time blocked on the queue
         self.chunks = 0
@@ -63,6 +67,16 @@ class ChunkPrefetcher:
             item = tuple(jax.device_put(x) for x in item)
         return item
 
+    def _put(self, item) -> None:
+        """Bounded put, polling the stop flag so ``close()`` never
+        deadlocks the producer against a full queue."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return
+            except queue.Full:
+                continue
+
     def _produce(self) -> None:
         try:
             while True:
@@ -77,17 +91,14 @@ class ChunkPrefetcher:
                 self.read_s += time.perf_counter() - t0
                 self.rows += int(a.shape[0])
                 self.bytes += int(a.nbytes) + int(b.nbytes)
-                # bounded put, polling the stop flag so close() never
-                # deadlocks against a full queue
-                while not self._stop.is_set():
-                    try:
-                        self._q.put((a, b), timeout=0.1)
-                        break
-                    except queue.Full:
-                        continue
-            self._q.put(_SENTINEL)
+                self._put((a, b))
+            self._put(_SENTINEL)
         except BaseException as e:  # surface in the consumer
-            self._q.put(e)
+            # record FIRST: if close() drains the queue before (or
+            # while) the put lands, the error still reaches the caller
+            # through close() instead of vanishing with the drain
+            self._error = e
+            self._put(e)
 
     def __iter__(self) -> Iterator[Tuple]:
         return self
@@ -99,19 +110,27 @@ class ChunkPrefetcher:
         if item is _SENTINEL:
             raise StopIteration
         if isinstance(item, BaseException):
+            self._delivered = True
             raise item
         self.chunks += 1
         return item
 
     def close(self) -> None:
         self._stop.set()
-        # drain so a blocked producer can observe the stop flag
+        # drain so a blocked producer can observe the stop flag (a
+        # queued copy of the error may be discarded here — self._error
+        # still holds it)
         while True:
             try:
                 self._q.get_nowait()
             except queue.Empty:
                 break
         self._thread.join(timeout=5.0)
+        if self._error is not None and not self._delivered:
+            # the producer failed but the consumer never reached the
+            # queued exception — re-raise rather than swallow the loss
+            self._delivered = True
+            raise self._error
 
     def stats(self) -> dict:
         return {
