@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-quick verify-cluster verify-topology analyze bench bench-kernels bench-io bench-cluster sweep-blocks
+.PHONY: verify verify-quick verify-cluster verify-topology analyze bench bench-kernels bench-io bench-cluster sweep-blocks trajectory
 
 # full tier-1 suite + the interpret-mode kernel-parity subset
 verify:
@@ -24,8 +24,14 @@ verify-topology:
 analyze:
 	bash scripts/verify.sh --analyze
 
-# all BENCH jsons (the committed per-PR perf trajectory under results/)
-bench: bench-kernels bench-io bench-cluster
+# all BENCH jsons + results/TRAJECTORY.json (the committed per-PR perf
+# trajectory) through the one stamped entry point (benchmarks.run)
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --artifacts
+
+# refold results/BENCH_*.json into results/TRAJECTORY.json
+trajectory:
+	PYTHONPATH=$(PYTHONPATH) python -m repro.obs trajectory
 
 # engine-comparison BENCH json (results/kernel_bench.json)
 bench-kernels:

@@ -28,6 +28,7 @@ import time
 
 import jax
 
+from benchmarks.common import write_bench
 from repro.core.rcca import RCCAConfig
 from repro.data import PlantedCCAData
 from repro.store import PassRunner, ViewStoreReader, ingest_planted
@@ -113,10 +114,7 @@ def cluster_scaling(out_path: str = "results/BENCH_cluster.json",
                  "rows/s records coordination overhead, not scaling — "
                  "see module docstring"),
     }
-    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump(bench, f, indent=2)
-    print("BENCH " + json.dumps(bench))
+    bench = write_bench(bench, out_path)
     return bench
 
 

@@ -1,13 +1,19 @@
-"""Shared benchmark helpers: timing + the Europarl stand-in corpus."""
+"""Shared benchmark helpers: timing, the Europarl stand-in corpus, and
+the one BENCH artifact writer (schema + commit metadata stamp)."""
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.data import PlantedCCAData
+
+BENCH_SCHEMA = 1
 
 
 def time_us(fn, *args, iters: int = 3, warmup: int = 1) -> float:
@@ -18,6 +24,49 @@ def time_us(fn, *args, iters: int = 3, warmup: int = 1) -> float:
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_meta() -> dict:
+    """Provenance stamp for a BENCH artifact: commit, time, backend.
+
+    Every field is best-effort — benchmarks must run from a tarball
+    (no git) just as well as from a checkout."""
+    meta = {
+        "when": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+    }
+    try:
+        meta["commit"] = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        meta["commit"] = None
+    return meta
+
+
+def write_bench(bench: dict, out_path: str) -> dict:
+    """The single BENCH write path: stamp ``schema`` + ``meta``, write
+    the json, print the grep-able ``BENCH`` line, and — when the
+    artifact lands in a ``results/`` directory — refold that
+    directory's trajectory (``results/TRAJECTORY.json``) so every
+    committed BENCH file stays part of one comparable record."""
+    bench = dict(bench)
+    bench.setdefault("schema", BENCH_SCHEMA)
+    bench.setdefault("meta", bench_meta())
+    out_dir = os.path.dirname(out_path) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+        f.write("\n")
+    print("BENCH " + json.dumps(bench))
+    if os.path.basename(os.path.abspath(out_dir)) == "results" and \
+            os.path.basename(out_path).startswith("BENCH_"):
+        from repro.obs import trajectory
+        trajectory.write(out_dir)
+    return bench
 
 
 def europarl_standin(n=6000, da=96, db=80, rank=48, seed=0):

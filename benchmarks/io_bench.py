@@ -39,6 +39,7 @@ import time
 
 import jax
 
+from benchmarks.common import write_bench
 from repro.core.rcca import RCCAConfig
 from repro.data import PlantedCCAData
 from repro.store import PassRunner, ViewStoreReader, ingest_planted
@@ -149,10 +150,7 @@ def io_overlap(out_path: str = "results/BENCH_io.json", rows: list | None = None
             for depth, io in local.items()
         },
     }
-    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump(bench, f, indent=2)
-    print("BENCH " + json.dumps(bench))
+    bench = write_bench(bench, out_path)
     return bench
 
 

@@ -19,14 +19,13 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, pallas_matmul, projgram, ref
 
-from .common import time_us
+from .common import time_us, write_bench
 
 PEAK_FLOPS = 197e12  # bf16 TPU v5e
 HBM_BW = 819e9
@@ -116,10 +115,7 @@ def engine_comparison(out_path: str = "results/kernel_bench.json",
         "interpret": jax.default_backend() != "tpu",
         "results": results,
     }
-    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump(bench, f, indent=2)
-    print("BENCH " + json.dumps(bench))
+    bench = write_bench(bench, out_path)
     return bench
 
 
@@ -208,10 +204,7 @@ def bucketed_report(out_path: str = "results/BENCH_bucketed.json",
              "fused": europarl_final_calls == 3},
         ],
     }
-    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump(bench, f, indent=2)
-    print("BENCH " + json.dumps(bench))
+    bench = write_bench(bench, out_path)
     if rows is not None:
         rows.append(("bucketed_powerpass_16bkt", us_pp, f"rel_err={err_pp:.2e}"))
         rows.append(("bucketed_projgram_17bkt", us_pg, f"rel_err={err_pg:.2e}"))
@@ -273,10 +266,7 @@ def seeded_report(out_path: str = "results/BENCH_seeded.json",
         "interpret": jax.default_backend() != "tpu",
         "results": results,
     }
-    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump(bench, f, indent=2)
-    print("BENCH " + json.dumps(bench))
+    bench = write_bench(bench, out_path)
     return bench
 
 

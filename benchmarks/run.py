@@ -2,14 +2,39 @@
 micro-benchmarks and the roofline table derived from the dry-run.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig1,fig2a,...]
+    PYTHONPATH=src python -m benchmarks.run --artifacts
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV.  ``--artifacts`` is the single
+entry point for the committed perf record: it runs every
+BENCH-producing suite, writes each artifact through
+:func:`benchmarks.common.write_bench` (schema + commit/backend metadata
+stamp), and folds them all into ``results/TRAJECTORY.json``.
 """
 
 from __future__ import annotations
 
 import argparse
-import sys
+
+
+def artifacts(results_dir: str = "results") -> None:
+    """All committed BENCH artifacts + the trajectory, in one pass."""
+    import os
+
+    from repro.obs import trajectory
+
+    from . import cluster_bench, io_bench, kernel_bench
+
+    kernel_bench.engine_comparison(
+        os.path.join(results_dir, "kernel_bench.json"))
+    kernel_bench.bucketed_report(
+        os.path.join(results_dir, "BENCH_bucketed.json"))
+    kernel_bench.seeded_report(
+        os.path.join(results_dir, "BENCH_seeded.json"))
+    io_bench.io_overlap(os.path.join(results_dir, "BENCH_io.json"))
+    cluster_bench.cluster_scaling(
+        os.path.join(results_dir, "BENCH_cluster.json"))
+    out = trajectory.write(results_dir)
+    print(f"TRAJECTORY: wrote {out}")
 
 
 def main(argv=None) -> None:
@@ -18,7 +43,15 @@ def main(argv=None) -> None:
                     help="comma-separated subset: fig1,fig2a,table2b,fig3,"
                          "kernels,io,cluster,roofline")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--artifacts", action="store_true",
+                    help="write every BENCH json + results/TRAJECTORY.json")
+    ap.add_argument("--results", default="results",
+                    help="artifact output directory (with --artifacts)")
     args = ap.parse_args(argv)
+
+    if args.artifacts:
+        artifacts(args.results)
+        return
 
     from . import cluster_bench, io_bench, kernel_bench, paper_figures, roofline
 

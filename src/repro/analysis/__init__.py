@@ -6,7 +6,7 @@ Four checkers, one CLI (``python -m repro.analysis``), one CI gate:
   Pallas kernel's launch plan (grid × block × index-map consistency,
   output coverage, VMEM budget, dtype rules, autotune-cache validity)
   by abstract evaluation, no device needed.
-- :mod:`~repro.analysis.lint` — AST architecture lint (RCCA001–005)
+- :mod:`~repro.analysis.lint` — AST architecture lint (RCCA001–007)
   pinning the disciplines the bitwise-reproducibility contract rests
   on; ``# rcca: noqa[CODE]`` suppresses with justification.
 - :mod:`~repro.analysis.protocol` — cluster-protocol race detector: an

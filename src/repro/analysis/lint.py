@@ -1,4 +1,4 @@
-"""AST architecture lint for the repro tree (rules RCCA001–RCCA005).
+"""AST architecture lint for the repro tree (rules RCCA001–RCCA007).
 
 The bitwise-reproducibility contract (DESIGN.md, README §Bitwise
 reproducibility) survives only as long as a handful of architectural
@@ -36,6 +36,13 @@ disciplines hold.  Each rule here pins one of them:
            second entropy source the seeded-Ω contract can't see:
            every execution mode must derive identical randomness from
            the one fit key (or the 8-byte Ω seed it produces).
+  RCCA007  pass-path modules (plus ``repro/store/prefetch.py``) take
+           timings through the :mod:`repro.obs` clocks
+           (``obs.monotonic()`` / ``obs.wall()``), not raw
+           ``time.monotonic`` / ``time.perf_counter``.  One clock home
+           keeps spans, io counters, and diagnostics in a single
+           comparable time domain — a bespoke clock is a second
+           profiler the trace can't see.
 
 Suppression: a trailing ``# rcca: noqa`` comment silences every rule
 on that line; ``# rcca: noqa[RCCA004]`` (comma-separated codes)
@@ -76,6 +83,12 @@ ATOMIC_WRITE_SCOPE = ("repro/cluster/", "repro/store/")
 
 #: the one pass-path module allowed to draw from the jax PRNG (RCCA006)
 RNG_HOME = ("repro/core/rcca.py",)
+
+#: modules whose timings must flow through the repro.obs clocks (RCCA007)
+OBS_CLOCK_SCOPE = PASS_PATH + ("repro/store/prefetch.py",)
+
+#: the module that implements the obs clocks (out of RCCA007 scope)
+OBS_HOME = ("repro/obs/",)
 
 #: fold/merge primitives whose looped use outside repro/exec trips RCCA001
 FOLD_CALLS = frozenset({
@@ -347,7 +360,28 @@ def _rule_006(tree: ast.AST, relpath: str) -> Iterable[Violation]:
                 "equivalence across engines and topologies")
 
 
-_RULES = (_rule_001, _rule_002, _rule_003, _rule_004, _rule_005, _rule_006)
+_MONO_CALLS = frozenset({"time.monotonic", "time.monotonic_ns",
+                         "time.perf_counter", "time.perf_counter_ns"})
+
+
+def _rule_007(tree: ast.AST, relpath: str) -> Iterable[Violation]:
+    if not _in(relpath, OBS_CLOCK_SCOPE) or _in(relpath, OBS_HOME):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if dotted in _MONO_CALLS:
+            yield Violation(
+                "RCCA007", relpath, node.lineno,
+                f"raw clock `{dotted}()` in pass-path scope — take "
+                "timings via repro.obs (obs.monotonic() / obs.wall()) so "
+                "spans, io counters, and diagnostics share one clock "
+                "domain")
+
+
+_RULES = (_rule_001, _rule_002, _rule_003, _rule_004, _rule_005, _rule_006,
+          _rule_007)
 
 
 # ---------------------------------------------------------------------------

@@ -57,13 +57,23 @@ def trace_event(op: str, path: str = "", **meta) -> None:
     """Append one protocol event to the trace file named by
     ``$RCCA_PROTOCOL_TRACE`` (no-op when unset).  One JSON object per
     line; single ``os.write`` with O_APPEND so concurrent workers
-    interleave whole lines, never bytes."""
+    interleave whole lines, never bytes.
+
+    When the unified ``$RCCA_TRACE`` stream (:mod:`repro.obs`) is on,
+    the same event is mirrored there as an ``ev="proto"`` record, so
+    one obs trace serves both the profiler and this race detector —
+    :func:`check_trace` keys on the top-level ``op`` field, which obs
+    span/counter records lack (they fall through as ``"?"``)."""
     out = os.environ.get(TRACE_ENV)
-    if not out:
+    if not out and not os.environ.get("RCCA_TRACE"):
         return
     rec = {"op": op, "path": path, "pid": os.getpid()}
     if meta:
         rec["meta"] = meta
+    from repro import obs
+    obs.proto_event(rec)
+    if not out:
+        return
     line = json.dumps(rec, sort_keys=True, default=str) + "\n"
     fd = os.open(out, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
     try:

@@ -43,6 +43,7 @@ from typing import Dict, List, Optional
 
 import jax
 
+from repro import obs
 from repro.analysis import sanitize
 from repro.analysis.protocol import trace_event
 from repro.core.rcca import (
@@ -204,7 +205,7 @@ class ClusterCoordinator:
         if self.heartbeat_timeout is None:
             return []
         stale = []
-        now = time.perf_counter()
+        now = obs.monotonic()
         for shard, p in procs.items():
             if p.poll() is not None:
                 continue
@@ -223,7 +224,7 @@ class ClusterCoordinator:
     def _run_pass(self, pass_idx: int, kind: str, Qa, Qb,
                   expect: dict) -> tuple:
         """Spawn → barrier → streamed tree merge (+ per-pass diagnostics)."""
-        t0 = time.perf_counter()
+        t0 = obs.monotonic()
         # stale-partial hygiene BEFORE the barrier polls: retry removals
         # that failed in earlier passes, then sweep this pass's group
         # range for leftovers of other fits.  Failures are never
@@ -234,18 +235,21 @@ class ClusterCoordinator:
         for g, err in pt.sweep_stale_partials(
                 self.cluster_dir, pass_idx, self.n_groups, expect).items():
             self._clean_pending[(pass_idx, g)] = err
-        pt.write_round(self.cluster_dir, pass_idx, Qa, Qb,
-                       {**expect, "n_shards": self.n_workers})
-        procs = {s: self._spawn(s, pass_idx,
-                                extra_env=self.env_overrides.get(s))
-                 for s in range(self.n_workers) if self._owned(s)}
-        spawned_at = {s: time.perf_counter() for s in procs}
+        with obs.span("publish", pass_idx=int(pass_idx), kind=kind):
+            pt.write_round(self.cluster_dir, pass_idx, Qa, Qb,
+                           {**expect, "n_shards": self.n_workers})
+            procs = {s: self._spawn(s, pass_idx,
+                                    extra_env=self.env_overrides.get(s))
+                     for s in range(self.n_workers) if self._owned(s)}
+        spawned_at = {s: obs.monotonic() for s in procs}
         n_spawned = len(procs)
         redispatched: List[int] = []
         stale_shards: List[int] = []
         attempts = 0
-        deadline = (time.perf_counter() + self.worker_timeout
+        deadline = (obs.monotonic() + self.worker_timeout
                     if self.worker_timeout else None)
+        barrier = obs.span("barrier", pass_idx=int(pass_idx), kind=kind)
+        barrier.__enter__()
         while True:
             have = pt.collect_partials(self.cluster_dir, pass_idx,
                                        self.n_groups, expect)
@@ -253,7 +257,7 @@ class ClusterCoordinator:
             if not missing:
                 break
             stale_shards.extend(self._kill_stale(procs, pass_idx, spawned_at))
-            timed_out = deadline is not None and time.perf_counter() > deadline
+            timed_out = deadline is not None and obs.monotonic() > deadline
             if timed_out:
                 for p in procs.values():  # stragglers: kill, then re-dispatch
                     if p.poll() is None:
@@ -270,16 +274,19 @@ class ClusterCoordinator:
                 # repair worker (a "survivor" process; its shard id is
                 # outside the strided range so cursors never collide)
                 redispatched.extend(missing)
+                obs.counter("redispatch", pass_idx=int(pass_idx),
+                            groups=len(missing), attempt=attempts)
                 repair = self.n_workers + attempts - 1
                 procs = {repair: self._spawn(repair, pass_idx, groups=missing)}
-                spawned_at = {repair: time.perf_counter()}
+                spawned_at = {repair: obs.monotonic()}
                 n_spawned += 1
-                deadline = (time.perf_counter() + self.worker_timeout
+                deadline = (obs.monotonic() + self.worker_timeout
                             if self.worker_timeout else None)
             time.sleep(0.05)
+        barrier.__exit__(None, None, None)
         for p in procs.values():
             p.poll()
-        t_merge = time.perf_counter()
+        t_merge = obs.monotonic()
         r = self.reader
         # Streamed reduce: push each on-disk partial straight into the
         # fixed pairwise tree in group order and drop it — O(log G)
@@ -291,6 +298,9 @@ class ClusterCoordinator:
         acc = SegmentedAccumulator(
             stats_init_fn(kind, r.da, r.db, self.cfg.sketch),
             r.n_chunks, self.merge_group)
+        merge_span = obs.span("merge", pass_idx=int(pass_idx), kind=kind,
+                              groups=self.n_groups)
+        merge_span.__enter__()
         for g in range(self.n_groups):
             loaded = pt.read_partial(self.cluster_dir, pass_idx, g)
             assert loaded is not None, g
@@ -304,8 +314,10 @@ class ClusterCoordinator:
             # ascending group order, fold order owned by the accumulator
             acc.push_group(g, stats)  # rcca: noqa[RCCA001]
         merged = acc.result()
+        merge_span.__exit__(None, None, None)
         sanitize.observe("pass_end", merged)
-        now = time.perf_counter()
+        now = obs.monotonic()
+        obs.counter("workers", pass_idx=int(pass_idx), spawned=n_spawned)
         diag = {"wall_s": round(now - t0, 4),
                 "merge_s": round(now - t_merge, 4),
                 "workers_spawned": n_spawned,
@@ -332,10 +344,17 @@ class ClusterCoordinator:
         """All q+1 passes across ``n_workers`` processes →
         :class:`RCCAResult`, bit-identical to the single-process
         drivers on the same store."""
-        r, cfg = self.reader, self.cfg
         # fit identity only (binds partials to THIS fit across worker
         # respawns); never reaches the arithmetic or the merge order
         fit_id = uuid.uuid4().hex  # rcca: noqa[RCCA004]
+        obs.set_context(fit_id=fit_id, role="coordinator")
+        with obs.span("fit", site="coordinator", engine=self.engine,
+                      n_workers=self.n_workers,
+                      devices_per_worker=self.devices_per_worker):
+            return self._fit(key, fit_id)
+
+    def _fit(self, key: jax.Array, fit_id: str) -> RCCAResult:
+        r, cfg = self.reader, self.cfg
         sanitize.reset()
         seeded = self.omega == "seeded"
         if seeded:
@@ -352,19 +371,21 @@ class ClusterCoordinator:
                 engine=self.engine, fingerprint=r.fingerprint(),
                 merge_group=self.merge_group, algo=algo_meta(cfg),
                 omega=self.omega)
-            stats, diag = self._run_pass(pass_idx, kind, Qa, Qb, expect)
-            passes.append(diag)
-            # n is an f32 accumulator: allow its rounding at huge row
-            # counts while still catching whole wrong/duplicate chunks
-            if abs(float(stats.n) - r.n) > max(1.0, 1e-6 * r.n):
-                raise RuntimeError(
-                    f"pass {pass_idx} merged {float(stats.n):.0f} rows, "
-                    f"store has {r.n} — a merge group folded the wrong "
-                    "chunks")
-            if kind == "power":
-                if seeded and pass_idx == 0 and cfg.center:
-                    Qa, Qb = self._materialize_omega(Qa, Qb)
-                Qa, Qb = power_update_Q(stats, Qa, Qb, cfg)
+            with obs.span("pass", pass_idx=pass_idx, kind=kind,
+                          site="coordinator"):
+                stats, diag = self._run_pass(pass_idx, kind, Qa, Qb, expect)
+                passes.append(diag)
+                # n is an f32 accumulator: allow its rounding at huge row
+                # counts while still catching whole wrong/duplicate chunks
+                if abs(float(stats.n) - r.n) > max(1.0, 1e-6 * r.n):
+                    raise RuntimeError(
+                        f"pass {pass_idx} merged {float(stats.n):.0f} rows, "
+                        f"store has {r.n} — a merge group folded the wrong "
+                        "chunks")
+                if kind == "power":
+                    if seeded and pass_idx == 0 and cfg.center:
+                        Qa, Qb = self._materialize_omega(Qa, Qb)
+                    Qa, Qb = power_update_Q(stats, Qa, Qb, cfg)
         if seeded and cfg.q == 0:  # finalize needs the actual Ω
             Qa, Qb = self._materialize_omega(Qa, Qb)
         res = finalize_result(stats, Qa, Qb, cfg, r.da, r.db)

@@ -51,6 +51,7 @@ from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.analysis.protocol import trace_event
 from repro.ckpt import load_flat, load_metadata, save_pytree
 from repro.core.rcca import FinalStats, PowerStats
@@ -100,7 +101,7 @@ def heartbeat_age(cluster_dir: str, shard: int, pass_idx: int) -> Optional[float
     try:
         # liveness wall-clock: feeds only the staleness policy (whether
         # to re-dispatch), never the pass arithmetic
-        return max(0.0, time.time() - os.path.getmtime(  # rcca: noqa[RCCA004]
+        return max(0.0, obs.wall() - os.path.getmtime(
             heartbeat_path(cluster_dir, shard, pass_idx)))
     except OSError:
         return None
@@ -138,9 +139,9 @@ def read_round(cluster_dir: str, pass_idx: int, *,
     """Load a pass round, optionally waiting for the coordinator to
     publish it (a worker under an external scheduler may start first)."""
     d = round_dir(cluster_dir, pass_idx)
-    deadline = time.monotonic() + wait_s
+    deadline = obs.monotonic() + wait_s
     while not os.path.exists(os.path.join(d, "manifest.json")):
-        if time.monotonic() >= deadline:
+        if obs.monotonic() >= deadline:
             raise FileNotFoundError(
                 f"no round published for pass {pass_idx} under {cluster_dir!r}")
         time.sleep(0.05)

@@ -69,6 +69,7 @@ import numpy as np
 
 import jax
 
+from repro import obs
 from repro.ckpt import CheckpointManager
 from repro.core.rcca import (jit_seeded_update_fn, jit_update_fn,
                              seeded_update_fn, stats_init_fn, update_fn)
@@ -92,6 +93,14 @@ def _parse_injection(env: str, pass_idx: int) -> Optional[int]:
         return None
     p, _, c = spec.partition(":")
     return int(c) if int(p) == pass_idx else None
+
+
+def _cost_fn(kind: str, engine: str, kt: int, q_dtype, seeded: bool):
+    if not obs.enabled():
+        return None
+    from repro.obs.cost import chunk_cost_fn
+
+    return chunk_cost_fn(kind, engine, kt, q_dtype, seeded=seeded)
 
 
 def _hang_forever(shard: int, chunk_idx: int) -> None:
@@ -125,6 +134,8 @@ def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
         hang_at_chunk = _parse_injection(HANG_ENV, pass_idx)
 
     kind, engine = meta["kind"], meta["engine"]
+    obs.set_context(fit_id=meta.get("fit_id"), role=f"worker{shard:03d}",
+                    shard=shard)
     G = int(meta["merge_group"])
     n_chunks = reader.n_chunks
     n_groups = -(-n_chunks // G)
@@ -170,12 +181,13 @@ def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
 
     def publish(g: int, stats) -> None:
         """The group sink: beat, publish-if-new, count."""
-        jax.block_until_ready(stats)
-        if not group_done(g):  # idempotent re-publication guard
-            pt.write_partial(cluster_dir, pass_idx, g, stats,
-                             expect, shard=shard, n_shards=n_shards)
-        state["published"] += 1
-        pt.touch_heartbeat(cluster_dir, shard, pass_idx)
+        with obs.span("publish", group=int(g)):
+            jax.block_until_ready(stats)
+            if not group_done(g):  # idempotent re-publication guard
+                pt.write_partial(cluster_dir, pass_idx, g, stats,
+                                 expect, shard=shard, n_shards=n_shards)
+            state["published"] += 1
+            pt.touch_heartbeat(cluster_dir, shard, pass_idx)
 
     # -- device-parallel (hybrid) shard ----------------------------------
     if devices > 1:
@@ -202,10 +214,16 @@ def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
                 raise WorkerKilled(
                     f"injected kill after group {g} (chunk {last_chunk})")
 
-        fold_groups_on_mesh(
-            lambda i: reader.get_chunk(i), todo, upd_raw,
-            upd, init_fn, Qa, Qb, mesh=mesh, merge_group=G,
-            n_chunks=n_chunks, full_chunks=n_full_chunks(reader), emit=emit)
+        with obs.span("worker_pass", pass_idx=int(pass_idx), kind=kind,
+                      shard=shard, site="hybrid"):
+            fold_groups_on_mesh(
+                lambda i: reader.get_chunk(i), todo, upd_raw,
+                upd, init_fn, Qa, Qb, mesh=mesh, merge_group=G,
+                n_chunks=n_chunks, full_chunks=n_full_chunks(reader),
+                emit=emit, prefetch=prefetch,
+                span_attrs={"kind": kind, "engine": engine,
+                            "pass_idx": int(pass_idx)},
+                cost_fn=_cost_fn(kind, engine, kt, q_dtype, seeds))
         return state["published"]
 
     # -- sequential shard --------------------------------------------------
@@ -256,14 +274,20 @@ def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
 
     acc = SegmentedAccumulator(init_fn, n_chunks, G, sink=publish)
     acc.current = current
-    try:
-        # published-by-someone-else groups are read-and-dropped, not
-        # folded (the stream already carries them; folding them would
-        # double-publish and corrupt the cursor's group accounting)
-        run_fold(((i, ab) for i, ab in zip(idxs, src) if i // G in todo_set),
-                 upd, acc, Qa, Qb, on_chunk=cb)
-    finally:
-        src.close()
+    with obs.span("worker_pass", pass_idx=int(pass_idx), kind=kind,
+                  shard=shard, site="worker"):
+        try:
+            # published-by-someone-else groups are read-and-dropped, not
+            # folded (the stream already carries them; folding them would
+            # double-publish and corrupt the cursor's group accounting)
+            run_fold(((i, ab) for i, ab in zip(idxs, src)
+                      if i // G in todo_set),
+                     upd, acc, Qa, Qb, on_chunk=cb,
+                     span_attrs={"kind": kind, "engine": engine,
+                                 "pass_idx": int(pass_idx)},
+                     cost_fn=_cost_fn(kind, engine, kt, q_dtype, seeds))
+        finally:
+            src.close()
     return state["published"]
 
 

@@ -38,6 +38,7 @@ from typing import Callable, Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.analysis import sanitize
 
 import jax
@@ -129,7 +130,8 @@ def n_full_chunks(access) -> int:
 
 
 def run_fold(indexed_chunks, update_fn, acc: SegmentedAccumulator, Qa, Qb, *,
-             start_chunk: int = 0, on_chunk=None) -> SegmentedAccumulator:
+             start_chunk: int = 0, on_chunk=None, span_attrs=None,
+             cost_fn=None) -> SegmentedAccumulator:
     """The canonical chunk-fold loop — the only one in the codebase.
 
     ``indexed_chunks`` yields ``(chunk_idx, (a, b))`` with GLOBAL chunk
@@ -141,14 +143,51 @@ def run_fold(indexed_chunks, update_fn, acc: SegmentedAccumulator, Qa, Qb, *,
     its sink (worker partial publication).  ``on_chunk(chunk_idx, acc)``
     runs after every fold: cursor checkpointing, in-flight bounding,
     heartbeats and failure injection all live there, OUTSIDE the fold.
+
+    Under ``RCCA_TRACE`` the loop records an ``io_wait`` span around
+    each source pull and a ``chunk`` span around each fold (the
+    ``on_chunk`` callback rides inside it — in-flight bounding IS the
+    device-compute wait), stamped with ``span_attrs`` and, when
+    ``cost_fn(a, b)`` is given, the cost-model flops/bytes; per-kernel
+    totals are emitted as one ``kernel_cost`` counter at loop end.
+    With tracing off the loop below runs byte-for-byte unchanged.
     """
-    for chunk_idx, (a, b) in indexed_chunks:
+    if not obs.enabled():
+        for chunk_idx, (a, b) in indexed_chunks:
+            if chunk_idx < start_chunk:
+                continue
+            acc.update(chunk_idx, update_fn, a, b, Qa, Qb)
+            if on_chunk is not None:
+                on_chunk(chunk_idx, acc)
+        acc.flush_tail()
+        return acc
+
+    base = dict(span_attrs or {})
+    it = iter(indexed_chunks)
+    kernel_parts: list = []
+    while True:
+        with obs.span("io_wait", **base):
+            item = next(it, None)
+        if item is None:
+            break
+        chunk_idx, (a, b) = item
         if chunk_idx < start_chunk:
             continue
-        acc.update(chunk_idx, update_fn, a, b, Qa, Qb)
-        if on_chunk is not None:
-            on_chunk(chunk_idx, acc)
+        attrs = dict(base, chunk=chunk_idx)
+        if cost_fn is not None:
+            cost = cost_fn(a, b)
+            attrs["flops"] = cost["flops"]
+            attrs["bytes"] = cost["bytes"]
+            kernel_parts.extend(cost["kernels"])
+        with obs.span("chunk", **attrs):
+            acc.update(chunk_idx, update_fn, a, b, Qa, Qb)
+            if on_chunk is not None:
+                on_chunk(chunk_idx, acc)
     acc.flush_tail()
+    if kernel_parts:
+        from repro.obs.cost import merge_kernel_costs
+        for part in merge_kernel_costs(kernel_parts):
+            obs.counter("kernel_cost", **dict(base, **part))
     return acc
 
 
@@ -183,7 +222,9 @@ def _mesh_group_fold(update_fn, init_fn, mesh, axis: str):
 def fold_groups_on_mesh(get_chunk, groups: Sequence[int], update_fn,
                         update_fn_jit, init_fn, Qa, Qb, *, mesh,
                         merge_group: int, n_chunks: int, full_chunks: int,
-                        emit: Callable[[int, object], None]) -> None:
+                        emit: Callable[[int, object], None],
+                        prefetch: int = 2, span_attrs=None,
+                        cost_fn=None) -> None:
     """Fold whole merge groups one-per-device and emit their sums in
     ascending group order.
 
@@ -202,6 +243,18 @@ def fold_groups_on_mesh(get_chunk, groups: Sequence[int], update_fn,
     shard_map program keeps one shape; padded outputs are discarded.
     ``emit(g, stats)`` may raise to abort (worker kill injection) —
     groups already emitted stay emitted, exactly like a crashed worker.
+
+    Uniform-group chunks stream through a
+    :class:`~repro.store.prefetch.ChunkPrefetcher` (``prefetch`` is its
+    read-ahead depth; 0 falls back to the metered synchronous reader),
+    so the next batch's reads overlap the current batch's device fold.
+    The prefetcher consumes the flat ascending chunk order the gather
+    loop below pops (padding only replicates an id already fetched), so
+    the reads — and therefore the folded values — are bitwise unchanged
+    from the old synchronous gather.  Under ``RCCA_TRACE`` each batch
+    records ``gather`` and ``mesh_fold`` spans (the latter stamped with
+    cost-model flops/bytes) plus one ``io`` counter from the prefetcher
+    and a ``kernel_cost`` counter for the folded chunks.
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -216,33 +269,67 @@ def fold_groups_on_mesh(get_chunk, groups: Sequence[int], update_fn,
     uniform = [g for g in groups if (g + 1) * G <= full_chunks]
     ragged = [g for g in groups if (g + 1) * G > full_chunks]
 
+    base = dict(span_attrs or {})
     if uniform:
+        # function-level import: repro.store imports repro.exec at
+        # package load, so the reverse edge must stay lazy
+        from repro.store.prefetch import prefetched
+
         fold_batch = _mesh_group_fold(update_fn, init_fn, mesh, axis)
         shard = NamedSharding(mesh, P(axis))
-
-        for lo in range(0, len(uniform), D):
-            ids = uniform[lo:lo + D]
-            padded = ids + [ids[0]] * (D - len(ids))
-            blocks = {}
-            # dict.fromkeys, not set(): deterministic first-seen order
-            for g in dict.fromkeys(padded):
-                pairs = [get_chunk(c) for c in range(g * G, (g + 1) * G)]
-                blocks[g] = (np.stack([np.asarray(a) for a, _ in pairs]),
-                             np.stack([np.asarray(b) for _, b in pairs]))
-            a_blk = jax.device_put(
-                np.stack([blocks[g][0] for g in padded]), shard)
-            b_blk = jax.device_put(
-                np.stack([blocks[g][1] for g in padded]), shard)
-            out = fold_batch(a_blk, b_blk, Qa, Qb)
-            for i, g in enumerate(ids):
-                emit(g, jax.tree_util.tree_map(lambda x, _i=i: x[_i], out))
+        need = (c for g in uniform for c in range(g * G, (g + 1) * G))
+        src = prefetched((get_chunk(c) for c in need), depth=prefetch,
+                         device_put=False, site="mesh_gather")
+        chunk_cost = None
+        folded = 0
+        try:
+            for lo in range(0, len(uniform), D):
+                ids = uniform[lo:lo + D]
+                padded = ids + [ids[0]] * (D - len(ids))
+                blocks = {}
+                with obs.span("gather", **dict(base, groups=len(ids))):
+                    # dict.fromkeys, not set(): deterministic first-seen
+                    # order — and the pad duplicate is never re-fetched
+                    for g in dict.fromkeys(padded):
+                        pairs = [next(src) for _ in range(G)]
+                        blocks[g] = (
+                            np.stack([np.asarray(a) for a, _ in pairs]),
+                            np.stack([np.asarray(b) for _, b in pairs]))
+                        if cost_fn is not None and chunk_cost is None:
+                            chunk_cost = cost_fn(blocks[g][0][0],
+                                                 blocks[g][1][0])
+                    a_blk = jax.device_put(
+                        np.stack([blocks[g][0] for g in padded]), shard)
+                    b_blk = jax.device_put(
+                        np.stack([blocks[g][1] for g in padded]), shard)
+                fattrs = dict(base, groups=len(ids))
+                if chunk_cost is not None:
+                    fattrs["flops"] = chunk_cost["flops"] * len(ids) * G
+                    fattrs["bytes"] = chunk_cost["bytes"] * len(ids) * G
+                with obs.span("mesh_fold", **fattrs):
+                    out = fold_batch(a_blk, b_blk, Qa, Qb)
+                    for i, g in enumerate(ids):
+                        emit(g, jax.tree_util.tree_map(
+                            lambda x, _i=i: x[_i], out))
+                folded += len(ids) * G
+        finally:
+            src.close()
+        if chunk_cost is not None and folded:
+            from repro.obs.cost import merge_kernel_costs
+            scaled = [dict(k, calls=k["calls"] * folded,
+                           flops=k["flops"] * folded,
+                           bytes=k["bytes"] * folded)
+                      for k in chunk_cost["kernels"]]
+            for part in merge_kernel_costs(scaled):
+                obs.counter("kernel_cost", **dict(base, **part))
 
     for g in ragged:
         lo = g * G
         hi = min(n_chunks, (g + 1) * G)
         acc = SegmentedAccumulator(init_fn, n_chunks, G, sink=emit)
         run_fold(((c, get_chunk(c)) for c in range(lo, hi)),
-                 update_fn_jit, acc, Qa, Qb)
+                 update_fn_jit, acc, Qa, Qb,
+                 span_attrs=base or None, cost_fn=cost_fn)
 
 
 # --------------------------------------------------------------------------
@@ -344,6 +431,16 @@ class PassEngine:
 
         return finalize_result(fstats, Qa, Qb, self.cfg, da, db)
 
+    def cost_fn(self, kind: str, seeded: bool):
+        """Cost-model ``(a, b) -> flops/bytes`` closure for one pass's
+        chunk updates, or ``None`` when tracing is off."""
+        if not obs.enabled():
+            return None
+        from repro.obs.cost import chunk_cost_fn
+
+        return chunk_cost_fn(kind, self.engine, int(self.cfg.sketch),
+                             self.cfg.dtype, seeded=seeded)
+
     # -- sequential (Local) ----------------------------------------------
 
     def run_stream(self, source_factory, da: int, db: int, key, *,
@@ -355,6 +452,14 @@ class PassEngine:
         always exposed — see its docstring for the resume-state and
         seekable-factory details; it is now a shell over this method.
         """
+        with obs.span("fit", site="stream", engine=self.engine):
+            return self._run_stream(source_factory, da, db, key,
+                                    n_chunks=n_chunks,
+                                    resume_state=resume_state,
+                                    on_pass_end=on_pass_end)
+
+    def _run_stream(self, source_factory, da, db, key, *,
+                    n_chunks=None, resume_state=None, on_pass_end=None):
         from repro.core.rcca import power_update_Q
 
         cfg = self.cfg
@@ -374,28 +479,33 @@ class PassEngine:
             if pass_idx < start_pass:
                 continue
             sanitize.set_context(pass_idx=pass_idx, kind=kind, site="stream")
-            acc = SegmentedAccumulator.structure(
-                self._init_fn(kind, da, db), n_chunks, self.merge_group,
-                start_chunk)
-            if acc_state is not None:
-                acc.load_state(acc_state)
-                acc_state = None
-            source, offset = open_source(source_factory, start_chunk)
-            cb = None
-            if on_pass_end is not None:
-                cb = (lambda ci, a_, _p=pass_idx, _qa=Qa, _qb=Qb:
-                      on_pass_end(_p, ci, a_, _qa, _qb))
-            fn = (upd_seeded[kind] if upd_seeded is not None and pass_idx == 0
-                  else upd[kind])
-            run_fold(enumerate(source, start=offset), fn, acc, Qa, Qb,
-                     start_chunk=start_chunk, on_chunk=cb)
-            start_chunk = 0
-            if sanitize.enabled():
-                sanitize.observe("pass_end", acc.result())
-            if kind == "power":
-                if cfg.center:  # μ corrections need the actual Ω
-                    Qa, Qb = self._boundary_Q(Qa, Qb, pass_idx, da, db)
-                Qa, Qb = power_update_Q(acc.result(), Qa, Qb, cfg)
+            seeded = upd_seeded is not None and pass_idx == 0
+            with obs.span("pass", pass_idx=pass_idx, kind=kind,
+                          site="stream"):
+                acc = SegmentedAccumulator.structure(
+                    self._init_fn(kind, da, db), n_chunks, self.merge_group,
+                    start_chunk)
+                if acc_state is not None:
+                    acc.load_state(acc_state)
+                    acc_state = None
+                source, offset = open_source(source_factory, start_chunk)
+                cb = None
+                if on_pass_end is not None:
+                    cb = (lambda ci, a_, _p=pass_idx, _qa=Qa, _qb=Qb:
+                          on_pass_end(_p, ci, a_, _qa, _qb))
+                fn = upd_seeded[kind] if seeded else upd[kind]
+                run_fold(enumerate(source, start=offset), fn, acc, Qa, Qb,
+                         start_chunk=start_chunk, on_chunk=cb,
+                         span_attrs={"kind": kind, "engine": self.engine,
+                                     "pass_idx": pass_idx},
+                         cost_fn=self.cost_fn(kind, seeded))
+                start_chunk = 0
+                if sanitize.enabled():
+                    sanitize.observe("pass_end", acc.result())
+                if kind == "power":
+                    if cfg.center:  # μ corrections need the actual Ω
+                        Qa, Qb = self._boundary_Q(Qa, Qb, pass_idx, da, db)
+                    Qa, Qb = power_update_Q(acc.result(), Qa, Qb, cfg)
 
         Qa, Qb = self._boundary_Q(Qa, Qb, pass_idx, da, db)  # q = 0 finalize
         res = self._finish(acc.result(), Qa, Qb, da, db)
@@ -406,7 +516,7 @@ class PassEngine:
 
     # -- device-parallel (Sharded) ---------------------------------------
 
-    def run_mesh(self, access, key, *, mesh=None):
+    def run_mesh(self, access, key, *, mesh=None, prefetch: int = 2):
         """All q+1 passes with merge groups folded one-per-device over
         the local mesh (the in-process ``Sharded`` topology) — bitwise
         identical to :meth:`run_stream` on the same chunks.
@@ -415,8 +525,13 @@ class PassEngine:
         ``chunk``, ``n_chunks``, ``da``, ``db``) — a
         ``ViewStoreReader`` or :class:`StackedChunks`.  Mid-pass cursor
         checkpointing is a sequential-stream feature; device-parallel
-        passes restart at pass granularity.
+        passes restart at pass granularity.  ``prefetch`` is the gather
+        read-ahead depth (see :func:`fold_groups_on_mesh`).
         """
+        with obs.span("fit", site="mesh", engine=self.engine):
+            return self._run_mesh(access, key, mesh=mesh, prefetch=prefetch)
+
+    def _run_mesh(self, access, key, *, mesh=None, prefetch: int = 2):
         from repro.core.rcca import (power_update_Q, seeded_update_fn,
                                      update_fn)
 
@@ -453,17 +568,22 @@ class PassEngine:
             raw = sd_raw[kind] if seeded else upd_raw[kind]
             jit = sd_jit[kind] if seeded else upd_jit[kind]
             acc = SegmentedAccumulator(init_fns[kind], nc, self.merge_group)
-            fold_groups_on_mesh(
-                access.get_chunk, range(n_groups), raw,
-                jit, init_fns[kind], Qa, Qb, mesh=mesh,
-                merge_group=self.merge_group, n_chunks=nc,
-                full_chunks=n_full_chunks(access), emit=acc.push_group)
-            if sanitize.enabled():
-                sanitize.observe("pass_end", acc.result())
-            if kind == "power":
-                if cfg.center:  # μ corrections need the actual Ω
-                    Qa, Qb = self._boundary_Q(Qa, Qb, pass_idx, da, db)
-                Qa, Qb = power_update_Q(acc.result(), Qa, Qb, cfg)
+            with obs.span("pass", pass_idx=pass_idx, kind=kind, site="mesh"):
+                fold_groups_on_mesh(
+                    access.get_chunk, range(n_groups), raw,
+                    jit, init_fns[kind], Qa, Qb, mesh=mesh,
+                    merge_group=self.merge_group, n_chunks=nc,
+                    full_chunks=n_full_chunks(access), emit=acc.push_group,
+                    prefetch=prefetch,
+                    span_attrs={"kind": kind, "engine": self.engine,
+                                "pass_idx": pass_idx},
+                    cost_fn=self.cost_fn(kind, seeded))
+                if sanitize.enabled():
+                    sanitize.observe("pass_end", acc.result())
+                if kind == "power":
+                    if cfg.center:  # μ corrections need the actual Ω
+                        Qa, Qb = self._boundary_Q(Qa, Qb, pass_idx, da, db)
+                    Qa, Qb = power_update_Q(acc.result(), Qa, Qb, cfg)
 
         Qa, Qb = self._boundary_Q(Qa, Qb, pass_idx, da, db)  # q = 0 finalize
         res = self._finish(acc.result(), Qa, Qb, da, db)
@@ -533,7 +653,9 @@ def fit(store, cfg, key, *, topology: Topology = Local(),
     if isinstance(topo, Sharded):
         eng = PassEngine(cfg, engine=engine, topology=topo,
                          merge_group=merge_group, omega=omega)
-        return eng.run_mesh(reader, key)
+        return eng.run_mesh(reader, key,
+                            prefetch=prefetch if isinstance(prefetch, int)
+                            else 2)
 
     # Cluster / Hybrid
     from repro.cluster import ClusterCoordinator

@@ -13,9 +13,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .matmul import pallas_matmul
-from .powerpass import power_project_accumulate, power_project_accumulate_seeded
-from .projgram import projgram, projgram_seeded
+from .matmul import pallas_matmul, plan_matmul
+from .powerpass import (
+    plan_powerpass,
+    plan_powerpass_seeded,
+    power_project_accumulate,
+    power_project_accumulate_seeded,
+)
+from .projgram import plan_projgram, plan_projgram_seeded, projgram, projgram_seeded
 
 # interpret=True on CPU hosts (including the dry-run container), False on TPU.
 def _default_interpret() -> bool:
@@ -101,3 +106,78 @@ def final_pass_chunk_seeded(a, b, seed_a, seed_b, *, kt: int, q_dtype,
                              interpret=interpret)
     F = pallas_matmul(pa, pb, transpose_lhs=True, out_dtype=jnp.float32, interpret=interpret)
     return Ca, Cb, F
+
+
+def _power_view_cost(n: int, d_out: int, d_in: int, kt: int, dtype: str,
+                     seeded: bool) -> list:
+    """Kernel cost entries for one view's ΔY = Xoutᵀ(Xin Ω) update."""
+    from repro.obs.cost import plan_cost
+    plan = (plan_powerpass_seeded(n, d_out, d_in, kt, dtype) if seeded
+            else plan_powerpass(n, d_out, d_in, kt, dtype))
+    if plan is not None:
+        return [plan_cost(plan)]
+    # degenerate k̃p: the wrapper decomposes into the unfused matmul pair
+    return [plan_cost(plan_matmul(n, d_in, kt, dtype)),
+            plan_cost(plan_matmul(d_out, n, kt, "float32",
+                                  transpose_lhs=True))]
+
+
+def _final_view_cost(n: int, d: int, kt: int, dtype: str, seeded: bool) -> list:
+    """Kernel cost entries for one view's (P, ΔC) projgram update."""
+    from repro.obs.cost import plan_cost
+    plan = (plan_projgram_seeded(n, d, kt, dtype) if seeded
+            else plan_projgram(n, d, kt, dtype))
+    if plan is not None:
+        return [plan_cost(plan)]
+    return [plan_cost(plan_matmul(n, d, kt, dtype)),
+            plan_cost(plan_matmul(kt, n, kt, "float32", transpose_lhs=True))]
+
+
+@functools.lru_cache(maxsize=512)
+def chunk_cost(kind: str, n: int, da: int, db: int, kt: int,
+               dtype: str = "float32", *, engine: str = "kernels",
+               seeded: bool = False) -> dict:
+    """Cost-model flops/bytes for one fused chunk update (both views).
+
+    ``kind`` is the pass kind ("power" or "final"); shapes are the
+    logical chunk shapes a:(n, da), b:(n, db) and the sketch width k̃.
+    For ``engine="kernels"`` the entries come from the same KernelPlans
+    the launches use (:mod:`repro.obs.cost`), including the unfused
+    matmul-pair fallback for degenerate shapes; for ``engine="jnp"``
+    they are the logical dense counts (no padding, Ω always read as a
+    materialized array — the jnp path re-derives it on the host).
+
+    Memoized per shape so tracing costs a cache lookup per chunk; treat
+    the returned dict as read-only.
+    """
+    from repro.obs.cost import merge_kernel_costs
+    isize = jnp.dtype(dtype).itemsize
+    if engine == "jnp":
+        if kind == "power":
+            flops = 2 * n * (da + db) * kt * 2  # P = XΩ and Xᵀ P, per view
+            bytes_ = (2 * n * (da + db) * isize        # a, b read twice
+                      + (da + db) * kt * isize         # Qa, Qb
+                      + (da + db) * kt * 4)            # ΔYa, ΔYb (f32)
+        elif kind == "final":
+            flops = 2 * n * (da + db) * kt + 3 * 2 * n * kt * kt
+            bytes_ = (n * (da + db) * isize + (da + db) * kt * isize
+                      + 3 * kt * kt * 4)
+        else:
+            raise ValueError(f"unknown pass kind {kind!r}")
+        kernels = [{"kernel": f"jnp_{kind}", "calls": 1,
+                    "flops": flops, "bytes": bytes_}]
+    elif kind == "power":
+        kernels = (_power_view_cost(n, da, db, kt, dtype, seeded)
+                   + _power_view_cost(n, db, da, kt, dtype, seeded))
+    elif kind == "final":
+        from repro.obs.cost import plan_cost
+        kernels = (_final_view_cost(n, da, kt, dtype, seeded)
+                   + _final_view_cost(n, db, kt, dtype, seeded)
+                   + [plan_cost(plan_matmul(kt, n, kt, "float32",
+                                            transpose_lhs=True))])
+    else:
+        raise ValueError(f"unknown pass kind {kind!r}")
+    kernels = merge_kernel_costs(kernels)
+    return {"flops": sum(k["flops"] for k in kernels),
+            "bytes": sum(k["bytes"] for k in kernels),
+            "kernels": kernels}

@@ -118,8 +118,24 @@ def main(argv=None):
                     help="local devices each hybrid worker folds merge "
                          "groups over (spawned with the forced-host-"
                          "device XLA flag, so it works on CPU hosts)")
+    ap.add_argument("--trace", default=None, metavar="DIR", nargs="?",
+                    const="1",
+                    help="record a repro.obs trace of the fit (spans + "
+                         "roofline counters for every pass, worker, and "
+                         "kernel; propagates to cluster workers) and "
+                         "print the timeline/roofline report afterwards. "
+                         "Optional DIR names the trace directory "
+                         "(default rcca_trace/)")
     args = ap.parse_args(argv)
     args.prefetch = args.prefetch if args.prefetch == "auto" else int(args.prefetch)
+
+    if args.trace:
+        import os
+
+        from repro import obs
+        os.environ[obs.TRACE_ENV] = args.trace  # inherited by workers
+        print(f"[cca] tracing -> {obs.trace_dir()}/ "
+              "(timeline report after the fit)")
 
     wl = europarl_smoke() if args.smoke else europarl_config()
     rcca = wl.rcca
@@ -287,6 +303,11 @@ def main(argv=None):
     dt = time.time() - t0
     rho = np.asarray(res.rho)
     print(f"[cca] done in {dt:.1f}s; sum rho = {rho.sum():.4f}; top-5 rho = {rho[:5]}")
+
+    if args.trace:
+        from repro import obs
+        from repro.obs import report as obs_report
+        print(obs_report.render(obs_report.analyze(obs.trace_dir())))
 
     if A is None:
         print("[cca] corpus larger than the eval budget — skipping "

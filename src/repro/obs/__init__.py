@@ -1,0 +1,54 @@
+"""repro.obs — unified tracing, metrics, and roofline accounting.
+
+One trace stream serves every layer of the pass stack:
+
+* :mod:`repro.obs.trace` — structured spans + counters as O_APPEND JSONL
+  per process, enabled by the ``RCCA_TRACE`` env var (zero overhead when
+  unset), plus the sanctioned pass-path clocks ``monotonic()``/``wall()``
+  (analysis rule RCCA007).
+* :mod:`repro.obs.cost` — KernelPlan-derived flop/byte cost model shared
+  by the per-chunk counters and the roofline report.
+* :mod:`repro.obs.report` — ``python -m repro.obs report <trace>``:
+  per-pass timeline, roofline table, prefetch overlap, merge share.
+* :mod:`repro.obs.trajectory` — folds every ``results/BENCH_*.json``
+  into one schema-versioned ``results/TRAJECTORY.json`` with regression
+  deltas vs. the previous entry.
+
+The trace API is re-exported here so instrumented modules just do
+``from repro import obs`` and call ``obs.span`` / ``obs.counter`` /
+``obs.monotonic``.  Submodules with heavier imports (cost pulls in the
+kernel plans) load lazily on first attribute access.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.obs.trace import (  # noqa: F401
+    DEFAULT_DIR,
+    TRACE_ENV,
+    counter,
+    enabled,
+    iter_events,
+    load_events,
+    monotonic,
+    proto_event,
+    set_context,
+    span,
+    trace_dir,
+    wall,
+)
+
+_SUBMODULES = ("trace", "cost", "report", "trajectory")
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.obs.{name}")
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")
+
+
+__all__ = [
+    "TRACE_ENV", "DEFAULT_DIR", "span", "counter", "enabled", "trace_dir",
+    "set_context", "proto_event", "monotonic", "wall",
+    "iter_events", "load_events", *_SUBMODULES,
+]

@@ -1,0 +1,26 @@
+"""CLI: ``python -m repro.obs {report,trajectory} ...``."""
+from __future__ import annotations
+
+import sys
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] in ("-h", "--help"):
+        print("usage: python -m repro.obs {report,trajectory} [args...]\n"
+              "  report      timeline + roofline from an RCCA_TRACE dir\n"
+              "  trajectory  fold results/BENCH_*.json into TRAJECTORY.json")
+        return 0 if argv else 2
+    cmd, rest = argv[0], argv[1:]
+    if cmd == "report":
+        from repro.obs.report import main as run
+    elif cmd == "trajectory":
+        from repro.obs.trajectory import main as run
+    else:
+        print(f"unknown subcommand {cmd!r} (expected report or trajectory)")
+        return 2
+    return run(rest)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

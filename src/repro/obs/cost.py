@@ -1,0 +1,128 @@
+"""KernelPlan-derived flop/byte cost model for the roofline report.
+
+A :class:`~repro.kernels.plan.KernelPlan` is the single source of truth
+for launch geometry, so it is also the single source of truth for the
+cost model: HBM traffic is counted by enumerating each operand's
+distinct ``index_map`` blocks over the grid (a block with an index map
+constant in some grid axis is loaded once, not once per step — exactly
+the VMEM-residency the plans encode), and MXU flops follow the
+per-kernel formulas documented in the kernel modules (the powerpass /
+projgram docstrings' honest ``n_buckets·proj + acc`` accounting).
+
+:func:`chunk_cost_fn` is the instrumentation entry point: given the
+pass kind and engine it returns a cheap ``(a, b) -> cost`` closure (or
+``None`` when tracing is off) that the fold loops attach to their chunk
+spans; the underlying per-shape model is cached in
+:func:`repro.kernels.ops.chunk_cost`.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.kernels.plan import BlockDef, KernelPlan
+
+#: grids larger than this are not enumerated; traffic falls back to
+#: one full sweep of the padded operand (chunk-scale grids are tiny)
+_ENUM_CAP = 1 << 16
+
+
+def _prod(xs) -> int:
+    n = 1
+    for x in xs:
+        n *= int(x)
+    return n
+
+
+def _distinct_blocks(block: BlockDef, grid) -> int:
+    if _prod(grid) <= _ENUM_CAP:
+        seen = {
+            tuple(block.index_map(*idx))
+            for idx in itertools.product(*(range(g) for g in grid))
+        }
+        return len(seen)
+    return max(1, _prod(block.padded) // block.elems)
+
+
+def plan_bytes(plan: KernelPlan) -> int:
+    """Modelled HBM traffic of one launch: every distinct input block
+    read once, every distinct output block written once, plus the SMEM
+    scalars."""
+    total = 0
+    for block in (*plan.in_specs, *plan.out_specs):
+        n_blocks = _distinct_blocks(block, plan.grid)
+        total += n_blocks * block.elems * np.dtype(block.dtype).itemsize
+    for sc in plan.scalars:
+        total += sc.elems * np.dtype(sc.dtype).itemsize
+    return total
+
+
+def plan_flops(plan: KernelPlan) -> int:
+    """Modelled MXU flops of one launch, from the plan geometry.
+
+    Seeded variants count the same matmul flops as their materialized
+    twins — the in-kernel Ω generation is VPU work the model keeps out
+    of the MXU roofline (its effect shows up as the missing Q bytes).
+    """
+    name = plan.name
+    if name in ("matmul_nn", "matmul_tn"):
+        mp, np_out = plan.out_specs[0].padded
+        kp = plan.in_specs[1].padded[0]
+        return 2 * mp * kp * np_out
+    if name in ("powerpass", "powerpass_seeded"):
+        n_rows, dap = plan.in_specs[0].padded
+        dbp = plan.in_specs[1].padded[1]
+        ktp = plan.out_specs[0].padded[1]
+        # projection P = B Q re-accumulated once per output bucket
+        # (grid[0]), plus the single ΔY += AᵀP accumulation
+        return plan.grid[0] * 2 * n_rows * dbp * ktp + 2 * n_rows * dap * ktp
+    if name in ("projgram", "projgram_seeded"):
+        n_rows, dp = plan.in_specs[0].padded
+        ktp = plan.out_specs[0].padded[1]
+        # P = X Q re-accumulated once per C-column bucket (grid[0]);
+        # the gram C = PᵀP is computed bc columns at a time, summing
+        # to one full (k̃p, k̃p) product
+        return plan.grid[0] * 2 * n_rows * dp * ktp + 2 * n_rows * ktp * ktp
+    raise ValueError(f"no cost formula for kernel plan {name!r}")
+
+
+def plan_cost(plan: KernelPlan) -> Dict[str, Any]:
+    return {"kernel": plan.name, "calls": 1,
+            "flops": plan_flops(plan), "bytes": plan_bytes(plan)}
+
+
+def merge_kernel_costs(parts: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Sum per-kernel cost entries by kernel name (stable order)."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for p in parts:
+        t = out.setdefault(p["kernel"], {"kernel": p["kernel"], "calls": 0,
+                                         "flops": 0, "bytes": 0})
+        t["calls"] += p.get("calls", 1)
+        t["flops"] += p["flops"]
+        t["bytes"] += p["bytes"]
+    return list(out.values())
+
+
+def chunk_cost_fn(kind: str, engine: str, kt: int, dtype: Any,
+                  seeded: bool = False) -> Optional[Callable]:
+    """``(a, b) -> {"flops", "bytes", "kernels"}`` for one chunk update
+    of the given pass kind, or ``None`` when tracing is disabled.
+
+    The closure only reads shapes; the model itself is memoized per
+    shape in :func:`repro.kernels.ops.chunk_cost`, so the per-chunk
+    overhead under tracing is a cache lookup.
+    """
+    from repro import obs
+    if not obs.enabled():
+        return None
+    from repro.kernels import ops as kernel_ops
+    dtype_name = str(np.dtype(dtype))
+
+    def fn(a: Any, b: Any) -> Dict[str, Any]:
+        return kernel_ops.chunk_cost(
+            kind, int(a.shape[0]), int(a.shape[1]), int(b.shape[1]),
+            int(kt), dtype_name, engine=engine, seeded=seeded)
+
+    return fn

@@ -1,0 +1,293 @@
+"""Offline analysis of an ``RCCA_TRACE`` directory: timeline + roofline.
+
+    python -m repro.obs report rcca_trace [--json out.json]
+
+Reads every per-process ``trace-*.jsonl`` file and reconstructs:
+
+* **timeline** — per process (coordinator / workers / driver), the
+  top-level span tree with per-span self-time (duration minus child
+  spans), so the wall-clock of a fit decomposes into named phases:
+  pass > chunk / io_wait / gather / mesh_fold / publish / barrier /
+  merge.
+* **coverage** — the fraction of each process's traced window that
+  falls inside top-level spans.  The acceptance bar for the
+  instrumentation is ≥ 0.95: less means some phase of the fit runs
+  outside any span and the profile is lying by omission.
+* **roofline** — per-kernel cost-model totals (flops / bytes / calls,
+  from the same :class:`~repro.kernels.plan.KernelPlan` geometry the
+  launches use, via the ``kernel_cost`` counters) joined with the
+  measured fold time (``chunk`` + ``mesh_fold`` spans carrying
+  cost-model attrs), giving achieved model-flops/s and arithmetic
+  intensity per pass kind and engine.
+* **io overlap** — per prefetch site, the fraction of read time hidden
+  behind compute: ``(read_s - io_stall_s) / read_s`` from the ``io``
+  counters the prefetcher emits on close.
+* **merge share** — merge-tree seconds as a fraction of the
+  coordinator's fit wall, the scaling number the cluster benchmarks
+  track.
+* **protocol** — RCCA2xx race-detector verdict over the mirrored
+  ``proto`` records (one trace serves both the profiler and the
+  checker).
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional
+
+from repro.obs.trace import load_events
+
+#: span names whose time is a leaf phase (no further decomposition)
+_FOLD_SPANS = ("chunk", "mesh_fold")
+
+
+def _spans_by_pid(events: List[dict]) -> Dict[int, List[dict]]:
+    out: Dict[int, List[dict]] = {}
+    for ev in events:
+        if ev.get("ev") == "span":
+            out.setdefault(int(ev.get("pid", 0)), []).append(ev)
+    return out
+
+
+def _self_times(spans: List[dict]) -> None:
+    """Annotate each span dict with ``self`` = dur − Σ direct-child durs
+    (clamped at 0 — children overlapping their parent's edges are a
+    clock artifact, not negative work)."""
+    child_sum: Dict[Any, float] = {}
+    for sp in spans:
+        if sp.get("parent") is not None:
+            child_sum[sp["parent"]] = (child_sum.get(sp["parent"], 0.0)
+                                       + float(sp.get("dur", 0.0)))
+    for sp in spans:
+        sp["self"] = max(0.0, float(sp.get("dur", 0.0))
+                         - child_sum.get(sp.get("sid"), 0.0))
+
+
+def _role(spans: List[dict]) -> str:
+    for sp in spans:
+        ctx = sp.get("ctx") or {}
+        if "role" in ctx:
+            return str(ctx["role"])
+    return "proc"
+
+
+def _coverage(spans: List[dict]) -> Dict[str, float]:
+    """Top-level span seconds vs. the process's traced window."""
+    t0 = min(float(sp["t"]) for sp in spans)
+    t1 = max(float(sp["t"]) + float(sp.get("dur", 0.0)) for sp in spans)
+    top = [sp for sp in spans if sp.get("parent") is None]
+    covered = sum(float(sp.get("dur", 0.0)) for sp in top)
+    window = max(t1 - t0, 1e-12)
+    return {"window_s": window, "covered_s": covered,
+            "fraction": min(1.0, covered / window)}
+
+
+def analyze(path: str) -> Dict[str, Any]:
+    """Full report dict for a trace file or directory."""
+    events = load_events(path)
+    by_pid = _spans_by_pid(events)
+    report: Dict[str, Any] = {"trace": path, "n_events": len(events)}
+
+    # -- timeline + coverage ------------------------------------------
+    procs: Dict[str, Any] = {}
+    trace_t0 = min((float(sp["t"]) for sps in by_pid.values() for sp in sps),
+                   default=0.0)
+    for pid, spans in sorted(by_pid.items()):
+        _self_times(spans)
+        phases: Dict[str, Dict[str, float]] = {}
+        for sp in spans:
+            ph = phases.setdefault(sp["name"], {"n": 0, "s": 0.0,
+                                                "self_s": 0.0})
+            ph["n"] += 1
+            ph["s"] += float(sp.get("dur", 0.0))
+            ph["self_s"] += float(sp["self"])
+        top = [
+            {"name": sp["name"], "t": round(float(sp["t"]) - trace_t0, 4),
+             "dur": round(float(sp.get("dur", 0.0)), 4),
+             "attrs": sp.get("attrs", {})}
+            for sp in sorted((s for s in spans if s.get("parent") is None),
+                             key=lambda s: float(s["t"]))
+        ]
+        procs[str(pid)] = {
+            "role": _role(spans),
+            "top_spans": top,
+            "phases": {k: {"n": v["n"], "s": round(v["s"], 4),
+                           "self_s": round(v["self_s"], 4)}
+                       for k, v in sorted(phases.items())},
+            "coverage": {k: round(v, 4) if isinstance(v, float) else v
+                         for k, v in _coverage(spans).items()},
+        }
+    report["processes"] = procs
+    fracs = [p["coverage"]["fraction"] for p in procs.values()]
+    report["coverage"] = round(min(fracs), 4) if fracs else 0.0
+
+    # -- roofline -----------------------------------------------------
+    kernels: Dict[str, Dict[str, float]] = {}
+    for ev in events:
+        if ev.get("ev") == "ctr" and ev.get("name") == "kernel_cost":
+            f = ev.get("fields", {})
+            k = kernels.setdefault(str(f.get("kernel", "?")),
+                                   {"calls": 0, "flops": 0, "bytes": 0})
+            k["calls"] += int(f.get("calls", 0))
+            k["flops"] += int(f.get("flops", 0))
+            k["bytes"] += int(f.get("bytes", 0))
+    folds: Dict[Any, Dict[str, float]] = {}
+    for spans in by_pid.values():
+        for sp in spans:
+            if sp["name"] not in _FOLD_SPANS:
+                continue
+            a = sp.get("attrs", {})
+            if "flops" not in a:
+                continue
+            key = (str(a.get("kind", "?")), str(a.get("engine", "?")))
+            fd = folds.setdefault(key, {"s": 0.0, "flops": 0, "bytes": 0,
+                                        "n": 0})
+            fd["s"] += float(sp.get("dur", 0.0))
+            fd["flops"] += int(a["flops"])
+            fd["bytes"] += int(a.get("bytes", 0))
+            fd["n"] += 1
+    report["roofline"] = {
+        "kernels": {
+            k: dict(v, intensity=round(v["flops"] / v["bytes"], 3)
+                    if v["bytes"] else None)
+            for k, v in sorted(kernels.items())
+        },
+        "folds": {
+            f"{kind}/{engine}": {
+                "n": fd["n"], "s": round(fd["s"], 4),
+                "flops": fd["flops"], "bytes": fd["bytes"],
+                "model_gflops_per_s": round(fd["flops"] / fd["s"] / 1e9, 3)
+                if fd["s"] else None,
+            }
+            for (kind, engine), fd in sorted(folds.items())
+        },
+    }
+
+    # -- io overlap ---------------------------------------------------
+    io: Dict[str, Dict[str, float]] = {}
+    for ev in events:
+        if ev.get("ev") == "ctr" and ev.get("name") == "io":
+            f = ev.get("fields", {})
+            s = io.setdefault(str(f.get("site", "?")),
+                              {"chunks": 0, "bytes": 0,
+                               "read_s": 0.0, "io_stall_s": 0.0})
+            s["chunks"] += int(f.get("chunks", 0))
+            s["bytes"] += int(f.get("bytes", 0))
+            s["read_s"] += float(f.get("read_s", 0.0))
+            s["io_stall_s"] += float(f.get("io_stall_s", 0.0))
+    report["io"] = {
+        site: dict(v, read_s=round(v["read_s"], 4),
+                   io_stall_s=round(v["io_stall_s"], 4),
+                   overlap=round((v["read_s"] - v["io_stall_s"])
+                                 / v["read_s"], 4) if v["read_s"] else None)
+        for site, v in sorted(io.items())
+    }
+
+    # -- merge share --------------------------------------------------
+    merge_s = fit_s = 0.0
+    for spans in by_pid.values():
+        for sp in spans:
+            if sp["name"] == "merge":
+                merge_s += float(sp.get("dur", 0.0))
+            elif sp["name"] == "fit" and (sp.get("attrs", {}).get("site")
+                                          == "coordinator"):
+                fit_s += float(sp.get("dur", 0.0))
+    report["merge"] = {"merge_s": round(merge_s, 4),
+                       "fit_s": round(fit_s, 4),
+                       "share": round(merge_s / fit_s, 4) if fit_s else None}
+
+    # -- redispatches + protocol verdict ------------------------------
+    report["redispatches"] = sum(
+        int(ev.get("fields", {}).get("groups", 0)) for ev in events
+        if ev.get("ev") == "ctr" and ev.get("name") == "redispatch")
+    proto = [ev for ev in events if ev.get("ev") == "proto"]
+    if proto:
+        from repro.analysis.protocol import check_trace
+        # per-process trace files concatenate in filename order; the
+        # wall timestamp recovers the cross-process serialization the
+        # invariants are stated over (the single-file
+        # RCCA_PROTOCOL_TRACE stream stays the canonical witness)
+        proto.sort(key=lambda ev: float(ev.get("t", 0.0)))
+        violations = check_trace(proto, where=path)
+        report["protocol"] = {"events": len(proto),
+                              "violations": [str(v) for v in violations]}
+    return report
+
+
+def render(report: Dict[str, Any]) -> str:
+    """Human-readable multi-section text of an :func:`analyze` dict."""
+    out: List[str] = []
+    out.append(f"trace: {report['trace']}  ({report['n_events']} events, "
+               f"{len(report['processes'])} processes)")
+    out.append("")
+    out.append("timeline")
+    for pid, proc in report["processes"].items():
+        cov = proc["coverage"]
+        out.append(f"  [{proc['role']} pid={pid}]  window "
+                   f"{cov['window_s']:.3f}s, coverage {cov['fraction']:.1%}")
+        for sp in proc["top_spans"]:
+            attrs = sp["attrs"]
+            tag = " ".join(f"{k}={attrs[k]}" for k in sorted(attrs)
+                           if k in ("site", "pass_idx", "kind", "engine"))
+            out.append(f"    +{sp['t']:8.3f}s  {sp['name']:<12} "
+                       f"{sp['dur']:8.3f}s  {tag}")
+        for name, ph in proc["phases"].items():
+            out.append(f"      {name:<12} n={ph['n']:<5d} "
+                       f"sum={ph['s']:9.3f}s  self={ph['self_s']:9.3f}s")
+    out.append("")
+    out.append(f"span coverage (min over processes): "
+               f"{report['coverage']:.1%}")
+    out.append("")
+    out.append("roofline — cost-model kernel totals")
+    out.append(f"  {'kernel':<20} {'calls':>7} {'flops':>14} {'bytes':>14} "
+               f"{'flops/byte':>10}")
+    for k, v in report["roofline"]["kernels"].items():
+        inten = f"{v['intensity']:.2f}" if v["intensity"] else "-"
+        out.append(f"  {k:<20} {v['calls']:>7d} {v['flops']:>14d} "
+                   f"{v['bytes']:>14d} {inten:>10}")
+    out.append("  fold spans (measured wall over cost-model work):")
+    for key, fd in report["roofline"]["folds"].items():
+        gf = (f"{fd['model_gflops_per_s']:.3f} model-GFLOP/s"
+              if fd["model_gflops_per_s"] is not None else "-")
+        out.append(f"    {key:<16} n={fd['n']:<5d} {fd['s']:8.3f}s  {gf}")
+    out.append("")
+    out.append("io overlap")
+    for site, v in report["io"].items():
+        ov = f"{v['overlap']:.1%}" if v["overlap"] is not None else "-"
+        out.append(f"  {site:<14} chunks={v['chunks']:<6d} "
+                   f"read={v['read_s']:.3f}s stall={v['io_stall_s']:.3f}s "
+                   f"overlap={ov}")
+    m = report["merge"]
+    share = f"{m['share']:.1%}" if m["share"] is not None else "-"
+    out.append("")
+    out.append(f"merge tree: {m['merge_s']:.3f}s of {m['fit_s']:.3f}s "
+               f"coordinator fit wall ({share})")
+    if report["redispatches"]:
+        out.append(f"redispatched groups: {report['redispatches']}")
+    if "protocol" in report:
+        p = report["protocol"]
+        verdict = "OK" if not p["violations"] else "VIOLATIONS"
+        out.append(f"protocol: {p['events']} events -> {verdict}")
+        for v in p["violations"]:
+            out.append(f"  {v}")
+    return "\n".join(out)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs report", description=__doc__)
+    ap.add_argument("trace", help="trace file or directory (RCCA_TRACE dir)")
+    ap.add_argument("--json", default=None,
+                    help="also write the full report dict to this path")
+    args = ap.parse_args(argv)
+    report = analyze(args.trace)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+    print(render(report))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

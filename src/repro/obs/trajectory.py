@@ -1,0 +1,180 @@
+"""Fold every ``results/BENCH_*.json`` into one comparable trajectory.
+
+Each benchmark writes its own BENCH artifact (through
+:func:`benchmarks.common.write_bench`, which stamps schema + commit
+metadata).  This module folds all of them into a single
+schema-versioned ``results/TRAJECTORY.json`` so the per-PR perf record
+is one file with one shape — and computes regression deltas against the
+previous trajectory's entry for the same bench, so a perf cliff shows
+up as a number in the diff, not as archaeology across artifacts.
+
+    python -m repro.obs trajectory [--results results] [--check]
+
+``--check`` validates an existing trajectory file (the CI obs job fails
+on a malformed one) without rewriting it.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+SCHEMA_VERSION = 1
+
+#: metric keys that are identifiers/config, not comparable measurements
+_NON_METRICS = frozenset({"schema", "shape", "prefetch_depth", "buckets"})
+
+
+def _numeric(v: Any) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def extract_metrics(bench: Dict[str, Any]) -> Dict[str, float]:
+    """Flatten a BENCH artifact's comparable numbers: top-level numeric
+    scalars plus the numeric fields of each named ``results`` row
+    (keyed ``<row_name>.<field>``)."""
+    out: Dict[str, float] = {}
+    for k, v in bench.items():
+        if k in _NON_METRICS:
+            continue
+        if _numeric(v):
+            out[k] = float(v)
+    for row in bench.get("results") or []:
+        if not isinstance(row, dict):
+            continue
+        name = row.get("name")
+        if not name:
+            continue
+        for k, v in row.items():
+            if k in _NON_METRICS or not _numeric(v):
+                continue
+            out[f"{name}.{k}"] = float(v)
+    return out
+
+
+def _entry(path: str, results_dir: str) -> Dict[str, Any]:
+    with open(path) as f:
+        bench = json.load(f)
+    return {
+        "bench": bench.get("bench", os.path.basename(path)),
+        "file": os.path.relpath(path, results_dir),
+        # legacy artifacts predate write_bench and carry no meta stamp
+        "meta": bench.get("meta"),
+        "metrics": extract_metrics(bench),
+    }
+
+
+def _deltas(cur: Dict[str, float],
+            prev: Optional[Dict[str, float]]) -> Dict[str, Dict[str, float]]:
+    """Per-metric {prev, cur, rel} against the previous trajectory's
+    entry for the same bench (rel = cur/prev - 1; prev == 0 is skipped)."""
+    if not prev:
+        return {}
+    out: Dict[str, Dict[str, float]] = {}
+    for k, v in cur.items():
+        p = prev.get(k)
+        if p is None or p == 0:
+            continue
+        if p != v:
+            out[k] = {"prev": p, "cur": v, "rel": round(v / p - 1.0, 6)}
+    return out
+
+
+def build(results_dir: str = "results",
+          meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Trajectory dict over every ``BENCH_*.json`` under ``results_dir``,
+    with deltas vs. the previous ``TRAJECTORY.json`` if one exists."""
+    paths = sorted(glob.glob(os.path.join(results_dir, "BENCH_*.json")))
+    previous: Dict[str, Dict[str, float]] = {}
+    prev_path = os.path.join(results_dir, "TRAJECTORY.json")
+    if os.path.exists(prev_path):
+        try:
+            with open(prev_path) as f:
+                prev = json.load(f)
+            previous = {e["bench"]: e.get("metrics", {})
+                        for e in prev.get("entries", [])}
+        except (json.JSONDecodeError, KeyError, TypeError):
+            previous = {}
+    entries: List[Dict[str, Any]] = []
+    for path in paths:
+        e = _entry(path, results_dir)
+        e["deltas"] = _deltas(e["metrics"], previous.get(e["bench"]))
+        entries.append(e)
+    traj: Dict[str, Any] = {"schema": SCHEMA_VERSION, "entries": entries}
+    if meta:
+        traj["meta"] = meta
+    return traj
+
+
+def write(results_dir: str = "results",
+          meta: Optional[Dict[str, Any]] = None) -> str:
+    traj = build(results_dir, meta=meta)
+    out = os.path.join(results_dir, "TRAJECTORY.json")
+    with open(out, "w") as f:
+        json.dump(traj, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return out
+
+
+def validate(traj: Any) -> List[str]:
+    """Schema errors in a trajectory dict (empty list = valid)."""
+    errs: List[str] = []
+    if not isinstance(traj, dict):
+        return ["trajectory is not a JSON object"]
+    if traj.get("schema") != SCHEMA_VERSION:
+        errs.append(f"schema != {SCHEMA_VERSION}: {traj.get('schema')!r}")
+    entries = traj.get("entries")
+    if not isinstance(entries, list):
+        return errs + ["entries is not a list"]
+    for i, e in enumerate(entries):
+        where = f"entries[{i}]"
+        if not isinstance(e, dict):
+            errs.append(f"{where} is not an object")
+            continue
+        for key in ("bench", "file", "metrics"):
+            if key not in e:
+                errs.append(f"{where} missing {key!r}")
+        metrics = e.get("metrics")
+        if not isinstance(metrics, dict) or not all(
+                _numeric(v) for v in metrics.values()):
+            errs.append(f"{where}.metrics is not a numeric mapping")
+    return errs
+
+
+def validate_file(path: str) -> List[str]:
+    if not os.path.exists(path):
+        return [f"{path} does not exist"]
+    try:
+        with open(path) as f:
+            traj = json.load(f)
+    except json.JSONDecodeError as e:
+        return [f"{path} is not valid JSON: {e}"]
+    return validate(traj)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs trajectory", description=__doc__)
+    ap.add_argument("--results", default="results",
+                    help="directory holding BENCH_*.json artifacts")
+    ap.add_argument("--check", action="store_true",
+                    help="validate the existing TRAJECTORY.json, don't write")
+    args = ap.parse_args(argv)
+    traj_path = os.path.join(args.results, "TRAJECTORY.json")
+    if args.check:
+        errs = validate_file(traj_path)
+        for e in errs:
+            print(f"TRAJECTORY: {e}")
+        print(f"TRAJECTORY: {'OK' if not errs else 'MALFORMED'} {traj_path}")
+        return 1 if errs else 0
+    out = write(args.results)
+    with open(out) as f:
+        n = len(json.load(f)["entries"])
+    print(f"TRAJECTORY: wrote {out} ({n} benches)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

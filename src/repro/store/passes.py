@@ -21,7 +21,9 @@ tree fold) and fault tolerance (:mod:`repro.ckpt`):
   same f32 accumulators — exercised by tests/test_store_resume.py);
 - per-pass diagnostics (rows/s, producer read seconds, consumer IO
   stall seconds) land in ``RCCAResult.diagnostics["io"]`` — the same
-  numbers the IO-overlap benchmark reports.
+  numbers the IO-overlap benchmark reports, and under ``RCCA_TRACE``
+  the same pipeline emits ``io`` counters into the unified
+  :mod:`repro.obs` trace (one clock domain — see rule RCCA007).
 
 ``prefetch="auto"`` / ``sync_chunks="auto"`` pick the pipeline depth
 and the in-flight bound from a short calibration window instead of
@@ -39,12 +41,12 @@ mixing accumulator histories.
 from __future__ import annotations
 
 import math
-import time
 from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.ckpt import CheckpointManager
 from repro.core.rcca import (
     DEFAULT_ENGINE,
@@ -120,10 +122,10 @@ class _CalibratingSource:
         idx = self._start + self._consumed
         if idx >= r.reader.n_chunks:
             raise StopIteration
-        t0 = time.perf_counter()
+        t0 = obs.monotonic()
         a, b = r.reader.get_chunk(idx)
         a, b = jax.device_put(a), jax.device_put(b)
-        dt = time.perf_counter() - t0
+        dt = obs.monotonic() - t0
         r._calib_reads.append(dt)
         self.read_s += dt
         self._consumed += 1
@@ -143,6 +145,13 @@ class _CalibratingSource:
         return own
 
     def close(self) -> None:
+        if self.chunks:
+            # the calibration window's inline reads (the swapped-in
+            # prefetcher emits its own "io" counter on close)
+            obs.counter("io", site="calibration", chunks=self.chunks,
+                        rows=self.rows, bytes=self.bytes,
+                        read_s=round(self.read_s, 4),
+                        io_stall_s=round(self.read_s, 4))
         if self._inner is not None:
             self._inner.close()
 
@@ -371,7 +380,7 @@ class PassRunner:
         self._io = {k: 0.0 if isinstance(v, float) else 0
                     for k, v in self._io.items()}
         counters = {"chunks": 0}
-        t0 = time.perf_counter()
+        t0 = obs.monotonic()
 
         def cb(pass_idx, chunk_idx, acc, Qa, Qb):
             counters["chunks"] += 1
@@ -379,7 +388,7 @@ class PassRunner:
                 # calibration: block every chunk; compute time is the
                 # gap since the previous blocked chunk minus its read
                 jax.block_until_ready(acc.state())
-                now = time.perf_counter()
+                now = obs.monotonic()
                 if self._calib_last_t is not None and \
                         len(self._calib_reads) > len(self._calib_computes) + 1:
                     read = self._calib_reads[len(self._calib_computes) + 1]
@@ -403,7 +412,7 @@ class PassRunner:
             )
         finally:
             self._harvest_live()
-        wall = time.perf_counter() - t0
+        wall = obs.monotonic() - t0
 
         rows = self._io["rows"]
         res.diagnostics["io"] = {

@@ -19,8 +19,9 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from typing import Callable, Iterable, Iterator, Optional, Tuple
+
+from repro import obs
 
 _SENTINEL = object()
 
@@ -40,9 +41,11 @@ class ChunkPrefetcher:
 
     def __init__(self, chunks: Iterable[Tuple], *, depth: int = 2,
                  device_put: bool = True,
-                 transform: Optional[Callable] = None):
+                 transform: Optional[Callable] = None,
+                 site: str = "prefetch"):
         if depth < 1:
             raise ValueError("prefetch depth must be >= 1")
+        self.site = site
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._src = iter(chunks)
         self._device_put = device_put
@@ -82,13 +85,13 @@ class ChunkPrefetcher:
             while True:
                 if self._stop.is_set():
                     return
-                t0 = time.perf_counter()
+                t0 = obs.monotonic()
                 try:
                     item = next(self._src)  # disk read happens here
                 except StopIteration:
                     break
                 a, b = self._stage(item)
-                self.read_s += time.perf_counter() - t0
+                self.read_s += obs.monotonic() - t0
                 self.rows += int(a.shape[0])
                 self.bytes += int(a.nbytes) + int(b.nbytes)
                 self._put((a, b))
@@ -104,9 +107,9 @@ class ChunkPrefetcher:
         return self
 
     def __next__(self) -> Tuple:
-        t0 = time.perf_counter()
+        t0 = obs.monotonic()
         item = self._q.get()
-        self.stall_s += time.perf_counter() - t0
+        self.stall_s += obs.monotonic() - t0
         if item is _SENTINEL:
             raise StopIteration
         if isinstance(item, BaseException):
@@ -126,11 +129,17 @@ class ChunkPrefetcher:
             except queue.Empty:
                 break
         self._thread.join(timeout=5.0)
+        self._emit_io()
         if self._error is not None and not self._delivered:
             # the producer failed but the consumer never reached the
             # queued exception — re-raise rather than swallow the loss
             self._delivered = True
             raise self._error
+
+    def _emit_io(self) -> None:
+        if (self.chunks or self.read_s) and not getattr(self, "_counted", False):
+            self._counted = True
+            obs.counter("io", site=self.site, **self.stats())
 
     def stats(self) -> dict:
         return {
@@ -147,9 +156,11 @@ class SyncChunkMeter:
     :class:`ChunkPrefetcher`: reads happen inline on the consumer
     thread, so ``io_stall_s`` IS the read time — nothing is hidden."""
 
-    def __init__(self, chunks: Iterable[Tuple], *, device_put: bool = True):
+    def __init__(self, chunks: Iterable[Tuple], *, device_put: bool = True,
+                 site: str = "sync"):
         self._src = iter(chunks)
         self._device_put = device_put
+        self.site = site
         self.read_s = 0.0
         self.chunks = 0
         self.rows = 0
@@ -159,20 +170,22 @@ class SyncChunkMeter:
         return self
 
     def __next__(self) -> Tuple:
-        t0 = time.perf_counter()
+        t0 = obs.monotonic()
         a, b = next(self._src)
         if self._device_put:
             import jax
 
             a, b = jax.device_put(a), jax.device_put(b)
-        self.read_s += time.perf_counter() - t0
+        self.read_s += obs.monotonic() - t0
         self.chunks += 1
         self.rows += int(a.shape[0])
         self.bytes += int(a.nbytes) + int(b.nbytes)
         return a, b
 
     def close(self) -> None:
-        pass
+        if (self.chunks or self.read_s) and not getattr(self, "_counted", False):
+            self._counted = True
+            obs.counter("io", site=self.site, **self.stats())
 
     def stats(self) -> dict:
         return {
@@ -185,10 +198,14 @@ class SyncChunkMeter:
 
 
 def prefetched(chunks: Iterable[Tuple], *, depth: int = 2,
-               device_put: bool = True) -> Iterable[Tuple]:
+               device_put: bool = True,
+               site: str = "prefetch") -> Iterable[Tuple]:
     """``depth == 0`` → synchronous metered reads (prefetch off);
     otherwise a :class:`ChunkPrefetcher`.  The uniform spelling lets
-    callers thread a ``--prefetch N`` knob straight through."""
+    callers thread a ``--prefetch N`` knob straight through.  ``site``
+    labels the pipeline's ``io`` trace counter (emitted at close under
+    ``RCCA_TRACE``)."""
     if depth == 0:
-        return SyncChunkMeter(chunks, device_put=device_put)
-    return ChunkPrefetcher(chunks, depth=depth, device_put=device_put)
+        return SyncChunkMeter(chunks, device_put=device_put, site=site)
+    return ChunkPrefetcher(chunks, depth=depth, device_put=device_put,
+                           site=site)

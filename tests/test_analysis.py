@@ -156,6 +156,31 @@ def test_rcca005_appends_reads_and_other_scopes_pass():
     assert lint_src(src, "repro/launch/bench.py") == []
 
 
+def test_rcca007_raw_monotonic_clock_in_pass_path_trips():
+    src = """
+    def f():
+        t0 = time.perf_counter()
+        t1 = time.monotonic()
+        t2 = time.monotonic_ns()
+        return time.perf_counter_ns() - t0
+    """
+    for relpath in ("repro/exec/bad.py", "repro/store/prefetch.py"):
+        assert codes(lint_src(src, relpath)) == ["RCCA007"] * 4
+
+
+def test_rcca007_obs_clocks_and_other_scopes_pass():
+    src = """
+    def f():
+        t0 = obs.monotonic()
+        obs.counter("io", read_s=obs.monotonic() - t0, at=obs.wall())
+    """
+    assert lint_src(src, "repro/exec/ok.py") == []
+    # raw clocks are fine outside the pass path and in obs itself
+    src = "def f():\n    return time.perf_counter()\n"
+    assert lint_src(src, "repro/launch/bench.py") == []
+    assert lint_src(src, "repro/obs/trace.py") == []
+
+
 def test_noqa_suppression_bare_and_coded():
     trip = "def f(p, a):\n    np.save(p, a)\n"
     base = lint_src(trip, "repro/cluster/x.py")
