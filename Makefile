@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-quick verify-cluster verify-topology analyze bench bench-kernels bench-io bench-cluster sweep-blocks trajectory
+.PHONY: verify verify-quick verify-cluster verify-topology verify-serve analyze bench bench-kernels bench-io bench-cluster sweep-blocks trajectory
 
 # full tier-1 suite + the interpret-mode kernel-parity subset
 verify:
@@ -18,6 +18,11 @@ verify-cluster:
 # + hybrid fault tolerance, under a forced 4-device host mesh
 verify-topology:
 	bash scripts/verify.sh --topology
+
+# serving tier + incremental refits: registry round-trip, zero-drop
+# hot-swap, drift → refit signal, delta-refit bitwise parity
+verify-serve:
+	bash scripts/verify.sh --serve
 
 # static analysis gate: architecture lint + kernel contract checker +
 # cluster-protocol model check (+ ruff/mypy when installed)

@@ -6,6 +6,9 @@
 #   scripts/verify.sh --cluster  # only the multi-worker cluster + store suites
 #   scripts/verify.sh --topology # exec topology-parity + hybrid suites under
 #                                # a forced 4-device host mesh
+#   scripts/verify.sh --serve    # serving tier + incremental delta-refits
+#                                # (registry round-trip, hot-swap, drift,
+#                                # delta-refit bitwise parity)
 #   scripts/verify.sh --analyze  # static analysis gate: repro.analysis
 #                                # (lint + kernel contracts + protocol model)
 #                                # plus ruff/mypy when installed
@@ -24,6 +27,9 @@ elif [[ "${1:-}" == "--cluster" ]]; then
   shift
 elif [[ "${1:-}" == "--topology" ]]; then
   mode=topology
+  shift
+elif [[ "${1:-}" == "--serve" ]]; then
+  mode=serve
   shift
 elif [[ "${1:-}" == "--analyze" ]]; then
   mode=analyze
@@ -59,6 +65,14 @@ topology() {
     tests/test_cluster_failures.py "$@"
 }
 
+# serving tier + incremental refits: model-registry round-trip +
+# corruption detection, zero-drop hot-swap under concurrent requests,
+# drift signal → refit → recovery, and delta-refit bitwise parity
+# (cold fit ≡ stateful fit + delta) across engines and topologies
+serve() {
+  python -m pytest -q tests/test_serve.py "$@"
+}
+
 # static analysis gate: the repro.analysis suite is mandatory (stdlib +
 # jax only); ruff and mypy run when importable and are skipped with a
 # notice otherwise (the runtime image does not ship them — CI installs
@@ -81,6 +95,7 @@ case "$mode" in
   quick)    parity "$@" ;;
   cluster)  cluster "$@" ;;
   topology) topology "$@" ;;
+  serve)    serve "$@" ;;
   analyze)  analyze ;;
   *)
     # the full pytest run already covers the cluster suite; parity is

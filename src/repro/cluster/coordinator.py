@@ -87,6 +87,15 @@ class ClusterCoordinator:
                     MUST equal the single-process driver's value for
                     bit-identical results (default: the shared
                     ``repro.exec.MERGE_GROUP_CHUNKS``).
+    combine_groups: combiner-on-the-way-out span (power of two): each
+                    worker pre-merges runs of this many consecutive
+                    merge groups through its own pairwise stack and
+                    publishes ONE span partial per run, shrinking the
+                    coordinator's merge fan-in (and the partials
+                    directory) by that factor.  Results are bitwise
+                    invariant to this knob — a combined span is exactly
+                    one subtree of the canonical reduction.  1 (the
+                    default) is the historical per-group protocol.
     omega:          Ω provenance (``rcca.OMEGA_MODES``), binding for
                     every round and partial.  ``"seeded"`` publishes
                     the pass-0 round with the per-view (2,)-uint32
@@ -114,6 +123,7 @@ class ClusterCoordinator:
                  n_workers: int = 2, devices_per_worker: int = 1,
                  engine: str = DEFAULT_ENGINE,
                  merge_group: int = MERGE_GROUP_CHUNKS,
+                 combine_groups: int = 1,
                  omega: str = "materialized", prefetch: int = 2,
                  ckpt_every: int = 4, worker_timeout: float = 600.0,
                  heartbeat_timeout: Optional[float] = None,
@@ -130,6 +140,7 @@ class ClusterCoordinator:
         self.devices_per_worker = int(devices_per_worker)
         self.engine = resolve_engine(engine)
         self.merge_group = int(merge_group)
+        self.combine_groups = int(combine_groups)
         self.omega = resolve_omega(omega)
         self.prefetch = int(prefetch)
         self.ckpt_every = int(ckpt_every)
@@ -142,6 +153,12 @@ class ClusterCoordinator:
             raise ValueError("need at least one worker")
         if self.devices_per_worker < 1:
             raise ValueError("need at least one device per worker")
+        if self.combine_groups < 1 or \
+                self.combine_groups & (self.combine_groups - 1):
+            raise ValueError(
+                f"combine_groups must be a power of two (a combined span "
+                f"must be one subtree of the canonical pairwise "
+                f"reduction), got {self.combine_groups}")
         os.makedirs(os.path.join(cluster_dir, "logs"), exist_ok=True)
         # (pass_idx, group) → error for stale-partial removals that
         # failed — surfaced in diagnostics, retried at every pass sweep
@@ -191,7 +208,8 @@ class ClusterCoordinator:
             log.close()  # the child holds its own descriptor
 
     def _owned(self, shard: int) -> List[int]:
-        return list(range(shard, self.n_groups, self.n_workers))
+        return [g for g in range(self.n_groups)
+                if (g // self.combine_groups) % self.n_workers == shard]
 
     # -- one pass ---------------------------------------------------------
 
@@ -237,7 +255,8 @@ class ClusterCoordinator:
             self._clean_pending[(pass_idx, g)] = err
         with obs.span("publish", pass_idx=int(pass_idx), kind=kind):
             pt.write_round(self.cluster_dir, pass_idx, Qa, Qb,
-                           {**expect, "n_shards": self.n_workers})
+                           {**expect, "n_shards": self.n_workers,
+                            "combine": self.combine_groups})
             procs = {s: self._spawn(s, pass_idx,
                                     extra_env=self.env_overrides.get(s))
                      for s in range(self.n_workers) if self._owned(s)}
@@ -250,12 +269,27 @@ class ClusterCoordinator:
                     if self.worker_timeout else None)
         barrier = obs.span("barrier", pass_idx=int(pass_idx), kind=kind)
         barrier.__enter__()
+        last_liveness = -1.0
         while True:
-            have = pt.collect_partials(self.cluster_dir, pass_idx,
-                                       self.n_groups, expect)
-            missing = [g for g in range(self.n_groups) if g not in have]
+            plan, missing = pt.collect_coverage(self.cluster_dir, pass_idx,
+                                                self.n_groups, expect)
             if not missing:
                 break
+            # liveness telemetry (~1 Hz): heartbeat ages of the live
+            # workers, so `repro.obs report` can show per-shard health
+            # next to the compute spans
+            now = obs.monotonic()
+            if now - last_liveness >= 1.0:
+                last_liveness = now
+                for shard, p in procs.items():
+                    if p.poll() is not None:
+                        continue
+                    age = pt.heartbeat_age(self.cluster_dir, shard, pass_idx)
+                    since = now - spawned_at.get(shard, now)
+                    age = since if age is None else min(age, since)
+                    obs.counter("heartbeat", shard=int(shard),
+                                age_s=round(age, 3), pass_idx=int(pass_idx),
+                                missing_groups=len(missing))
             stale_shards.extend(self._kill_stale(procs, pass_idx, spawned_at))
             timed_out = deadline is not None and obs.monotonic() > deadline
             if timed_out:
@@ -299,20 +333,26 @@ class ClusterCoordinator:
             stats_init_fn(kind, r.da, r.db, self.cfg.sketch),
             r.n_chunks, self.merge_group)
         merge_span = obs.span("merge", pass_idx=int(pass_idx), kind=kind,
-                              groups=self.n_groups)
+                              groups=self.n_groups, partials=len(plan))
         merge_span.__enter__()
-        for g in range(self.n_groups):
-            loaded = pt.read_partial(self.cluster_dir, pass_idx, g)
+        g = 0
+        while g < self.n_groups:
+            span, _ = plan[g]
+            loaded = pt.read_partial(self.cluster_dir, pass_idx, g, span)
             assert loaded is not None, g
             stats, meta = loaded
             if not pt.binding_matches(meta, expect):  # at-most-once guard
                 raise RuntimeError(f"stale partial for group {g} at merge time")
-            trace_event("merge", pt.partial_path(self.cluster_dir, pass_idx, g),
+            trace_event("merge",
+                        pt.partial_path(self.cluster_dir, pass_idx, g, span),
                         fit_id=expect["fit_id"], pass_idx=int(pass_idx),
-                        group=int(g))
-            # the sanctioned entry into the canonical tree: push_group in
+                        group=int(g), span=int(span))
+            # the sanctioned entry into the canonical tree: spans in
             # ascending group order, fold order owned by the accumulator
-            acc.push_group(g, stats)  # rcca: noqa[RCCA001]
+            # (a combined span is one subtree — bitwise identical to its
+            # groups pushed individually)
+            acc.push_group_span(g, stats, span)  # rcca: noqa[RCCA001]
+            g += span
         merged = acc.result()
         merge_span.__exit__(None, None, None)
         sanitize.observe("pass_end", merged)
@@ -320,6 +360,7 @@ class ClusterCoordinator:
         obs.counter("workers", pass_idx=int(pass_idx), spawned=n_spawned)
         diag = {"wall_s": round(now - t0, 4),
                 "merge_s": round(now - t_merge, 4),
+                "merge_fan_in": len(plan),
                 "workers_spawned": n_spawned,
                 "redispatched_groups": sorted(set(redispatched)),
                 "stale_heartbeat_shards": sorted(set(stale_shards)),
@@ -395,6 +436,7 @@ class ClusterCoordinator:
             "topology": "hybrid" if self.devices_per_worker > 1 else "cluster",
             "n_groups": self.n_groups,
             "merge_group": self.merge_group,
+            "combine_groups": self.combine_groups,
             "omega": self.omega,
             "fit_id": fit_id,
             "passes": passes,

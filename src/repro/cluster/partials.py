@@ -45,9 +45,10 @@ scheduler signal of the ROADMAP's speculative-re-dispatch follow-up.
 from __future__ import annotations
 
 import os
+import re
 import shutil
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -70,8 +71,38 @@ def round_dir(cluster_dir: str, pass_idx: int) -> str:
     return os.path.join(cluster_dir, "rounds", f"pass_{pass_idx:05d}")
 
 
-def partial_path(cluster_dir: str, pass_idx: int, group: int) -> str:
-    return os.path.join(cluster_dir, "partials", f"p{pass_idx:05d}_g{group:05d}")
+def partial_path(cluster_dir: str, pass_idx: int, group: int,
+                 span: int = 1) -> str:
+    """Partial directory for ``span`` consecutive merge groups starting
+    at ``group``.  ``span == 1`` keeps the historical per-group path, so
+    combined (``x{span}``) and individual partials never collide — a
+    repair worker re-publishing group ``g`` individually cannot race a
+    combined span that happens to start there."""
+    name = f"p{pass_idx:05d}_g{group:05d}"
+    if span > 1:
+        name += f"x{span}"
+    return os.path.join(cluster_dir, "partials", name)
+
+
+#: partial directory names: p<pass>_g<group>[x<span>] (staging suffixes
+#: ``.stage<pid>`` intentionally do not match)
+_PARTIAL_RE = re.compile(r"^p(\d{5})_g(\d{5})(?:x(\d+))?$")
+
+
+def scan_partials(cluster_dir: str, pass_idx: int) -> List[Tuple[int, int]]:
+    """All ``(group, span)`` partials of a pass present on disk —
+    published or torn; validity is the caller's check."""
+    d = os.path.join(cluster_dir, "partials")
+    try:
+        entries = os.listdir(d)
+    except FileNotFoundError:
+        return []
+    out = []
+    for name in entries:
+        m = _PARTIAL_RE.match(name)
+        if m and int(m.group(1)) == pass_idx:
+            out.append((int(m.group(2)), int(m.group(3) or 1)))
+    return sorted(out)
 
 
 def worker_cursor_dir(cluster_dir: str, shard: int, pass_idx: int) -> str:
@@ -159,26 +190,30 @@ def _stats_from_flat(flat: dict, kind: str):
 
 
 def write_partial(cluster_dir: str, pass_idx: int, group: int, stats,
-                  meta: dict, *, shard: int, n_shards: int) -> None:
-    """Atomically publish one merge group's statistics.
+                  meta: dict, *, shard: int, n_shards: int,
+                  span: int = 1) -> None:
+    """Atomically publish the statistics of ``span`` consecutive merge
+    groups starting at ``group`` (``span == 1``: one plain per-group
+    partial; ``span > 1``: a worker-combined aligned dyadic span — see
+    ``repro.exec.SpanCombiner``).
 
     Concurrent publication of the same group id (a re-dispatched shard
     racing its presumed-dead owner) is harmless: content is
     deterministic, the staging rename is atomic, and the loser's copy
     is discarded.
     """
-    final = partial_path(cluster_dir, pass_idx, group)
+    final = partial_path(cluster_dir, pass_idx, group, span)
     os.makedirs(os.path.dirname(final), exist_ok=True)
     staging = f"{final}.stage{os.getpid()}"
     save_pytree(stats._asdict(), staging,
-                metadata={**meta, "group": int(group), "shard": int(shard),
-                          "n_shards": int(n_shards)})
+                metadata={**meta, "group": int(group), "span": int(span),
+                          "shard": int(shard), "n_shards": int(n_shards)})
     trace_event("stage_write", staging, group=int(group), shard=int(shard))
     try:
         os.rename(staging, final)
         trace_event("commit", final, group=int(group), shard=int(shard))
     except OSError:
-        existing = partial_meta(cluster_dir, pass_idx, group)
+        existing = partial_meta(cluster_dir, pass_idx, group, span)
         if binding_matches(existing, meta):
             shutil.rmtree(staging, ignore_errors=True)  # a twin won the race
             trace_event("twin_drop", final, group=int(group),
@@ -194,9 +229,9 @@ def write_partial(cluster_dir: str, pass_idx: int, group: int, stats,
             trace_event("commit", final, group=int(group), shard=int(shard))
 
 
-def read_partial(cluster_dir: str, pass_idx: int,
-                 group: int) -> Optional[Tuple[object, dict]]:
-    d = partial_path(cluster_dir, pass_idx, group)
+def read_partial(cluster_dir: str, pass_idx: int, group: int,
+                 span: int = 1) -> Optional[Tuple[object, dict]]:
+    d = partial_path(cluster_dir, pass_idx, group, span)
     if not os.path.exists(os.path.join(d, "manifest.json")):
         return None
     flat, meta = load_flat(d)
@@ -204,9 +239,10 @@ def read_partial(cluster_dir: str, pass_idx: int,
     return _stats_from_flat(flat, meta["kind"]), meta
 
 
-def partial_meta(cluster_dir: str, pass_idx: int, group: int) -> Optional[dict]:
+def partial_meta(cluster_dir: str, pass_idx: int, group: int,
+                 span: int = 1) -> Optional[dict]:
     """Metadata only — cheap validity polling for the barrier loop."""
-    d = partial_path(cluster_dir, pass_idx, group)
+    d = partial_path(cluster_dir, pass_idx, group, span)
     try:
         return load_metadata(d)
     except (FileNotFoundError, KeyError, ValueError):
@@ -214,7 +250,7 @@ def partial_meta(cluster_dir: str, pass_idx: int, group: int) -> Optional[dict]:
 
 
 def clear_stale_partial(cluster_dir: str, pass_idx: int,
-                        group: int) -> Optional[str]:
+                        group: int, span: int = 1) -> Optional[str]:
     """Remove a stale partial directory; returns an error string on
     failure, None on success (including already-gone).
 
@@ -224,7 +260,7 @@ def clear_stale_partial(cluster_dir: str, pass_idx: int,
     the coordinator surfaces it in diagnostics and retries at the next
     sweep, and the protocol trace records both outcomes.
     """
-    path = partial_path(cluster_dir, pass_idx, group)
+    path = partial_path(cluster_dir, pass_idx, group, span)
     if not os.path.lexists(path):
         return None
     try:
@@ -243,11 +279,13 @@ def sweep_stale_partials(cluster_dir: str, pass_idx: int, n_groups: int,
     cluster_dir).  Returns {group: error} for removals that FAILED —
     empty when the directory is clean."""
     failures: Dict[int, str] = {}
-    for g in range(n_groups):
-        meta = partial_meta(cluster_dir, pass_idx, g)
+    for g, span in scan_partials(cluster_dir, pass_idx):
+        if g >= n_groups:
+            continue
+        meta = partial_meta(cluster_dir, pass_idx, g, span)
         if meta is None or binding_matches(meta, expect):
             continue
-        err = clear_stale_partial(cluster_dir, pass_idx, g)
+        err = clear_stale_partial(cluster_dir, pass_idx, g, span)
         if err is not None:
             failures[g] = err
     return failures
@@ -255,11 +293,49 @@ def sweep_stale_partials(cluster_dir: str, pass_idx: int, n_groups: int,
 
 def collect_partials(cluster_dir: str, pass_idx: int, n_groups: int,
                      expect: dict) -> Dict[int, dict]:
-    """Group id → metadata for every VALID published partial of a pass
-    (stale ones are ignored — and thus re-dispatched by the barrier)."""
+    """Group id → metadata for every VALID published per-group
+    (span-1) partial of a pass (stale ones are ignored — and thus
+    re-dispatched by the barrier).  Combined spans are the coverage
+    collector's job (:func:`collect_coverage`)."""
     out = {}
     for g in range(n_groups):
         meta = partial_meta(cluster_dir, pass_idx, g)
         if binding_matches(meta, expect):
             out[g] = meta
     return out
+
+
+def collect_coverage(
+        cluster_dir: str, pass_idx: int, n_groups: int, expect: dict,
+) -> Tuple[Dict[int, Tuple[int, dict]], List[int]]:
+    """Greedy span-aware coverage of a pass's merge groups.
+
+    Returns ``(plan, missing)``: ``plan`` maps a start group to the
+    ``(span, meta)`` of the valid partial chosen to cover
+    ``[start, start + span)`` — walking it in ascending start order
+    visits every covered group exactly once — and ``missing`` lists the
+    groups no valid partial covers (the barrier's re-dispatch set).  At
+    each uncovered group the widest valid aligned span wins (fewest
+    reads); overlapping alternatives are byte-identical subtrees of the
+    same canonical reduction, so the choice cannot change the merge.
+    """
+    candidates: Dict[int, Dict[int, dict]] = {}
+    for g, span in scan_partials(cluster_dir, pass_idx):
+        if span & (span - 1) or g % span or g + span > n_groups:
+            continue  # never written by a correct worker: unusable
+        meta = partial_meta(cluster_dir, pass_idx, g, span)
+        if binding_matches(meta, expect) and int(meta.get("span", 1)) == span:
+            candidates.setdefault(g, {})[span] = meta
+    plan: Dict[int, Tuple[int, dict]] = {}
+    missing: List[int] = []
+    g = 0
+    while g < n_groups:
+        spans = candidates.get(g)
+        if not spans:
+            missing.append(g)
+            g += 1
+            continue
+        span = max(spans)
+        plan[g] = (span, spans[span])
+        g += span
+    return plan, missing

@@ -73,8 +73,8 @@ from repro import obs
 from repro.ckpt import CheckpointManager
 from repro.core.rcca import (jit_seeded_update_fn, jit_update_fn,
                              seeded_update_fn, stats_init_fn, update_fn)
-from repro.exec import (SegmentedAccumulator, fold_groups_on_mesh,
-                        n_full_chunks, run_fold)
+from repro.exec import (SegmentedAccumulator, SpanCombiner,
+                        fold_groups_on_mesh, n_full_chunks, run_fold)
 from repro.store import ViewStoreReader, prefetched, shard_chunks
 
 from . import partials as pt
@@ -165,29 +165,52 @@ def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
     pt.touch_heartbeat(cluster_dir, shard, pass_idx)
 
     expect = {k: meta.get(k) for k in pt.BINDING_KEYS}
+    # combiner-on-the-way-out: pre-merge runs of `combine` consecutive
+    # groups into one span partial before publishing (shrinks the
+    # coordinator's merge fan-in by that factor); 1 = off, the
+    # historical per-group protocol
+    combine = int(meta.get("combine", 1))
     if groups is None:
-        owned = [g for g in range(shard, n_groups, n_shards)]
+        owned = [g for g in range(n_groups)
+                 if (g // combine) % n_shards == shard]
     else:
         owned = sorted(int(g) for g in groups)
 
     def group_done(g: int) -> bool:
-        return pt.binding_matches(
-            pt.partial_meta(cluster_dir, pass_idx, g), expect)
+        """Published already — individually or inside a combined span
+        (check every aligned span that could contain g)."""
+        s = 1
+        while s <= combine:
+            if pt.binding_matches(
+                    pt.partial_meta(cluster_dir, pass_idx, g - g % s, s),
+                    expect):
+                return True
+            s <<= 1
+        return False
 
     todo = [g for g in owned if not group_done(g)]
     if not todo:
         return 0
     state = {"published": 0}
 
-    def publish(g: int, stats) -> None:
-        """The group sink: beat, publish-if-new, count."""
-        with obs.span("publish", group=int(g)):
+    def publish_span(g: int, span: int, stats) -> None:
+        """The (combined) group sink: beat, publish-if-new, count."""
+        with obs.span("publish", group=int(g), span=int(span)):
             jax.block_until_ready(stats)
-            if not group_done(g):  # idempotent re-publication guard
-                pt.write_partial(cluster_dir, pass_idx, g, stats,
-                                 expect, shard=shard, n_shards=n_shards)
+            if not pt.binding_matches(  # idempotent re-publication guard
+                    pt.partial_meta(cluster_dir, pass_idx, g, span), expect):
+                pt.write_partial(cluster_dir, pass_idx, g, stats, expect,
+                                 shard=shard, n_shards=n_shards, span=span)
             state["published"] += 1
             pt.touch_heartbeat(cluster_dir, shard, pass_idx)
+
+    combiner = SpanCombiner(combine, publish_span)
+
+    def publish(g: int, stats) -> None:
+        if combine > 1:
+            combiner.emit(g, stats)
+        else:
+            publish_span(g, 1, stats)
 
     # -- device-parallel (hybrid) shard ----------------------------------
     if devices > 1:
@@ -224,6 +247,7 @@ def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
                 span_attrs={"kind": kind, "engine": engine,
                             "pass_idx": int(pass_idx)},
                 cost_fn=_cost_fn(kind, engine, kt, q_dtype, seeds))
+            combiner.flush()  # trailing short run (end of stream)
         return state["published"]
 
     # -- sequential shard --------------------------------------------------
@@ -244,11 +268,13 @@ def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
             current = tree["current"]
             start_chunk = nxt
 
-    # stream
+    # stream (striping in G*combine-chunk runs keeps whole combine-runs
+    # on one worker, so the combiner sees unbroken aligned runs)
     if groups is None:
         idxs = list(shard_chunks(shard, n_shards, n_chunks,
-                                 start=start_chunk, group=G))
-        src = reader.row_shard(shard, n_shards, start=start_chunk, group=G)
+                                 start=start_chunk, group=G * combine))
+        src = reader.row_shard(shard, n_shards, start=start_chunk,
+                               group=G * combine)
     else:
         idxs = [c for g in todo for c in range(g * G, min(n_chunks, (g + 1) * G))
                 if c >= start_chunk]
@@ -286,6 +312,7 @@ def run_worker(store: str, cluster_dir: str, shard: int, n_shards: int,
                      span_attrs={"kind": kind, "engine": engine,
                                  "pass_idx": int(pass_idx)},
                      cost_fn=_cost_fn(kind, engine, kt, q_dtype, seeds))
+            combiner.flush()  # trailing short run (end of stream)
         finally:
             src.close()
     return state["published"]

@@ -22,9 +22,11 @@ from .accumulate import (
     MERGE_GROUP_CHUNKS,
     PairwiseStack,
     SegmentedAccumulator,
+    SpanCombiner,
     merge_stats,
     reduce_group_partials,
 )
+from .delta import FitState, delta_refit, fit_with_state
 from .engine import (
     PassEngine,
     StackedChunks,
@@ -39,6 +41,7 @@ from .topology import Cluster, Hybrid, Local, Sharded, Topology, as_topology
 
 __all__ = [
     "Cluster",
+    "FitState",
     "Hybrid",
     "Local",
     "MERGE_GROUP_CHUNKS",
@@ -46,10 +49,13 @@ __all__ = [
     "PassEngine",
     "SegmentedAccumulator",
     "Sharded",
+    "SpanCombiner",
     "StackedChunks",
     "Topology",
     "as_topology",
+    "delta_refit",
     "fit",
+    "fit_with_state",
     "fold_groups_on_mesh",
     "merge_stats",
     "n_full_chunks",

@@ -71,8 +71,23 @@ class PairwiseStack:
         return bin(m).count("1")
 
     def push(self, s: Stats) -> None:
+        self.push_span(s, 1)
+
+    def push_span(self, s: Stats, count: int) -> None:
+        """Push a pre-merged ALIGNED DYADIC span: ``s`` is the canonical
+        pairwise sum of ``count`` consecutive leaves where ``count`` is a
+        power of two and the span starts at a multiple of ``count``.
+        Such a span is exactly one subtree of the binary-counter
+        reduction, so pushing it as a single weight-``count`` entry
+        reproduces ``count`` individual pushes bitwise — this is what
+        lets cluster workers pre-merge their own groups before
+        publishing (combiner-on-the-way-out) without moving the tree.
+        Alignment is the caller's contract (see
+        ``SegmentedAccumulator.push_group_span``)."""
+        if count < 1 or count & (count - 1):
+            raise ValueError(f"span weight must be a power of two, got {count}")
         self.stack.append(s)
-        self.counts.append(1)
+        self.counts.append(count)
         while len(self.counts) >= 2 and self.counts[-1] == self.counts[-2]:
             hi = self.stack.pop()
             self.stack[-1] = merge_stats(self.stack[-1], hi)
@@ -170,14 +185,37 @@ class SegmentedAccumulator:
         """Feed a pre-computed merge-group sum (a cluster partial or a
         device-folded group) — MUST be called in ascending group order
         with no gaps."""
+        self.push_group_span(group_idx, stats, 1)
+
+    def push_group_span(self, group_idx: int, stats: Stats,
+                        span: int) -> None:
+        """Feed a pre-merged span of ``span`` consecutive merge groups
+        starting at ``group_idx`` (a worker-combined cluster partial).
+        ``span`` must be a power of two and the span aligned
+        (``group_idx % span == 0``) so it is exactly one subtree of the
+        canonical pairwise reduction — then the merge is bitwise
+        identical to pushing the ``span`` groups individually.  Spans
+        must still arrive in ascending group order with no gaps."""
         if group_idx != self.groups_done:
             raise ValueError(
                 f"merge groups must arrive in order: got {group_idx}, "
                 f"expected {self.groups_done}")
+        if span < 1 or span & (span - 1):
+            raise ValueError(f"span must be a power of two, got {span}")
+        if group_idx % span:
+            raise ValueError(
+                f"span of {span} groups at {group_idx} is unaligned — "
+                "not a subtree of the canonical reduction")
+        if self.n_chunks is not None and group_idx + span > self.n_groups:
+            raise ValueError(
+                f"span [{group_idx}, {group_idx + span}) overruns the "
+                f"{self.n_groups}-group corpus")
         if sanitize.enabled():
-            sanitize.observe(f"group:{group_idx}", stats)
-        self._tree.push(stats)
-        self.groups_done += 1
+            key = (f"group:{group_idx}" if span == 1
+                   else f"span:{group_idx}x{span}")
+            sanitize.observe(key, stats)
+        self._tree.push_span(stats, span)
+        self.groups_done += span
 
     def result(self) -> Stats:
         r = self._tree.result()
@@ -216,6 +254,63 @@ class SegmentedAccumulator:
         acc.load_state({"current": init_fn(),
                         "stack": tuple(init_fn() for _ in range(depth))})
         return acc
+
+
+class SpanCombiner:
+    """Combiner-on-the-way-out: pre-merge runs of consecutive merge
+    groups into aligned dyadic spans before they leave a worker.
+
+    Sits between a :class:`SegmentedAccumulator` sink and the publish
+    path: ``emit(g, stats)`` buffers consecutive groups of a run
+    through a local :class:`PairwiseStack`; once ``span`` groups are in
+    (or the run breaks — a jump to the worker's next run, or end of
+    stream via :meth:`flush`), the buffered groups leave as
+    ``sink(g0, count, merged)`` span partials.  Because the local stack
+    is the same binary-counter reduction the coordinator would have
+    run, each emitted entry is exactly one subtree of the canonical
+    tree: an aligned run of 5 groups leaves as spans of 4 + 1, bitwise
+    identical to 5 individual partials merged downstream.  Groups that
+    start unaligned (a repair worker's arbitrary group list) pass
+    through as span-1 partials — correctness never depends on the run
+    shape, only fan-in does.
+    """
+
+    def __init__(self, span: int, sink: Callable[[int, int, Stats], None]):
+        if span < 1 or span & (span - 1):
+            raise ValueError(f"combine span must be a power of two, got {span}")
+        self.span = int(span)
+        self.sink = sink
+        self._g0: Optional[int] = None  # run start (aligned)
+        self._count = 0
+        self._tree = PairwiseStack()
+
+    def emit(self, g: int, stats: Stats) -> None:
+        if self._g0 is not None and g != self._g0 + self._count:
+            self.flush()  # run broke: the worker jumped to its next run
+        if self._g0 is None:
+            if self.span == 1 or g % self.span:
+                self.sink(g, 1, stats)  # unaligned start: no combining
+                return
+            self._g0 = g
+        self._tree.push(stats)
+        self._count += 1
+        if self._count == self.span:
+            self.flush()
+
+    def flush(self) -> None:
+        """Publish whatever is buffered.  The local stack entries after
+        ``count`` pushes mirror count's binary digits, and each is an
+        aligned dyadic block (the run starts at a multiple of ``span``),
+        so they emit directly as span partials."""
+        if self._g0 is None:
+            return
+        g = self._g0
+        for entry, weight in zip(self._tree.stack, self._tree.counts):
+            self.sink(g, weight, entry)
+            g += weight
+        self._g0 = None
+        self._count = 0
+        self._tree = PairwiseStack()
 
 
 def reduce_group_partials(partials: Mapping[int, Stats],

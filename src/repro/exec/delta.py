@@ -1,0 +1,446 @@
+"""Incremental delta-refits: persist a fit's accumulator state, fold
+only appended shards, re-finalize.
+
+The paper's pitch — mergeable sufficient statistics for
+iteration-expensive environments — makes a fit *updatable*: every
+accumulator field is an exact row-sum, so statistics over appended rows
+merge into persisted state through the same canonical pairwise tree
+(:mod:`repro.exec.accumulate`) that makes the topologies bitwise-equal.
+This module is that path:
+
+- :class:`FitState` — the persisted artifact (via :mod:`repro.ckpt`):
+  per-pass Qa/Qb payloads + accumulator state for pass 0 and the final
+  pass, a store snapshot (fingerprint, per-shard hashes), and binding
+  metadata (engine / omega / merge_group / algo) so a refit against the
+  wrong data or knobs fails loudly instead of silently mixing corpora;
+- :func:`fit_with_state` — a cold fit that also captures state (the
+  ``PassEngine.on_pass_complete`` hook);
+- :func:`delta_refit` — detect appended shards via the manifest prefix,
+  fold only the delta, merge, re-finalize.
+
+Two refit modes, because the power iteration couples passes to data:
+
+``mode="exact"`` (default)
+    Pass 0's sketch Ω is derived from the fit key alone (data-
+    independent), so the persisted pass-0 accumulator resumes over the
+    delta chunks and yields the full-corpus pass-0 statistics bitwise.
+    Every later pass p consumes Q_p computed from pass p-1's
+    *full-corpus* statistics — those Q change when data arrives, so
+    passes 1..q re-fold the whole store with the refreshed bases.  The
+    result is bitwise identical to a cold fit over the extended store
+    (the delta-refit parity contract); for the default q=1 this halves
+    the work, and for q=0 it never re-touches the corpus at all.
+
+``mode="frozen"``
+    Never re-touch the old corpus: fold the delta into the pass-0
+    accumulator (still exact — Ω is data-independent) AND into the
+    final-pass accumulator under the *frozen* final bases, then
+    re-finalize in that basis.  The projections stay rank-optimal for
+    the frozen range; freshness costs only O(delta) I/O.  Because the
+    pass-0 entry stays exact, a later ``mode="exact"`` refit from the
+    same state still reproduces the cold fit bitwise — frozen refits
+    never degrade the state.
+
+Alignment contract: the old corpus must end on a merge-group boundary
+(``old_n`` divisible by ``chunk · merge_group``).  Chunk alignment
+keeps every old chunk's content identical in the extended store; group
+alignment means the persisted pairwise stack is exactly the cold fit's
+mid-pass state (an unaligned history would have closed its ragged tail
+group early, which the canonical tree cannot reopen).  ``delta_refit``
+validates both and raises otherwise.
+
+Cluster/Hybrid delta-refits (workers folding the delta, coordinator
+merging into persisted state) are a ROADMAP residual; Local and
+Sharded cover the single-host serving loop this PR lands.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro import obs
+from repro.ckpt import load_flat, save_pytree
+
+from .accumulate import MERGE_GROUP_CHUNKS, SegmentedAccumulator
+from .engine import PassEngine, fold_groups_on_mesh, n_full_chunks, run_fold
+from .topology import Local, Sharded, Topology, as_topology
+
+FITSTATE_VERSION = 1
+
+#: metadata keys that bind a FitState to its fit — a refit under any
+#: other value is a different computation and must fail loudly
+STATE_BINDING = ("version", "engine", "omega", "merge_group", "algo")
+
+
+def _config_from_algo(algo: dict):
+    """Rebuild the RCCAConfig a state was fit under from its persisted
+    ``algo_meta`` dict (the inverse of ``repro.core.rcca.algo_meta``)."""
+    from repro.core.rcca import RCCAConfig
+
+    return RCCAConfig(
+        k=int(algo["k"]), p=int(algo["p"]), q=int(algo["q"]),
+        lam_a=float(algo["lam_a"]), lam_b=float(algo["lam_b"]),
+        nu=None if algo["nu"] is None else float(algo["nu"]),
+        center=bool(algo["center"]), dtype=jnp.dtype(algo["dtype"]))
+
+
+def _stats_cls(kind: str):
+    from repro.core.rcca import FinalStats, PowerStats
+
+    return PowerStats if kind == "power" else FinalStats
+
+
+@dataclasses.dataclass
+class PassCapture:
+    """One persisted pass: the Qa/Qb payload it consumed (arrays, or
+    (2,)-uint32 seeds on a seeded pass 0) and the accumulator snapshot
+    after its last chunk."""
+
+    kind: str
+    Qa: Any
+    Qb: Any
+    acc_current: Any
+    acc_stack: Tuple[Any, ...]
+
+    def acc_state(self) -> Dict[str, Any]:
+        return {"current": self.acc_current, "stack": self.acc_stack}
+
+
+@dataclasses.dataclass
+class FitState:
+    """Persisted incremental-fit state (see module docstring).
+
+    ``meta`` carries binding + the store snapshot; ``passes`` maps pass
+    index → :class:`PassCapture` for pass 0 and the final pass (the
+    only two an exact or frozen refit consumes — intermediate power
+    passes are recomputed from refreshed bases either way).
+    """
+
+    meta: Dict[str, Any]
+    passes: Dict[int, PassCapture]
+
+    # -- persistence (repro.ckpt atomic pytree) ---------------------------
+
+    def save(self, directory: str) -> None:
+        tree = {}
+        for p, cap in sorted(self.passes.items()):
+            tree[f"p{p:05d}"] = {
+                "Qa": cap.Qa, "Qb": cap.Qb,
+                "current": dict(
+                    zip(_stats_cls(cap.kind)._fields, cap.acc_current)),
+                "stack": {f"{i:02d}": dict(
+                    zip(_stats_cls(cap.kind)._fields, s))
+                    for i, s in enumerate(cap.acc_stack)},
+            }
+        meta = dict(self.meta)
+        meta["pass_kinds"] = {str(p): cap.kind
+                              for p, cap in self.passes.items()}
+        meta["stack_depths"] = {str(p): len(cap.acc_stack)
+                                for p, cap in self.passes.items()}
+        save_pytree(tree, directory, metadata=meta)
+
+    @classmethod
+    def load(cls, directory: str) -> "FitState":
+        if not os.path.exists(os.path.join(directory, "manifest.json")):
+            raise FileNotFoundError(f"no FitState at {directory!r}")
+        flat, meta = load_flat(directory)
+        if meta.get("version") != FITSTATE_VERSION:
+            raise ValueError(
+                f"unsupported FitState version {meta.get('version')}")
+        passes: Dict[int, PassCapture] = {}
+        for p_str, kind in meta["pass_kinds"].items():
+            p = int(p_str)
+            pre = f"p{p:05d}/"
+            fields = _stats_cls(kind)._fields
+            stats = _stats_cls(kind)
+
+            def grab(at: str):
+                return stats(**{f: jnp.asarray(flat[at + f])
+                                for f in fields})
+
+            depth = int(meta["stack_depths"][p_str])
+            passes[p] = PassCapture(
+                kind=kind,
+                Qa=jnp.asarray(flat[pre + "Qa"]),
+                Qb=jnp.asarray(flat[pre + "Qb"]),
+                acc_current=grab(pre + "current/"),
+                acc_stack=tuple(grab(f"{pre}stack/{i:02d}/")
+                                for i in range(depth)))
+        return cls(meta=meta, passes=passes)
+
+
+# --------------------------------------------------------------------------
+# capture: a cold fit that also emits FitState
+# --------------------------------------------------------------------------
+
+
+def _store_snapshot(reader) -> Dict[str, Any]:
+    return {
+        "fingerprint": reader.fingerprint(),
+        "n": int(reader.n), "chunk": int(reader.chunk),
+        "da": int(reader.da), "db": int(reader.db),
+        "dtype": str(reader.dtype), "n_chunks": int(reader.n_chunks),
+        "shards": [[s.sha256_a, s.sha256_b] for s in reader.shards],
+    }
+
+
+def fit_with_state(store, cfg, key, *, topology: Topology = Local(),
+                   engine: Optional[str] = None,
+                   merge_group: int = MERGE_GROUP_CHUNKS,
+                   omega: str = "materialized",
+                   prefetch: int = 2):
+    """Cold fit over a view store that also returns the
+    :class:`FitState` a later :func:`delta_refit` resumes from.
+
+    Drives the same :class:`PassEngine` as ``exec.fit`` (bitwise-equal
+    result) with the ``on_pass_complete`` capture hook attached.
+    ``Local`` and ``Sharded`` topologies; cluster capture is a ROADMAP
+    residual.
+    """
+    from repro.core.rcca import algo_meta
+    from repro.store import ViewStoreReader
+
+    topo = as_topology(topology)
+    reader = store if isinstance(store, ViewStoreReader) \
+        else ViewStoreReader(store)
+    eng = PassEngine(cfg, engine=engine, topology=topo,
+                     merge_group=merge_group, omega=omega)
+
+    captured: Dict[int, PassCapture] = {}
+
+    def capture(pass_idx, kind, acc, Qa, Qb):
+        if pass_idx in (0, cfg.q):
+            st = acc.state()
+            captured[pass_idx] = PassCapture(
+                kind=kind, Qa=Qa, Qb=Qb, acc_current=st["current"],
+                acc_stack=tuple(st["stack"]))
+
+    if isinstance(topo, Local):
+        res = eng.run_stream(
+            lambda start: reader.iter_chunks(start), reader.da, reader.db,
+            key, n_chunks=reader.n_chunks, on_pass_complete=capture)
+    elif isinstance(topo, Sharded):
+        res = eng.run_mesh(reader, key, prefetch=prefetch,
+                           on_pass_complete=capture)
+    else:
+        raise ValueError(
+            f"fit_with_state supports Local and Sharded topologies; "
+            f"{topo.name} capture is a ROADMAP residual")
+
+    meta = {
+        "version": FITSTATE_VERSION,
+        "engine": eng.engine, "omega": eng.omega,
+        "merge_group": int(merge_group), "algo": algo_meta(cfg),
+        **_store_snapshot(reader),
+    }
+    return res, FitState(meta=meta, passes=captured)
+
+
+# --------------------------------------------------------------------------
+# delta detection + refit
+# --------------------------------------------------------------------------
+
+
+def delta_chunks(state: FitState, reader) -> Tuple[int, int]:
+    """Validate that ``reader`` extends the state's store snapshot and
+    return ``(old_n_chunks, new_n_chunks)``.
+
+    The old store must be an exact prefix of the new one: same
+    geometry, the old shard hash list leading the new shard list
+    unchanged, and the old row count aligned to a merge-group boundary
+    (see the module docstring for why).  ``old == new`` (no delta) is
+    valid and returns equal counts.
+    """
+    m = state.meta
+    for field in ("da", "db", "chunk", "dtype"):
+        got = str(getattr(reader, field)) if field == "dtype" \
+            else int(getattr(reader, field))
+        want = m[field] if field == "dtype" else int(m[field])
+        if got != want:
+            raise ValueError(
+                f"store geometry changed: {field} was {want!r}, "
+                f"now {got!r} — not an append")
+    old_shards = [tuple(s) for s in m["shards"]]
+    new_shards = [(s.sha256_a, s.sha256_b) for s in reader.shards]
+    if len(new_shards) < len(old_shards) or \
+            new_shards[:len(old_shards)] != old_shards:
+        raise ValueError(
+            "store is not an append of the fitted snapshot: the old "
+            "shard list is not a hash-identical prefix of the new "
+            "manifest (rewritten or reordered shards cannot delta-refit)")
+    old_n, chunk = int(m["n"]), int(m["chunk"])
+    if reader.n < old_n:
+        raise ValueError(f"store shrank: {old_n} rows fitted, {reader.n} now")
+    group_rows = chunk * int(m["merge_group"])
+    if reader.n > old_n and old_n % group_rows:
+        raise ValueError(
+            f"delta refit needs the fitted corpus to end on a "
+            f"merge-group boundary: {old_n} rows is not a multiple of "
+            f"chunk × merge_group = {group_rows} (append at group "
+            "granularity, or cold-fit)")
+    # ceil: a ragged old corpus is only reachable in the no-delta case
+    # (the append path above required chunk alignment), where the old
+    # chunk count must equal the reader's for the re-finalize shortcut
+    return -(-old_n // chunk), reader.n_chunks
+
+
+def _restore_acc(cap: PassCapture, init_fn, old_nc: int, new_nc: int,
+                 merge_group: int) -> SegmentedAccumulator:
+    """The persisted accumulator as the cold fit's mid-pass state at
+    chunk ``old_nc`` of a ``new_nc``-chunk corpus."""
+    acc = SegmentedAccumulator.structure(init_fn, new_nc, merge_group,
+                                         old_nc)
+    acc.load_state(cap.acc_state())
+    return acc
+
+
+def _fold_range(eng: PassEngine, reader, topo, acc, kind: str, seeded: bool,
+                Qa, Qb, lo: int, hi: int, *, prefetch: int,
+                pass_idx: int) -> None:
+    """Fold chunks [lo, hi) of the store into ``acc`` — the same fold
+    the cold fit runs, restricted to a range.  ``lo`` is always a
+    merge-group boundary here (the alignment contract), so the Sharded
+    form can hand whole groups to the device fold."""
+    from repro.core.rcca import seeded_update_fn, update_fn
+
+    attrs = {"kind": kind, "engine": eng.engine, "pass_idx": pass_idx,
+             "site": "delta"}
+    if isinstance(topo, Sharded):
+        mesh = topo.build_mesh()
+        raw = seeded_update_fn(kind, eng.cfg.sketch, eng.cfg.dtype) \
+            if seeded else update_fn(kind, eng.engine)
+        jit = eng._updaters(seeded)[kind]
+        G = eng.merge_group
+        fold_groups_on_mesh(
+            reader.get_chunk, range(lo // G, -(-hi // G)), raw, jit,
+            eng._init_fn(kind, reader.da, reader.db), Qa, Qb, mesh=mesh,
+            merge_group=G, n_chunks=hi, full_chunks=n_full_chunks(reader),
+            emit=acc.push_group, prefetch=prefetch, span_attrs=attrs,
+            cost_fn=eng.cost_fn(kind, seeded))
+    else:
+        fn = eng._updaters(seeded)[kind]
+        run_fold(((c, reader.get_chunk(c)) for c in range(lo, hi)),
+                 fn, acc, Qa, Qb, span_attrs=attrs,
+                 cost_fn=eng.cost_fn(kind, seeded))
+
+
+def delta_refit(state: FitState, store, *, mode: str = "exact",
+                topology: Topology = Local(), prefetch: int = 2):
+    """Refit against an extended store by folding only what changed.
+
+    Returns ``(RCCAResult, FitState)`` — the refreshed result and the
+    state to persist for the *next* refit.  ``mode`` picks the
+    exact-vs-frozen trade (module docstring); the topology only shapes
+    the delta/re-fold execution, never the values (the canonical-tree
+    argument).  With no appended rows, re-finalizes from state without
+    touching the store.
+    """
+    from repro.core.rcca import power_update_Q
+    from repro.store import ViewStoreReader
+
+    if mode not in ("exact", "frozen"):
+        raise ValueError(f"unknown mode {mode!r}; expected exact or frozen")
+    topo = as_topology(topology)
+    if not isinstance(topo, (Local, Sharded)):
+        raise ValueError(
+            f"delta_refit supports Local and Sharded topologies; "
+            f"{topo.name} is a ROADMAP residual")
+    reader = store if isinstance(store, ViewStoreReader) \
+        else ViewStoreReader(store)
+
+    m = state.meta
+    cfg = _config_from_algo(m["algo"])
+    q = cfg.q
+    eng = PassEngine(cfg, engine=m["engine"], topology=topo,
+                     merge_group=int(m["merge_group"]), omega=m["omega"])
+    old_nc, new_nc = delta_chunks(state, reader)
+    da, db = reader.da, reader.db
+    G = eng.merge_group
+
+    with obs.span("delta_refit", mode=mode, old_chunks=old_nc,
+                  new_chunks=new_nc, engine=eng.engine):
+        cap0 = state.passes[0]
+        capF = state.passes[q]
+        seeded0 = eng.seeds_in_slots
+
+        if new_nc == old_nc:  # nothing appended: re-finalize only
+            accF = _restore_acc(capF, eng._init_fn(capF.kind, da, db),
+                                old_nc, new_nc, G)
+            res = eng._finish(accF.result(), *eng._boundary_Q(
+                capF.Qa, capF.Qb, q, da, db), da, db)
+            res.diagnostics["delta"] = {"mode": mode, "delta_chunks": 0}
+            return res, state
+
+        # pass 0 over the delta only — exact for both modes, because Ω
+        # is derived from the fit key, not the data
+        acc0 = _restore_acc(cap0, eng._init_fn(cap0.kind, da, db),
+                            old_nc, new_nc, G)
+        _fold_range(eng, reader, topo, acc0, cap0.kind, seeded0,
+                    cap0.Qa, cap0.Qb, old_nc, new_nc,
+                    prefetch=prefetch, pass_idx=0)
+        st0 = acc0.state()
+        new_cap0 = PassCapture(kind=cap0.kind, Qa=cap0.Qa, Qb=cap0.Qb,
+                               acc_current=st0["current"],
+                               acc_stack=tuple(st0["stack"]))
+
+        new_meta = {**{k: m[k] for k in STATE_BINDING},
+                    **_store_snapshot(reader)}
+
+        if mode == "frozen" and q > 0:
+            # delta into the final accumulator under the frozen bases
+            accF = _restore_acc(capF, eng._init_fn(capF.kind, da, db),
+                                old_nc, new_nc, G)
+            _fold_range(eng, reader, topo, accF, capF.kind, False,
+                        capF.Qa, capF.Qb, old_nc, new_nc,
+                        prefetch=prefetch, pass_idx=q)
+            res = eng._finish(accF.result(), capF.Qa, capF.Qb, da, db)
+            stF = accF.state()
+            new_capF = PassCapture(kind=capF.kind, Qa=capF.Qa, Qb=capF.Qb,
+                                   acc_current=stF["current"],
+                                   acc_stack=tuple(stF["stack"]))
+            res.diagnostics["delta"] = {
+                "mode": mode, "delta_chunks": new_nc - old_nc,
+                "refolded_chunks": new_nc - old_nc}
+            return res, FitState(meta=new_meta,
+                                 passes={0: new_cap0, q: new_capF})
+
+        # exact mode (and q = 0, where frozen degenerates to exact):
+        # rotate Q from the full-corpus pass-0 stats, then re-fold the
+        # whole store for passes 1..q — exactly the cold fit's loop
+        refolded = new_nc - old_nc
+        if q == 0:
+            Qa, Qb = eng._boundary_Q(cap0.Qa, cap0.Qb, 0, da, db)
+            res = eng._finish(acc0.result(), Qa, Qb, da, db)
+            res.diagnostics["delta"] = {
+                "mode": "exact", "delta_chunks": new_nc - old_nc,
+                "refolded_chunks": refolded}
+            return res, FitState(meta=new_meta, passes={0: new_cap0})
+
+        Qa, Qb = cap0.Qa, cap0.Qb
+        if cfg.center:  # μ corrections need the actual Ω
+            Qa, Qb = eng._boundary_Q(Qa, Qb, 0, da, db)
+        Qa, Qb = power_update_Q(acc0.result(), Qa, Qb, cfg)
+        acc = None
+        for pass_idx in range(1, q + 1):
+            kind = "power" if pass_idx < q else "final"
+            acc = SegmentedAccumulator(eng._init_fn(kind, da, db),
+                                       new_nc, G)
+            _fold_range(eng, reader, topo, acc, kind, False, Qa, Qb,
+                        0, new_nc, prefetch=prefetch, pass_idx=pass_idx)
+            refolded += new_nc
+            if kind == "power":
+                Qa, Qb = power_update_Q(acc.result(), Qa, Qb, cfg)
+
+        res = eng._finish(acc.result(), Qa, Qb, da, db)
+        stF = acc.state()
+        new_capF = PassCapture(kind="final", Qa=Qa, Qb=Qb,
+                               acc_current=stF["current"],
+                               acc_stack=tuple(stF["stack"]))
+        res.diagnostics["delta"] = {
+            "mode": "exact", "delta_chunks": new_nc - old_nc,
+            "refolded_chunks": refolded}
+        return res, FitState(meta=new_meta, passes={0: new_cap0, q: new_capF})

@@ -445,21 +445,27 @@ class PassEngine:
 
     def run_stream(self, source_factory, da: int, db: int, key, *,
                    n_chunks: Optional[int] = None, resume_state=None,
-                   on_pass_end=None):
+                   on_pass_end=None, on_pass_complete=None):
         """All q+1 passes over a sequential chunk source → RCCAResult.
 
         This is the exact contract ``randomized_cca_iterator`` has
         always exposed — see its docstring for the resume-state and
         seekable-factory details; it is now a shell over this method.
+        ``on_pass_complete(pass_idx, kind, acc, Qa, Qb)`` fires once per
+        pass after its fold finishes, with the accumulator and the
+        Qa/Qb payload the pass consumed (seeds on a seeded pass 0) —
+        the capture point ``repro.exec.delta`` persists FitState from.
         """
         with obs.span("fit", site="stream", engine=self.engine):
             return self._run_stream(source_factory, da, db, key,
                                     n_chunks=n_chunks,
                                     resume_state=resume_state,
-                                    on_pass_end=on_pass_end)
+                                    on_pass_end=on_pass_end,
+                                    on_pass_complete=on_pass_complete)
 
     def _run_stream(self, source_factory, da, db, key, *,
-                    n_chunks=None, resume_state=None, on_pass_end=None):
+                    n_chunks=None, resume_state=None, on_pass_end=None,
+                    on_pass_complete=None):
         from repro.core.rcca import power_update_Q
 
         cfg = self.cfg
@@ -502,6 +508,8 @@ class PassEngine:
                 start_chunk = 0
                 if sanitize.enabled():
                     sanitize.observe("pass_end", acc.result())
+                if on_pass_complete is not None:
+                    on_pass_complete(pass_idx, kind, acc, Qa, Qb)
                 if kind == "power":
                     if cfg.center:  # μ corrections need the actual Ω
                         Qa, Qb = self._boundary_Q(Qa, Qb, pass_idx, da, db)
@@ -516,7 +524,8 @@ class PassEngine:
 
     # -- device-parallel (Sharded) ---------------------------------------
 
-    def run_mesh(self, access, key, *, mesh=None, prefetch: int = 2):
+    def run_mesh(self, access, key, *, mesh=None, prefetch: int = 2,
+                 on_pass_complete=None):
         """All q+1 passes with merge groups folded one-per-device over
         the local mesh (the in-process ``Sharded`` topology) — bitwise
         identical to :meth:`run_stream` on the same chunks.
@@ -527,11 +536,15 @@ class PassEngine:
         checkpointing is a sequential-stream feature; device-parallel
         passes restart at pass granularity.  ``prefetch`` is the gather
         read-ahead depth (see :func:`fold_groups_on_mesh`).
+        ``on_pass_complete`` is the same per-pass capture hook as
+        :meth:`run_stream`.
         """
         with obs.span("fit", site="mesh", engine=self.engine):
-            return self._run_mesh(access, key, mesh=mesh, prefetch=prefetch)
+            return self._run_mesh(access, key, mesh=mesh, prefetch=prefetch,
+                                  on_pass_complete=on_pass_complete)
 
-    def _run_mesh(self, access, key, *, mesh=None, prefetch: int = 2):
+    def _run_mesh(self, access, key, *, mesh=None, prefetch: int = 2,
+                  on_pass_complete=None):
         from repro.core.rcca import (power_update_Q, seeded_update_fn,
                                      update_fn)
 
@@ -580,6 +593,8 @@ class PassEngine:
                     cost_fn=self.cost_fn(kind, seeded))
                 if sanitize.enabled():
                     sanitize.observe("pass_end", acc.result())
+                if on_pass_complete is not None:
+                    on_pass_complete(pass_idx, kind, acc, Qa, Qb)
                 if kind == "power":
                     if cfg.center:  # μ corrections need the actual Ω
                         Qa, Qb = self._boundary_Q(Qa, Qb, pass_idx, da, db)

@@ -1,4 +1,4 @@
-"""CLI: ``python -m repro.obs {report,trajectory} ...``."""
+"""CLI: ``python -m repro.obs {report,trajectory,export-trace} ...``."""
 from __future__ import annotations
 
 import sys
@@ -7,17 +7,22 @@ import sys
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     if not argv or argv[0] in ("-h", "--help"):
-        print("usage: python -m repro.obs {report,trajectory} [args...]\n"
-              "  report      timeline + roofline from an RCCA_TRACE dir\n"
-              "  trajectory  fold results/BENCH_*.json into TRAJECTORY.json")
+        print("usage: python -m repro.obs {report,trajectory,export-trace}"
+              " [args...]\n"
+              "  report        timeline + roofline from an RCCA_TRACE dir\n"
+              "  trajectory    fold results/BENCH_*.json into TRAJECTORY.json\n"
+              "  export-trace  RCCA_TRACE dir -> chrome://tracing JSON")
         return 0 if argv else 2
     cmd, rest = argv[0], argv[1:]
     if cmd == "report":
         from repro.obs.report import main as run
     elif cmd == "trajectory":
         from repro.obs.trajectory import main as run
+    elif cmd == "export-trace":
+        from repro.obs.chrometrace import main as run
     else:
-        print(f"unknown subcommand {cmd!r} (expected report or trajectory)")
+        print(f"unknown subcommand {cmd!r} "
+              "(expected report, trajectory or export-trace)")
         return 2
     return run(rest)
 

@@ -1,0 +1,147 @@
+"""Export an ``RCCA_TRACE`` directory as Chrome trace-event JSON.
+
+    python -m repro.obs export-trace rcca_trace -o trace.json
+
+The output loads directly in ``chrome://tracing`` or Perfetto
+(https://ui.perfetto.dev) and shows the same data ``repro.obs report``
+aggregates — but on a zoomable timeline: one track per process
+(coordinator / workers / driver), nested spans as complete ("X")
+events, counters as counter ("C") tracks, and cluster-protocol events
+as instants ("i").
+
+Mapping from the obs JSONL stream (:mod:`repro.obs.trace`):
+
+======================  =============================================
+obs record              trace-event record
+======================  =============================================
+``ev: span``            ``ph: "X"`` complete event (ts + dur, µs);
+                        nesting recovered by Chrome from overlap, the
+                        span tree's parent links ride in ``args``
+``ev: ctr``             ``ph: "C"`` counter sample for numeric fields
+                        (strings ride in a parallel instant's args)
+``ev: proto``           ``ph: "i"`` instant (op + path in args)
+process ``ctx.role``    ``ph: "M" process_name`` metadata
+======================  =============================================
+
+Timestamps: obs records carry epoch-seconds wall clocks shared across
+processes; the exporter rebases to the earliest record so Perfetto's
+timeline starts at zero.  Spans are placed on the recording thread's
+track (``tid`` = the span stack; obs spans are per-thread, but the
+stream does not record thread ids, so all of a process's spans share
+one track — nesting still renders because span intervals from one
+process never partially overlap).
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional
+
+from repro.obs.trace import load_events
+
+
+def _numeric(fields: Dict[str, Any]) -> Dict[str, float]:
+    out = {}
+    for k, v in fields.items():
+        if isinstance(v, bool):
+            out[k] = float(v)
+        elif isinstance(v, (int, float)):
+            out[k] = float(v)
+    return out
+
+
+def convert(events: List[dict]) -> Dict[str, Any]:
+    """Obs records → ``{"traceEvents": [...], ...}`` (JSON Object
+    Format, so Perfetto accepts metadata alongside the array)."""
+    spans = [ev for ev in events if ev.get("ev") == "span"]
+    ctrs = [ev for ev in events if ev.get("ev") == "ctr"]
+    protos = [ev for ev in events if ev.get("ev") == "proto"]
+    t0 = min((float(ev["t"]) for ev in events if "t" in ev), default=0.0)
+
+    def us(t: float) -> float:
+        return (t - t0) * 1e6
+
+    out: List[Dict[str, Any]] = []
+    roles: Dict[int, str] = {}
+    for ev in spans:
+        ctx = ev.get("ctx") or {}
+        pid = int(ev.get("pid", 0))
+        if "role" in ctx:
+            roles.setdefault(pid, str(ctx["role"]))
+        args = dict(ev.get("attrs") or {})
+        args["sid"] = ev.get("sid")
+        if ev.get("parent") is not None:
+            args["parent_sid"] = ev["parent"]
+        out.append({
+            "ph": "X", "name": str(ev.get("name", "?")),
+            "pid": pid, "tid": pid,
+            "ts": us(float(ev["t"])),
+            "dur": float(ev.get("dur", 0.0)) * 1e6,
+            "cat": "span", "args": args,
+        })
+    for ev in ctrs:
+        pid = int(ev.get("pid", 0))
+        fields = ev.get("fields") or {}
+        nums = _numeric(fields)
+        name = str(ev.get("name", "?"))
+        # counters keyed by a string field (kernel=..., site=...) split
+        # into one counter track per key value, so the series don't mix
+        tags = [f"{k}={v}" for k, v in sorted(fields.items())
+                if isinstance(v, str)]
+        track = name if not tags else f"{name}[{','.join(tags)}]"
+        if nums:
+            out.append({
+                "ph": "C", "name": track, "pid": pid,
+                "ts": us(float(ev.get("t", t0))), "cat": "ctr",
+                "args": nums,
+            })
+        else:  # nothing numeric to plot: keep it visible as an instant
+            out.append({
+                "ph": "i", "name": track, "pid": pid, "tid": pid,
+                "ts": us(float(ev.get("t", t0))), "s": "p",
+                "cat": "ctr", "args": dict(fields),
+            })
+    for ev in protos:
+        pid = int(ev.get("pid", 0))
+        out.append({
+            "ph": "i", "name": f"proto:{ev.get('op', '?')}",
+            "pid": pid, "tid": pid,
+            "ts": us(float(ev.get("t", t0))), "s": "p",
+            "cat": "proto",
+            "args": {"path": ev.get("path"), **(ev.get("meta") or {})},
+        })
+    for pid, role in sorted(roles.items()):
+        out.append({"ph": "M", "name": "process_name", "pid": pid,
+                    "args": {"name": f"{role} (pid {pid})"}})
+    out.sort(key=lambda e: e.get("ts", 0.0))
+    return {"traceEvents": out, "displayTimeUnit": "ms",
+            "otherData": {"source": "repro.obs export-trace",
+                          "t0_epoch_s": t0}}
+
+
+def export(trace_path: str, out_path: str) -> Dict[str, int]:
+    """Read a trace file/dir, write Chrome JSON; returns event counts."""
+    events = load_events(trace_path)
+    doc = convert(events)
+    with open(out_path, "w") as f:
+        json.dump(doc, f)
+        f.write("\n")
+    return {"events_in": len(events), "events_out": len(doc["traceEvents"])}
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs export-trace", description=__doc__)
+    ap.add_argument("trace", help="trace file or directory (RCCA_TRACE dir)")
+    ap.add_argument("-o", "--out", default="trace.json",
+                    help="output path (default: trace.json)")
+    args = ap.parse_args(argv)
+    n = export(args.trace, args.out)
+    print(f"{args.out}: {n['events_out']} trace events "
+          f"(from {n['events_in']} obs records) — open in chrome://tracing "
+          "or https://ui.perfetto.dev")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

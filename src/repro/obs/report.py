@@ -195,6 +195,31 @@ def analyze(path: str) -> Dict[str, Any]:
                        "fit_s": round(fit_s, 4),
                        "share": round(merge_s / fit_s, 4) if fit_s else None}
 
+    # -- worker liveness ----------------------------------------------
+    # heartbeat-age samples the coordinator's barrier loop emits (~1 Hz
+    # per live worker): per-shard max/last age sits next to the compute
+    # spans, so a stale-but-alive worker is visible in the same report
+    # that shows where the time went
+    beats: Dict[int, Dict[str, Any]] = {}
+    for ev in events:
+        if ev.get("ev") == "ctr" and ev.get("name") == "heartbeat":
+            f = ev.get("fields", {})
+            s = beats.setdefault(int(f.get("shard", -1)),
+                                 {"samples": 0, "max_age_s": 0.0,
+                                  "last_age_s": 0.0, "passes": set()})
+            age = float(f.get("age_s", 0.0))
+            s["samples"] += 1
+            s["max_age_s"] = max(s["max_age_s"], age)
+            s["last_age_s"] = age
+            s["passes"].add(int(f.get("pass_idx", -1)))
+    report["liveness"] = {
+        str(shard): {"samples": v["samples"],
+                     "max_age_s": round(v["max_age_s"], 3),
+                     "last_age_s": round(v["last_age_s"], 3),
+                     "passes": sorted(v["passes"])}
+        for shard, v in sorted(beats.items())
+    }
+
     # -- redispatches + protocol verdict ------------------------------
     report["redispatches"] = sum(
         int(ev.get("fields", {}).get("groups", 0)) for ev in events
@@ -261,6 +286,14 @@ def render(report: Dict[str, Any]) -> str:
     out.append("")
     out.append(f"merge tree: {m['merge_s']:.3f}s of {m['fit_s']:.3f}s "
                f"coordinator fit wall ({share})")
+    if report.get("liveness"):
+        out.append("")
+        out.append("worker liveness (heartbeat ages seen at the barrier)")
+        for shard, v in report["liveness"].items():
+            passes = ",".join(str(p) for p in v["passes"])
+            out.append(f"  shard {shard:>3}  samples={v['samples']:<5d} "
+                       f"max_age={v['max_age_s']:.3f}s "
+                       f"last_age={v['last_age_s']:.3f}s  passes=[{passes}]")
     if report["redispatches"]:
         out.append(f"redispatched groups: {report['redispatches']}")
     if "protocol" in report:

@@ -1,0 +1,30 @@
+"""Model serving: versioned CCA artifacts, batched projection, drift.
+
+The serving half of the ROADMAP's "millions of users" story, layered on
+the incremental-fit path (:mod:`repro.exec.delta`):
+
+- :class:`ModelRegistry` — versioned, atomically-published, content-
+  hashed model artifacts (:mod:`repro.serve.registry`);
+- :class:`BatchedProjector` — coalesces concurrent projection requests
+  into padded device batches, with zero-drop hot-swap between batches
+  (:mod:`repro.serve.projector`);
+- :class:`CorpusIndex` — cross-view top-k retrieval against an indexed
+  corpus of projected rows;
+- :class:`DriftMonitor` — canonical-correlation decay on held-out
+  traffic emits the refit-needed signal that feeds
+  :func:`repro.exec.delta_refit` (:mod:`repro.serve.drift`).
+
+``python -m repro.launch.cca_serve`` drives the full loop.
+"""
+
+from .drift import DriftMonitor
+from .projector import BatchedProjector, CorpusIndex
+from .registry import ModelRegistry, ServedModel
+
+__all__ = [
+    "BatchedProjector",
+    "CorpusIndex",
+    "DriftMonitor",
+    "ModelRegistry",
+    "ServedModel",
+]

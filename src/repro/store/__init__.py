@@ -12,6 +12,7 @@ from .format import (
     ShardInfo,
     ViewStoreReader,
     ViewStoreWriter,
+    extend_chunks,
     ingest_chunks,
     ingest_planted,
     shard_chunks,
@@ -31,6 +32,7 @@ __all__ = [
     "ViewStoreReader",
     "ViewStoreWriter",
     "choose_pipeline",
+    "extend_chunks",
     "ingest_chunks",
     "ingest_planted",
     "prefetched",

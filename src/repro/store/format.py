@@ -158,12 +158,54 @@ class ViewStoreWriter:
         if os.path.exists(self._tmp):
             shutil.rmtree(self._tmp)
         os.makedirs(self._tmp, exist_ok=True)
+        self._base_shards: list[ShardInfo] = []
+        self._base_n = 0
         self._shards: list[ShardInfo] = []
         self._buf_a: list[np.ndarray] = []
         self._buf_b: list[np.ndarray] = []
         self._buffered = 0
         self._n = 0
         self._closed = False
+
+    @classmethod
+    def append_to(cls, path: str,
+                  rows_per_shard: Optional[int] = None) -> "ViewStoreWriter":
+        """Open a *published* store for shard append.
+
+        Geometry (da/db/dtype/chunk) is inherited from the existing
+        manifest; new rows land in new ``shard_{idx}`` files continuing
+        the index sequence.  ``close()`` moves the staged shard files
+        into the published directory and then atomically replaces the
+        manifest — the manifest swap is the single publish point, so:
+
+        - readers opened before the append keep a consistent snapshot
+          (their manifest references only the original, immutable shard
+          files, which are never rewritten or deleted);
+        - readers opened after see the extended store;
+        - a kill mid-append leaves at worst unreferenced extra shard
+          files next to the *old* manifest — still a consistent store
+          (the delta is simply not yet published).
+        """
+        if not os.path.exists(os.path.join(path, MANIFEST)):
+            raise FileNotFoundError(
+                f"{path!r} is not a published view store; use "
+                "ViewStoreWriter(...) for initial ingest")
+        with open(os.path.join(path, MANIFEST)) as f:
+            manifest = json.load(f)
+        if manifest.get("version") != STORE_VERSION:
+            raise ValueError(
+                f"unsupported store version {manifest.get('version')}")
+        w = cls(path, manifest["da"], manifest["db"],
+                dtype=manifest["dtype"], chunk=manifest["chunk"],
+                rows_per_shard=rows_per_shard)
+        w._base_shards = [ShardInfo.from_json(s) for s in manifest["shards"]]
+        w._base_n = int(manifest["n"])
+        w._n = w._base_n
+        return w
+
+    @property
+    def _appending(self) -> bool:
+        return bool(self._base_shards) or self._base_n > 0
 
     # -- ingestion --------------------------------------------------------
 
@@ -193,7 +235,7 @@ class ViewStoreWriter:
         self._buf_a = [tail_a] if tail_a.shape[0] else []
         self._buf_b = [tail_b] if tail_b.shape[0] else []
         self._buffered -= rows
-        idx = len(self._shards)
+        idx = len(self._base_shards) + len(self._shards)
         fa = f"shard_{idx:05d}.a.npy"
         fb = f"shard_{idx:05d}.b.npy"
         store_dt = _storage_dtype(self.dtype)
@@ -227,11 +269,26 @@ class ViewStoreWriter:
             "db": self.db,
             "dtype": self.dtype,
             "chunk": self.chunk,
-            "shards": [s.to_json() for s in self._shards],
+            "shards": [s.to_json()
+                       for s in (*self._base_shards, *self._shards)],
         }
-        # staging-dir write; the rename below IS the atomic publish
+        # staging-dir write; the rename/replace below IS the atomic publish
         with open(os.path.join(self._tmp, MANIFEST), "w") as f:  # rcca: noqa[RCCA005]
             json.dump(manifest, f, indent=1)
+        if self._appending:
+            # append publish: new shard files move into the live store
+            # first (fresh names — nothing existing is touched, so open
+            # readers stay consistent), then one atomic manifest replace
+            # flips the store to the extended snapshot
+            for s in self._shards:
+                for fname in (s.file_a, s.file_b):
+                    os.replace(os.path.join(self._tmp, fname),
+                               os.path.join(self.path, fname))
+            os.replace(os.path.join(self._tmp, MANIFEST),
+                       os.path.join(self.path, MANIFEST))
+            shutil.rmtree(self._tmp, ignore_errors=True)
+            self._closed = True
+            return manifest
         # atomic publish, also when replacing: move the old store aside
         # BEFORE the rename so a kill can never leave a directory whose
         # manifest survives with its shards half-deleted
@@ -273,6 +330,17 @@ def ingest_chunks(path: str, chunks: Iterable[Tuple[np.ndarray, np.ndarray]],
                          chunk=chunk, rows_per_shard=rows_per_shard) as w:
         w.append(a0, b0)
         for a, b in it:
+            w.append(a, b)
+    return ViewStoreReader(path)
+
+
+def extend_chunks(path: str, chunks: Iterable[Tuple[np.ndarray, np.ndarray]],
+                  *, rows_per_shard: Optional[int] = None) -> "ViewStoreReader":
+    """Append an (a, b) row-block iterator to a *published* store and
+    atomically re-publish (see :meth:`ViewStoreWriter.append_to`).
+    Returns a reader over the extended store."""
+    with ViewStoreWriter.append_to(path, rows_per_shard=rows_per_shard) as w:
+        for a, b in chunks:
             w.append(a, b)
     return ViewStoreReader(path)
 

@@ -1,0 +1,652 @@
+"""Serving tier + incremental delta-refits (repro.serve, repro.exec.delta).
+
+The acceptance bars:
+
+- DELTA PARITY: ``delta_refit(fit(chunks 0..n), store 0..m)`` in exact
+  mode is bitwise identical to a cold fit of chunks 0..m — for both
+  engines and two topologies.  Not even the last ulp may move, because
+  the delta folds into the same canonical pairwise tree the cold fit
+  builds.
+- ZERO-DROP HOT-SWAP: concurrent request batches across a version flip
+  all complete, each stamped with exactly one version whose projection
+  matrix reproduces the embedding bitwise — no dropped and no
+  mixed-version responses.
+- DRIFT → REFIT → RECOVERY: an injected distribution shift trips the
+  monitor's refit signal; the refreshed model restores the held-out
+  correlation.
+
+Satellites ride along: store append semantics (atomic re-publish, old
+readers keep their snapshot), the worker-side span combiner (bitwise
+parity with individual group partials), the Chrome-trace exporter and
+the heartbeat-liveness report section.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rcca import (
+    RCCAConfig,
+    SegmentedAccumulator,
+    stats_init_fn,
+)
+from repro.data import PlantedCCAData
+from repro.exec import (
+    Cluster,
+    FitState,
+    Local,
+    Sharded,
+    SpanCombiner,
+    delta_refit,
+    fit_with_state,
+)
+from repro.exec import fit as exec_fit
+from repro.serve import (
+    BatchedProjector,
+    CorpusIndex,
+    DriftMonitor,
+    ModelRegistry,
+)
+from repro.serve.drift import paired_correlation
+from repro.store import ViewStoreReader, extend_chunks, ingest_chunks
+
+N0, N1, DA, DB, CHUNK = 1024, 1536, 28, 20, 128  # 8-chunk prefix, 12 total
+G = 2  # merge group; chunk*G = 256 divides N0: the delta alignment contract
+CFG = RCCAConfig(k=4, p=8, q=1, nu=0.01, center=True)
+KEY = 5
+C0, C1 = N0 // CHUNK, N1 // CHUNK
+
+
+@pytest.fixture(scope="module")
+def data():
+    # rows past chunk C1 never enter a store: held-out serving traffic
+    return PlantedCCAData(n=N1 + 512, da=DA, db=DB, rank=5, noise=0.4,
+                          seed=11, chunk=CHUNK)
+
+
+def _ingest(path, data, lo, hi):
+    return ingest_chunks(path, (data.get_chunk(i) for i in range(lo, hi)),
+                         chunk=CHUNK)
+
+
+@pytest.fixture(scope="module")
+def old_store(tmp_path_factory, data):
+    """Chunks [0, C0): the corpus the stateful fit sees first."""
+    return _ingest(str(tmp_path_factory.mktemp("serve") / "old"), data, 0, C0)
+
+
+@pytest.fixture(scope="module")
+def grown_store(tmp_path_factory, data):
+    """Chunks [0, C0) ingested, then [C0, C1) APPENDED — the store a
+    delta refit walks.  Its shard prefix is bitwise the old store's."""
+    path = str(tmp_path_factory.mktemp("serve") / "grown")
+    _ingest(path, data, 0, C0)
+    extend_chunks(path, (data.get_chunk(i) for i in range(C0, C1)))
+    return ViewStoreReader(path)
+
+
+@pytest.fixture(scope="module")
+def fit_old(old_store):
+    """(result, FitState) of the stateful prefix fit — jnp/Local."""
+    return fit_with_state(old_store, CFG, jax.random.PRNGKey(KEY),
+                          merge_group=G, engine="jnp")
+
+
+@pytest.fixture(scope="module")
+def cold(grown_store):
+    """Per-engine cold fits of the grown store: the parity reference."""
+    cache = {}
+
+    def get(engine):
+        if engine not in cache:
+            cache[engine] = fit_with_state(
+                grown_store, CFG, jax.random.PRNGKey(KEY),
+                merge_group=G, engine=engine)
+        return cache[engine]
+
+    return get
+
+
+def assert_bit_identical(r1, r2):
+    for name in ("Xa", "Xb", "rho", "Qa", "Qb"):
+        a1, a2 = np.asarray(getattr(r1, name)), np.asarray(getattr(r2, name))
+        assert np.array_equal(a1, a2), f"{name} differs"
+
+
+# -- store append semantics (the manifest re-publish contract) -------------
+
+
+def test_append_matches_cold_ingest(grown_store, tmp_path, data):
+    """ingest [0,C0) + append [C0,C1) serves the same rows as one cold
+    ingest of [0,C1) — append is invisible to readers of the data."""
+    cold_reader = _ingest(str(tmp_path / "cold"), data, 0, C1)
+    assert grown_store.n == cold_reader.n == N1
+    assert grown_store.n_chunks == C1
+    for c in range(C1):
+        a1, b1 = grown_store.get_chunk(c)
+        a2, b2 = cold_reader.get_chunk(c)
+        assert np.array_equal(a1, a2) and np.array_equal(b1, b2), c
+
+
+def test_append_old_reader_keeps_snapshot(tmp_path, data):
+    """A reader opened before the append keeps a consistent view of the
+    old corpus: same n, same bytes — the manifest flip is atomic and
+    old shard files are immutable."""
+    path = str(tmp_path / "snap")
+    _ingest(path, data, 0, C0)
+    old = ViewStoreReader(path)
+    before = [old.get_chunk(c) for c in range(C0)]
+    extend_chunks(path, (data.get_chunk(i) for i in range(C0, C1)))
+    assert old.n == N0 and old.n_chunks == C0
+    for c in range(C0):  # re-read through the old manifest
+        a, b = old.get_chunk(c)
+        assert np.array_equal(a, before[c][0])
+        assert np.array_equal(b, before[c][1])
+    assert ViewStoreReader(path).n == N1  # new readers see the append
+
+
+def test_append_abort_leaves_published_store_intact(tmp_path, data):
+    """An append that dies mid-stream must not tear the published
+    store: the manifest still describes the old corpus and a later
+    append succeeds."""
+    from repro.store import ViewStoreWriter
+
+    path = str(tmp_path / "abort")
+    _ingest(path, data, 0, C0)
+    with pytest.raises(RuntimeError, match="boom"):
+        with ViewStoreWriter.append_to(path) as w:
+            w.append(*data.get_chunk(C0))
+            raise RuntimeError("boom")
+    r = ViewStoreReader(path)
+    assert r.n == N0 and r.n_chunks == C0
+    r.verify()  # every published shard hash still checks out
+    extend_chunks(path, (data.get_chunk(i) for i in range(C0, C1)))
+    assert ViewStoreReader(path).n == N1
+
+
+def test_append_requires_published_store(tmp_path, data):
+    with pytest.raises((FileNotFoundError, ValueError)):
+        extend_chunks(str(tmp_path / "missing"),
+                      (data.get_chunk(i) for i in range(C0, C1)))
+
+
+# -- FitState persistence ---------------------------------------------------
+
+
+def test_fitstate_save_load_roundtrip(fit_old, grown_store, tmp_path):
+    """A FitState survives the disk round-trip losslessly: same meta,
+    and a delta refit from the loaded state is bitwise the refit from
+    the in-memory one."""
+    res, state = fit_old
+    d = str(tmp_path / "fitstate")
+    state.save(d)
+    loaded = FitState.load(d)
+    # save() adds pass bookkeeping; everything the fit recorded survives
+    for k, v in state.meta.items():
+        assert loaded.meta[k] == v, k
+    r_mem, _ = delta_refit(state, grown_store)
+    r_disk, _ = delta_refit(loaded, grown_store)
+    assert_bit_identical(r_mem, r_disk)
+
+
+# -- delta refits: the bitwise-parity tentpole ------------------------------
+
+
+@pytest.mark.parametrize("engine", ["jnp", "kernels"])
+@pytest.mark.parametrize("topology", [Local(), Sharded()],
+                         ids=["local", "sharded"])
+def test_delta_refit_bitwise_parity(old_store, grown_store, cold,
+                                    engine, topology):
+    """fit(0..m) == delta_refit(fit(0..n), store 0..m) — bitwise, for
+    both engines and two topologies."""
+    res0, state = fit_with_state(old_store, CFG, jax.random.PRNGKey(KEY),
+                                 merge_group=G, engine=engine,
+                                 topology=topology)
+    res, state2 = delta_refit(state, grown_store, topology=topology)
+    ref, _ = cold(engine)
+    assert_bit_identical(res, ref)
+    d = res.diagnostics["delta"]
+    assert d["mode"] == "exact"
+    assert d["delta_chunks"] == C1 - C0
+    assert state2.meta["n"] == N1  # the new state binds the grown corpus
+
+
+def test_delta_refit_seeded_omega(old_store, grown_store):
+    """Seeded on-the-fly Ω is key-derived, not data-derived — pass 0 of
+    an exact delta refit stays delta-only and the result stays bitwise
+    the cold seeded fit."""
+    _, state = fit_with_state(old_store, CFG, jax.random.PRNGKey(KEY),
+                              merge_group=G, engine="kernels",
+                              omega="seeded")
+    res, _ = delta_refit(state, grown_store)
+    ref, _ = fit_with_state(grown_store, CFG, jax.random.PRNGKey(KEY),
+                            merge_group=G, engine="kernels", omega="seeded")
+    assert_bit_identical(res, ref)
+
+
+def test_delta_refit_chains(cold, tmp_path, data):
+    """Exact refits compose: 0..8 → +2 chunks → +2 chunks lands bitwise
+    on the cold fit of all 12 — the persisted accumulators stay the
+    canonical tree at every step.  (One store grown in place: each
+    append's shard layout must prefix the next, so the chain walks a
+    single directory.)"""
+    path = str(tmp_path / "chain")
+    _ingest(path, data, 0, C0)
+    _, state = fit_with_state(ViewStoreReader(path), CFG,
+                              jax.random.PRNGKey(KEY),
+                              merge_group=G, engine="jnp")
+    extend_chunks(path, (data.get_chunk(i) for i in range(C0, 10)))
+    _, state = delta_refit(state, ViewStoreReader(path))
+    extend_chunks(path, (data.get_chunk(i) for i in range(10, C1)))
+    res, _ = delta_refit(state, ViewStoreReader(path))
+    # the fold walks chunks, not shards: a different shard layout of
+    # the same rows still lands bitwise on the grown store's cold fit
+    assert_bit_identical(res, cold("jnp")[0])
+
+
+def test_delta_refit_no_delta_refinalizes(fit_old, old_store):
+    """Same store, no appended shards: the refit just re-finalizes the
+    persisted accumulators and reproduces the original result."""
+    res0, state = fit_old
+    res, _ = delta_refit(state, old_store)
+    assert_bit_identical(res, res0)
+    assert res.diagnostics["delta"]["delta_chunks"] == 0
+
+
+def test_delta_refit_frozen_mode(fit_old, grown_store, cold):
+    """Frozen mode never re-touches the old corpus: the new rows enter
+    under the fitted bases.  Not bitwise the cold fit — but close, and
+    pass 0 stays exact so a later exact refit still reconciles."""
+    _, state = fit_old
+    res, state2 = delta_refit(state, grown_store, mode="frozen")
+    assert res.diagnostics["delta"]["mode"] == "frozen"
+    ref, _ = cold("jnp")
+    np.testing.assert_allclose(np.sort(np.asarray(res.rho)),
+                               np.sort(np.asarray(ref.rho)), atol=0.05)
+
+
+def test_delta_refit_rejects_non_append_stores(fit_old, old_store,
+                                               grown_store, tmp_path):
+    _, state = fit_old
+    # different rows, same geometry: the shard-hash prefix check
+    other = PlantedCCAData(n=N1, da=DA, db=DB, rank=5, noise=0.4,
+                           seed=99, chunk=CHUNK)
+    impostor = _ingest(str(tmp_path / "impostor"), other, 0, C1)
+    with pytest.raises(ValueError, match="not an append"):
+        delta_refit(state, impostor)
+    # different geometry entirely
+    narrow = PlantedCCAData(n=N0, da=DA - 4, db=DB, rank=5, noise=0.4,
+                            seed=11, chunk=CHUNK)
+    skewed = _ingest(str(tmp_path / "skewed"), narrow, 0, C0)
+    with pytest.raises(ValueError, match="geometry"):
+        delta_refit(state, skewed)
+    # shrinking is not an append either (fewer shards: the fitted
+    # shard list can no longer be a prefix)
+    _, full_state = fit_with_state(grown_store, CFG,
+                                   jax.random.PRNGKey(KEY),
+                                   merge_group=G, engine="jnp")
+    with pytest.raises(ValueError, match="not an append"):
+        delta_refit(full_state, old_store)
+
+
+def test_delta_refit_rejects_unaligned_old_corpus(tmp_path, data):
+    """The fitted corpus must end on a merge-group boundary, or its
+    last group's partial sum would straddle old and new rows."""
+    ragged = str(tmp_path / "ragged")  # 7 chunks: 896 % (128*2) != 0
+    _ingest(ragged, data, 0, 7)
+    _, state = fit_with_state(ViewStoreReader(ragged), CFG,
+                              jax.random.PRNGKey(KEY), merge_group=G,
+                              engine="jnp")
+    extend_chunks(ragged, (data.get_chunk(i) for i in range(7, 9)))
+    with pytest.raises(ValueError, match="merge-group boundary"):
+        delta_refit(state, ViewStoreReader(ragged))
+
+
+# -- span combiner (satellite: combiner-on-the-way-out) ---------------------
+
+
+def _fake_group_stats(n_groups, seed=3):
+    rng = np.random.default_rng(seed)
+    proto = stats_init_fn("power", DA, DB, CFG.sketch)()
+    return [
+        jax.tree_util.tree_map(
+            lambda x: jnp.asarray(
+                rng.standard_normal(np.shape(x)).astype(np.float32)), proto)
+        for _ in range(n_groups)
+    ]
+
+
+def test_span_combiner_bitwise_matches_individual_pushes():
+    """A worker pre-merging aligned dyadic spans hands the coordinator
+    exactly the subtrees the coordinator would have built itself: the
+    final reduction is bitwise identical for any power-of-two span."""
+    stats = _fake_group_stats(6)
+    init = stats_init_fn("power", DA, DB, CFG.sketch)
+    ref = SegmentedAccumulator(init, 6 * G, G)
+    for g, s in enumerate(stats):
+        ref.push_group(g, s)
+    for span in (1, 2, 4):
+        acc = SegmentedAccumulator(init, 6 * G, G)
+        comb = SpanCombiner(span, lambda g0, cnt, merged:
+                            acc.push_group_span(g0, merged, cnt))
+        for g, s in enumerate(stats):
+            comb.emit(g, s)
+        comb.flush()
+        for f, x, y in zip(ref.result()._fields, ref.result(), acc.result()):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), (span, f)
+
+
+def test_span_combiner_unaligned_run_passes_through():
+    """A repair worker's arbitrary group list must stay correct: an
+    unaligned start emits span-1 partials until a span boundary."""
+    stats = _fake_group_stats(4)
+    out = []
+    comb = SpanCombiner(2, lambda g0, cnt, merged: out.append((g0, cnt)))
+    for g in (1, 2, 3):  # starts mid-span
+        comb.emit(g, stats[g])
+    comb.flush()
+    assert out == [(1, 1), (2, 2)]
+    out.clear()
+    comb.emit(0, stats[0])  # run break mid-span flushes a span-1 tail
+    comb.emit(3, stats[3])
+    comb.flush()
+    assert out == [(0, 1), (3, 1)]
+
+
+def test_cluster_combiner_merge_parity(old_store, tmp_path):
+    """End-to-end: a 2-worker cluster fit with combine_groups=2 is
+    bitwise the Local fit, and the coordinator's merge fan-in shrinks
+    to the span count."""
+    ref = exec_fit(old_store, CFG, jax.random.PRNGKey(KEY),
+                   merge_group=G, engine="jnp")
+    res = exec_fit(old_store, CFG, jax.random.PRNGKey(KEY),
+                   merge_group=G, engine="jnp", topology=Cluster(2),
+                   cluster_dir=str(tmp_path / "cluster"), combine_groups=2)
+    assert_bit_identical(ref, res)
+    assert res.diagnostics["cluster"]["combine_groups"] == 2
+
+
+# -- model registry ---------------------------------------------------------
+
+
+def test_registry_publish_load_roundtrip(fit_old, cold, tmp_path):
+    res1, state1 = fit_old
+    res2, state2 = cold("jnp")
+    reg = ModelRegistry(str(tmp_path / "reg"))
+    v1 = reg.publish("m", res1, fit_meta=state1.meta)
+    v2 = reg.publish("m", res2, fit_meta=state2.meta)
+    assert (v1, v2) == (1, 2)
+    assert reg.versions("m") == [1, 2]
+    assert reg.current_version("m") == 2
+    m = reg.load("m")  # current
+    assert m.version == 2
+    assert_bit_identical(m, res2)
+    m1 = reg.load("m", version=1)
+    assert_bit_identical(m1, res1)
+    assert reg.meta("m", 2)["parent"] == 1  # provenance chain
+    assert reg.meta("m", 1)["fit"]["fingerprint"] == state1.meta["fingerprint"]
+
+
+def test_registry_rollback_and_bad_version(fit_old, cold, tmp_path):
+    res1, _ = fit_old
+    res2, _ = cold("jnp")
+    reg = ModelRegistry(str(tmp_path / "reg"))
+    reg.publish("m", res1)
+    reg.publish("m", res2)
+    reg.set_current("m", 1)  # rollback: versions are immutable
+    assert reg.load("m").version == 1
+    with pytest.raises(ValueError, match="no published version"):
+        reg.set_current("m", 7)
+
+
+def test_registry_detects_corrupted_artifact(fit_old, tmp_path):
+    """The content hash catches bit-rot at load time, not in traffic."""
+    res, _ = fit_old
+    reg = ModelRegistry(str(tmp_path / "reg"))
+    reg.publish("m", res)
+    vdir = os.path.join(str(tmp_path / "reg"), "m", "v00001")
+    (xa,) = [f for f in os.listdir(vdir) if f.startswith("Xa")]
+    arr = np.load(os.path.join(vdir, xa))
+    arr = arr.copy()
+    arr.flat[0] += 1.0
+    np.save(os.path.join(vdir, xa), arr)
+    with pytest.raises(ValueError, match="hash mismatch"):
+        reg.load("m")
+
+
+# -- batched projector + hot swap -------------------------------------------
+
+
+def test_hot_swap_zero_drops_no_mixed_versions(fit_old, cold, data, tmp_path):
+    """N concurrent request batches across a version flip: every
+    request completes, every response carries exactly one version, and
+    the embedding is bitwise that version's projection of the input."""
+    res1, state1 = fit_old
+    res2, state2 = cold("jnp")
+    reg = ModelRegistry(str(tmp_path / "reg"))
+    reg.publish("m", res1, fit_meta=state1.meta)
+    reg.publish("m", res2, fit_meta=state2.meta)
+    m1, m2 = reg.load("m", version=1), reg.load("m", version=2)
+    xa, _ = data.get_chunk(C1)  # held-out rows as traffic
+    models = {1: m1, 2: m2}
+    n_before = n_after = 24
+
+    rows = [xa[i % CHUNK] for i in range(n_before + n_after)]
+    with BatchedProjector(m1, max_batch=8) as proj:
+        before = [proj.submit("a", rows[i]) for i in range(n_before)]
+        proj.swap(m2)
+        after = [proj.submit("a", rows[n_before + i]) for i in range(n_after)]
+        results = [t.result(timeout=30.0) for t in before + after]
+        stats = proj.stats()
+
+    assert len(results) == n_before + n_after  # zero drops
+    for i, r in enumerate(results):
+        v = r["version"]
+        assert v in (1, 2)
+        X = models[v].Xa
+        x = np.asarray(rows[i], dtype=np.float32)
+        ref = np.asarray(jnp.asarray(x) @ X.astype(jnp.float32))
+        assert np.array_equal(np.asarray(r["emb"]), ref), (i, v)
+    # requests queued after swap() returned can only see the new model
+    assert all(t.result()["version"] == 2 for t in after)
+    assert stats["requests"] == n_before + n_after
+    assert stats["swaps"] >= 1
+
+
+def test_projector_validates_and_shuts_down(fit_old, tmp_path):
+    res, _ = fit_old
+    reg = ModelRegistry(str(tmp_path / "reg"))
+    reg.publish("m", res)
+    proj = BatchedProjector(reg.load("m"), max_batch=4)
+    with pytest.raises(ValueError, match="view"):
+        proj.submit("c", np.zeros(DA, np.float32))
+    with pytest.raises(ValueError, match="features"):
+        proj.submit("a", np.zeros(DA + 1, np.float32))
+    assert proj.project_b(np.zeros(DB, np.float32))["emb"].shape == (CFG.k,)
+    proj.close()
+    with pytest.raises(RuntimeError, match="shut down"):
+        proj.submit("a", np.zeros(DA, np.float32))
+
+
+def test_corpus_index_topk(cold, grown_store, data):
+    res, _ = cold("jnp")
+    reg_model = None
+    # an index needs a ServedModel-shaped object; build one in-memory
+    from repro.serve.registry import ServedModel
+
+    reg_model = ServedModel(name="m", version=1,
+                            Xa=jnp.asarray(res.Xa), Xb=jnp.asarray(res.Xb),
+                            rho=jnp.asarray(res.rho),
+                            Qa=jnp.asarray(res.Qa), Qb=jnp.asarray(res.Qb),
+                            meta={})
+    index = CorpusIndex.from_store(reg_model, grown_store, view="b")
+    assert index.emb.shape == (N1, CFG.k)
+    xa, _ = grown_store.get_chunk(0)
+    q = np.asarray(reg_model.project_a(xa[3]))
+    idx, scores = index.topk(q, k=10)
+    assert idx.shape == scores.shape == (10,)
+    assert np.all(np.diff(scores) <= 0)  # descending
+    weighted = q.astype(np.float32) * np.asarray(reg_model.rho, np.float32)
+    np.testing.assert_array_equal(scores, (index.emb @ weighted)[idx])
+
+
+# -- drift monitor: signal + recovery ---------------------------------------
+
+
+def test_drift_signal_and_recovery(cold, data):
+    """The acceptance loop in miniature: paired held-out traffic sets
+    the baseline; an injected shift (pairing broken) trips the latched
+    refit signal and the callback; rebinding to a (refreshed) model
+    restores the held-out correlation."""
+    res, _ = cold("jnp")
+    from repro.serve.registry import ServedModel
+
+    model = ServedModel(name="m", version=1, Xa=jnp.asarray(res.Xa),
+                        Xb=jnp.asarray(res.Xb), rho=jnp.asarray(res.rho),
+                        Qa=jnp.asarray(res.Qa), Qb=jnp.asarray(res.Qb),
+                        meta={})
+    a12, b12 = data.get_chunk(C1)
+    a13, b13 = data.get_chunk(C1 + 1)
+    xa = np.concatenate([a12, a13])
+    xb = np.concatenate([b12, b13])
+    fired = []
+    mon = DriftMonitor(model, window=128, threshold=0.8,
+                       on_refit_needed=fired.append)
+    base = mon.observe(xa[:128], xb[:128])
+    assert base is not None and base > 0.5  # planted signal is strong
+    assert not mon.refit_needed
+
+    shifted = xb[np.random.default_rng(7).permutation(xb.shape[0])]
+    mon.observe(xa[:128], shifted[:128])
+    assert mon.refit_needed and len(fired) == 1
+    mon.observe(xa[128:256], shifted[128:256])  # latched, fires once
+    assert len(fired) == 1
+
+    mon.rebind(model)  # post-swap: re-baseline on healthy traffic
+    assert not mon.refit_needed
+    recovered = mon.observe(xa[128:256], xb[128:256])
+    assert recovered is not None and recovered >= 0.8 * base
+    assert mon.status()["windows"] == 4
+
+
+def test_paired_correlation_tracks_rho(cold, grown_store):
+    """On in-distribution rows the empirical projection correlation
+    tracks the fitted canonical correlations — the monitor's premise."""
+    res, _ = cold("jnp")
+    from repro.serve.registry import ServedModel
+
+    model = ServedModel(name="m", version=1, Xa=jnp.asarray(res.Xa),
+                        Xb=jnp.asarray(res.Xb), rho=jnp.asarray(res.rho),
+                        Qa=jnp.asarray(res.Qa), Qb=jnp.asarray(res.Qb),
+                        meta={})
+    xa, xb = grown_store.get_chunk(0)
+    corr = paired_correlation(model, xa, xb)
+    rho = np.asarray(res.rho)
+    assert corr.shape == rho.shape
+    assert abs(float(corr[0]) - float(rho[0])) < 0.25
+
+
+# -- the full serving loop (CLI driver) -------------------------------------
+
+
+def test_cca_serve_cli_loop(tmp_path, capsys):
+    """One in-process run of the cca_serve driver: fit → publish v1 →
+    drift signal on injected shift → append + exact delta-refit →
+    publish v2 → zero-drop hot-swap → recovered correlation."""
+    from repro.launch.cca_serve import main
+
+    rc = main(["--smoke", "--store", str(tmp_path / "store"),
+               "--registry", str(tmp_path / "reg"), "--clients", "8"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "refit_needed=True" in out
+    assert "dropped: 0" in out
+    reg = ModelRegistry(str(tmp_path / "reg"))
+    assert reg.versions("europarl-cca") == [1, 2]
+    assert reg.current_version("europarl-cca") == 2
+    # the delta state persisted next to the registry binds the grown store
+    state = FitState.load(str(tmp_path / "reg" / "europarl-cca" / "fitstate"))
+    assert state.meta["n"] == 1536
+
+
+# -- obs: chrome-trace export + liveness report -----------------------------
+
+
+def _write_trace(dir_, records):
+    os.makedirs(dir_, exist_ok=True)
+    with open(os.path.join(dir_, "trace-1.jsonl"), "w") as f:
+        for r in records:
+            f.write(json.dumps(r) + "\n")
+
+
+def test_export_trace_chrome_json(tmp_path):
+    from repro.obs.chrometrace import export
+
+    t0 = 1000.0
+    trace = str(tmp_path / "trace")
+    _write_trace(trace, [
+        {"ev": "span", "name": "pass", "t": t0, "dur": 2.0, "sid": 1,
+         "pid": 10, "ctx": {"role": "coordinator"}, "attrs": {"pass_idx": 0}},
+        {"ev": "span", "name": "fold", "t": t0 + 0.5, "dur": 1.0, "sid": 2,
+         "parent": 1, "pid": 10},
+        {"ev": "ctr", "name": "kernel_cost", "t": t0 + 0.6, "pid": 10,
+         "fields": {"kernel": "powerpass", "flops": 1e9}},
+        {"ev": "ctr", "name": "heartbeat", "t": t0 + 1.0, "pid": 10,
+         "fields": {"shard": 0, "age_s": 0.2}},
+        {"ev": "proto", "op": "publish", "path": "/p/x", "t": t0 + 1.5,
+         "pid": 11},
+    ])
+    out = str(tmp_path / "chrome.json")
+    counts = export(trace, out)
+    assert counts == {"events_in": 5, "events_out": 6}  # + process_name
+    with open(out) as f:
+        doc = json.load(f)
+    evs = doc["traceEvents"]
+    phs = sorted(e["ph"] for e in evs)
+    assert phs == ["C", "C", "M", "X", "X", "i"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert min(e["ts"] for e in evs if "ts" in e) == 0.0  # rebased to t0
+    assert {e["name"] for e in xs} == {"pass", "fold"}
+    assert next(e for e in xs if e["name"] == "fold")["args"]["parent_sid"] == 1
+    # string-tagged counters split into per-value tracks
+    ctr = next(e for e in evs if e["ph"] == "C" and "kernel" in e["name"])
+    assert ctr["name"] == "kernel_cost[kernel=powerpass]"
+    assert ctr["args"] == {"flops": 1e9}
+    meta = next(e for e in evs if e["ph"] == "M")
+    assert meta["args"]["name"] == "coordinator (pid 10)"
+    assert doc["otherData"]["t0_epoch_s"] == t0
+
+
+def test_report_includes_worker_liveness(tmp_path):
+    from repro.obs import report as obs_report
+
+    t0 = 2000.0
+    trace = str(tmp_path / "trace")
+    _write_trace(trace, [
+        {"ev": "span", "name": "pass", "t": t0, "dur": 3.0, "sid": 1,
+         "pid": 10, "ctx": {"role": "coordinator"}},
+        {"ev": "ctr", "name": "heartbeat", "t": t0 + 1.0, "pid": 10,
+         "fields": {"shard": 0, "age_s": 0.1, "pass_idx": 0,
+                    "missing_groups": 4}},
+        {"ev": "ctr", "name": "heartbeat", "t": t0 + 2.0, "pid": 10,
+         "fields": {"shard": 0, "age_s": 0.7, "pass_idx": 1,
+                    "missing_groups": 2}},
+        {"ev": "ctr", "name": "heartbeat", "t": t0 + 2.0, "pid": 10,
+         "fields": {"shard": 1, "age_s": 0.3, "pass_idx": 1,
+                    "missing_groups": 2}},
+    ])
+    report = obs_report.analyze(trace)
+    live = report["liveness"]
+    assert live["0"]["samples"] == 2
+    assert live["0"]["max_age_s"] == pytest.approx(0.7)
+    assert live["0"]["last_age_s"] == pytest.approx(0.7)
+    assert live["0"]["passes"] == [0, 1]
+    assert live["1"]["samples"] == 1
+    text = obs_report.render(report)
+    assert "worker liveness" in text
+    assert "max_age=0.700s" in text
