@@ -53,6 +53,8 @@ bench-cluster:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.cluster_bench --out results/BENCH_cluster.json
 
 # autotune sweep for the fused bucketed kernels (powerpass/projgram
-# block+bucket caps) + results/BENCH_bucketed.json
+# block+bucket caps) plus the staged-vs-recompute schedule timings
+# (op="powerpass-staged"/"projgram-staged" cache entries) +
+# results/BENCH_bucketed.json
 sweep-blocks:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.sweep_blocks --out results/BENCH_bucketed.json

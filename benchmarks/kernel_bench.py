@@ -12,7 +12,11 @@ and, via :func:`bucketed_report` (also driven by
 BENCH_bucketed json for the column-bucketed fused kernels: timings on a
 past-threshold shape plus the traced pallas_call count of the paper's
 Europarl-scale chunk — the HBM-read regression guard (2 fused calls per
-power-pass chunk, no unfused fallback).
+power-pass chunk under the recompute schedule, no unfused fallback).
+:func:`staged_report` (BENCH_staged.json) tracks the staged (P-reuse)
+schedule: bitwise parity vs recompute, the Europarl auto-schedule
+choice, and the modelled-FLOP drop from n_buckets·proj + acc to
+proj + acc.
 """
 
 from __future__ import annotations
@@ -174,11 +178,18 @@ def bucketed_report(out_path: str = "results/BENCH_bucketed.json",
     wl = europarl_config()
     skt = wl.rcca.sketch
     sds = jax.ShapeDtypeStruct
-    jaxpr = jax.make_jaxpr(lambda *xs: ops.power_pass_chunk(*xs, interpret=interpret))(
+    # force the recompute schedule: this entry guards the FUSED call
+    # count (one kernel per view); the staged schedule's counts live in
+    # staged_report / BENCH_staged.json
+    jaxpr = jax.make_jaxpr(
+        lambda *xs: ops.power_pass_chunk(*xs, schedule="recompute",
+                                         interpret=interpret))(
         sds((wl.chunk, wl.da), jnp.float32), sds((wl.chunk, wl.db), jnp.float32),
         sds((wl.da, skt), jnp.float32), sds((wl.db, skt), jnp.float32))
     europarl_calls = count_pallas_calls(jaxpr)
-    jaxpr_f = jax.make_jaxpr(lambda *xs: ops.final_pass_chunk(*xs, interpret=interpret))(
+    jaxpr_f = jax.make_jaxpr(
+        lambda *xs: ops.final_pass_chunk(*xs, schedule="recompute",
+                                         interpret=interpret))(
         sds((wl.chunk, wl.da), jnp.float32), sds((wl.chunk, wl.db), jnp.float32),
         sds((wl.da, skt), jnp.float32), sds((wl.db, skt), jnp.float32))
     europarl_final_calls = count_pallas_calls(jaxpr_f)
@@ -270,17 +281,103 @@ def seeded_report(out_path: str = "results/BENCH_seeded.json",
     return bench
 
 
+def staged_report(out_path: str = "results/BENCH_staged.json",
+                  rows: list | None = None) -> dict:
+    """BENCH json for the staged (P-reuse) powerpass schedule.
+
+    Three parts: (1) time staged vs recompute on a CPU-feasible
+    forced-bucket shape and assert they agree BITWISE (the staged
+    schedule re-orders HBM traffic, never arithmetic); (2) trace the
+    Europarl chunk and record the auto-chosen schedule + pallas_call
+    counts per schedule; (3) the cost model's modelled chunk FLOPs for
+    both schedules — the staged entry drops the n_buckets·proj
+    recompute term, which is the optimization this file tracks.
+    """
+    from repro.configs.europarl_cca import config as europarl_config
+    from repro.kernels.compat import count_pallas_calls
+    from repro.kernels.ops import _default_interpret, chunk_cost
+    from repro.kernels.powerpass import (choose_powerpass_schedule,
+                                         power_project_accumulate)
+
+    interpret = _default_interpret()
+    key = jax.random.PRNGKey(0)
+    # 16 ΔY buckets at block_da=256: plenty of P-reuse to measure
+    n, da, db, kt = 256, 4096, 256, 512
+    a = jax.random.normal(key, (n, da), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, db), jnp.float32)
+    q = jax.random.normal(jax.random.PRNGKey(2), (db, kt), jnp.float32)
+
+    run_s = lambda: power_project_accumulate(a, b, q, block_da=256,
+                                             schedule="staged",
+                                             interpret=interpret)
+    run_r = lambda: power_project_accumulate(a, b, q, block_da=256,
+                                             schedule="recompute",
+                                             interpret=interpret)
+    bitwise = bool(jnp.array_equal(run_s(), run_r()))
+    assert bitwise, "staged schedule diverged from recompute"
+    us_s, us_r = time_us(run_s), time_us(run_r)
+
+    wl = europarl_config()
+    skt = wl.rcca.sketch
+    sds = jax.ShapeDtypeStruct
+    chosen = choose_powerpass_schedule(wl.chunk, wl.da, wl.db, skt, "float32")
+    structs = (sds((wl.chunk, wl.da), jnp.float32),
+               sds((wl.chunk, wl.db), jnp.float32),
+               sds((wl.da, skt), jnp.float32),
+               sds((wl.db, skt), jnp.float32))
+    calls = {}
+    for sched in ("staged", "recompute"):
+        jaxpr = jax.make_jaxpr(
+            lambda *xs, _s=sched: ops.power_pass_chunk(
+                *xs, schedule=_s, interpret=interpret))(*structs)
+        calls[sched] = count_pallas_calls(jaxpr)
+
+    chunk_cost.cache_clear()
+    cost_s = chunk_cost("power", wl.chunk, wl.da, wl.db, skt, "float32",
+                        engine="kernels", schedule="staged")
+    cost_r = chunk_cost("power", wl.chunk, wl.da, wl.db, skt, "float32",
+                        engine="kernels", schedule="recompute")
+    flops_ratio = cost_r["flops"] / cost_s["flops"]
+
+    bench = {
+        "bench": "cca_staged_powerpass_schedule",
+        "backend": jax.default_backend(),
+        "interpret": interpret,
+        "results": [
+            {"name": "powerpass_staged_vs_recompute_16bkt",
+             "shape": [n, da, db, kt],
+             "staged_us": round(us_s, 1), "recompute_us": round(us_r, 1),
+             "bitwise_equal": bitwise},
+            {"name": "power_pass_chunk_europarl_schedule",
+             "shape": [wl.chunk, wl.da, wl.db, skt],
+             "auto_schedule": chosen,
+             "pallas_calls": calls,
+             "modelled_flops": {"staged": cost_s["flops"],
+                                "recompute": cost_r["flops"]},
+             "modelled_flops_ratio": round(flops_ratio, 1)},
+        ],
+    }
+    bench = write_bench(bench, out_path)
+    if rows is not None:
+        rows.append(("staged_powerpass_16bkt", us_s,
+                     f"bitwise={bitwise} recompute_us={us_r:.1f} "
+                     f"europarl_flops_x{flops_ratio:.0f}"))
+    return bench
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="results/kernel_bench.json")
     ap.add_argument("--bucketed-out", default="results/BENCH_bucketed.json")
     ap.add_argument("--seeded-out", default="results/BENCH_seeded.json")
+    ap.add_argument("--staged-out", default="results/BENCH_staged.json")
     args = ap.parse_args(argv)
     rows: list = []
     kernel_benchmarks(rows)
     engine_comparison(args.out, rows)
     bucketed_report(args.bucketed_out, rows)
     seeded_report(args.seeded_out, rows)
+    staged_report(args.staged_out, rows)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

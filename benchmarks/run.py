@@ -30,6 +30,8 @@ def artifacts(results_dir: str = "results") -> None:
         os.path.join(results_dir, "BENCH_bucketed.json"))
     kernel_bench.seeded_report(
         os.path.join(results_dir, "BENCH_seeded.json"))
+    kernel_bench.staged_report(
+        os.path.join(results_dir, "BENCH_staged.json"))
     io_bench.io_overlap(os.path.join(results_dir, "BENCH_io.json"))
     cluster_bench.cluster_scaling(
         os.path.join(results_dir, "BENCH_cluster.json"))
@@ -41,7 +43,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig2a,table2b,fig3,"
-                         "kernels,io,cluster,roofline")
+                         "kernels,staged,io,cluster,roofline")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
     ap.add_argument("--artifacts", action="store_true",
                     help="write every BENCH json + results/TRAJECTORY.json")
@@ -61,6 +63,7 @@ def main(argv=None) -> None:
         "table2b": paper_figures.table2b_timings,
         "fig3": paper_figures.fig3_nu_sweep,
         "kernels": kernel_bench.kernel_benchmarks,
+        "staged": lambda rows: kernel_bench.staged_report(rows=rows),
         "io": lambda rows: io_bench.io_overlap(rows=rows),
         "cluster": lambda rows: cluster_bench.cluster_scaling(rows=rows),
         "roofline": lambda rows: roofline.roofline_rows(rows, args.dryrun_dir),

@@ -6,8 +6,10 @@
 Sweeps the autotune candidates for ``op="powerpass"`` and
 ``op="projgram"`` (see repro.kernels.autotune) over a set of chunk
 shapes, persists the winning (block_n, block_contraction, bucket) caps
-to the autotune cache, then emits the bucketed-kernel BENCH json
-(``results/BENCH_bucketed.json``) via
+to the autotune cache, then times the staged (P-reuse) vs. recompute
+schedules for each shape (``op="powerpass-staged"`` /
+``op="projgram-staged"`` schedule entries), and finally emits the
+bucketed-kernel BENCH json (``results/BENCH_bucketed.json``) via
 :func:`benchmarks.kernel_bench.bucketed_report`.
 
 The default shapes are CPU-interpret-feasible stand-ins that cross the
@@ -57,11 +59,21 @@ def sweep(shapes, iters: int = 2) -> list[dict]:
             print(f"[sweep] projgram  n={n} d={db} kt={kt} -> blocks={pg_b}")
         else:
             pp_b, pg_b = pp, pg
+        # schedule sweep: time staged (P-reuse) vs recompute and persist
+        # the winner so choose_*_schedule prefers measurement over the
+        # analytic roofline crossover
+        sched_pp = autotune.autotune_powerpass_staged(a, b, qb, iters=iters)
+        print(f"[sweep] powerpass schedule n={n} da={da} db={db} kt={kt} "
+              f"-> {sched_pp}")
+        sched_pg = autotune.autotune_projgram_staged(a, qa, iters=iters)
+        print(f"[sweep] projgram  schedule n={n} d={da} kt={kt} -> {sched_pg}")
         results.append({"shape": [n, da, db, kt],
                         "powerpass_blocks": list(pp),
                         "powerpass_blocks_b": list(pp_b),
                         "projgram_blocks": list(pg),
-                        "projgram_blocks_b": list(pg_b)})
+                        "projgram_blocks_b": list(pg_b),
+                        "powerpass_schedule": sched_pp,
+                        "projgram_schedule": sched_pg})
     return results
 
 

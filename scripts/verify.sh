@@ -38,12 +38,13 @@ fi
 
 # interpret-mode kernel parity: every Pallas kernel against its jnp
 # oracle, the engine-parity sweep of the data-pass drivers, the
-# column-bucketed fused-kernel parity/regression suite, and the
-# seeded-Ω tile-PRNG bitwise-parity suite
+# column-bucketed fused-kernel parity/regression suite, the seeded-Ω
+# tile-PRNG bitwise-parity suite, and the staged (P-reuse) schedule
+# parity grid + crossover rule
 parity() {
   python -m pytest -q tests/test_kernels.py tests/test_engine_parity.py \
     tests/test_bucketed_kernels.py tests/test_bucketed_properties.py \
-    tests/test_seeded_omega.py "$@"
+    tests/test_seeded_omega.py tests/test_staged_schedule.py "$@"
 }
 
 # multi-worker map/combine/reduce: coordinator merge parity (bitwise vs
@@ -56,13 +57,14 @@ cluster() {
 }
 
 # execution-topology parity: Local ≡ Sharded ≡ Cluster ≡ Hybrid bitwise
-# (both engines), hybrid worker kill/resume, heartbeat re-dispatch —
-# with the in-process Sharded rows on a REAL 4-device host mesh (the
-# flag must be set before jax initializes, hence here)
+# (both engines), hybrid worker kill/resume, heartbeat re-dispatch, and
+# the collective-fused sharded-kernel path (|model| > 1 meshes) — with
+# the in-process Sharded rows on a REAL 4-device host mesh (the flag
+# must be set before jax initializes, hence here)
 topology() {
   XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4" \
     python -m pytest -q tests/test_exec_topologies.py \
-    tests/test_cluster_failures.py "$@"
+    tests/test_cluster_failures.py tests/test_collective_fused.py "$@"
 }
 
 # serving tier + incremental refits: model-registry round-trip +

@@ -31,7 +31,10 @@ device, no kernel execution):
            its shape key names padded (×128) dims, and re-planning the
            shape under the entry's block caps yields a plan that passes
            RCCA101–105 — a hand-edited or stale cache cannot smuggle an
-           inconsistent launch into production.
+           inconsistent launch into production.  Schedule entries
+           (``powerpass-staged`` / ``projgram-staged``) must carry a
+           ``"staged"|"recompute"`` value and both schedules' plans at
+           that shape must still re-plan cleanly.
   RCCA108  PRNG-bearing plans: a ``*_seeded`` kernel draws its Ω tiles
            from a counter-based PRNG, so its ONLY source of randomness
            must be the seed plumbed as an SMEM scalar operand — exactly
@@ -236,6 +239,29 @@ def _plan_from_cache_entry(op: str, dims: List[int], dtype: str, blocks):
     return None
 
 
+def _plans_from_schedule_entry(op: str, dims: List[int], dtype: str):
+    """Every KernelPlan either schedule of a staged-vs-recompute cache
+    entry would launch at this shape — the recompute base plus the
+    stage/sweep pair — skipping schedules the planners decline."""
+    from repro.kernels.powerpass import plan_powerpass, plan_powerpass_staged
+    from repro.kernels.projgram import plan_projgram, plan_projgram_staged
+
+    plans = []
+    if op == "powerpass-staged":
+        n, db, kt, da = dims
+        plans.append(plan_powerpass(n, da, db, kt, dtype))
+        staged = plan_powerpass_staged(n, da, db, kt, dtype)
+        if staged is not None:
+            plans.extend(staged)
+    elif op == "projgram-staged":
+        n, d, kt = dims
+        plans.append(plan_projgram(n, d, kt, dtype))
+        staged = plan_projgram_staged(n, d, kt, dtype)
+        if staged is not None:
+            plans.extend(staged)
+    return [p for p in plans if p is not None]
+
+
 def check_autotune_cache(path: Optional[str] = None) -> List[Violation]:
     """RCCA107 over every entry of the persisted autotune cache: shape
     keys must parse to padded dims, blocks must be usable caps, and the
@@ -257,8 +283,11 @@ def check_autotune_cache(path: Optional[str] = None) -> List[Violation]:
     if not isinstance(cache, dict):
         return [Violation("RCCA107", path, 0, "cache root is not an object")]
 
-    known_ops = ("matmul_nn", "matmul_tn", "powerpass", "projgram")
-    ndims = {"matmul_nn": 3, "matmul_tn": 3, "powerpass": 4, "projgram": 3}
+    known_ops = ("matmul_nn", "matmul_tn", "powerpass", "projgram",
+                 "powerpass-staged", "projgram-staged")
+    ndims = {"matmul_nn": 3, "matmul_tn": 3, "powerpass": 4, "projgram": 3,
+             "powerpass-staged": 4, "projgram-staged": 3}
+    schedule_ops = ("powerpass-staged", "projgram-staged")
     out: List[Violation] = []
     for key, ent in sorted(cache.items()):
         where = f"{path}[{key}]"
@@ -287,6 +316,22 @@ def check_autotune_cache(path: Optional[str] = None) -> List[Violation]:
             out.append(Violation("RCCA107", where, 0,
                                  f"dims {dims} not padded to x128 — keys "
                                  "must name the padded problem"))
+            continue
+        if op in schedule_ops:
+            # schedule entries record a measured staged-vs-recompute
+            # winner, not block caps — validate the value and that both
+            # schedules still re-plan to launches passing RCCA101–105
+            sched = ent.get("schedule") if isinstance(ent, dict) else None
+            if sched not in ("staged", "recompute"):
+                out.append(Violation("RCCA107", where, 0,
+                                     f"schedule entry value {sched!r} not "
+                                     "'staged'|'recompute'"))
+                continue
+            for plan in _plans_from_schedule_entry(op, dims, dtype):
+                for v in check_plan(plan, where=where):
+                    out.append(Violation("RCCA107", v.path, v.line,
+                                         f"schedule entry re-plan invalid: "
+                                         f"[{v.code}] {v.message}"))
             continue
         blocks = ent.get("blocks") if isinstance(ent, dict) else None
         try:

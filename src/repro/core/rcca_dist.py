@@ -9,11 +9,16 @@ Sharding contract (see DESIGN.md §2):
   in main memory") becomes a per-device HBM constraint of d·k̃/|model|.
 
 Per microbatch the only collectives are two psums of (mb × k̃) projected
-activations over ``col_axis`` (~MBs); the d-sized accumulators are
-psummed ONCE per pass over ``row_axes``.  Accumulation is bucketed so
-the large end-of-pass psum is split into column buckets that overlap
-with the next microbatch's compute (XLA async collectives) — the
-distributed-optimization trick from DESIGN.md §5.
+activations over ``col_axis`` (~MBs); with ``engine="kernels"`` they
+fold into the staged kernel pipeline at the phase boundary — the
+``proj_stage`` kernel emits the local shard's partial P, the psum sums
+it globally, and the sweep kernels consume the result (optionally
+int8+error-feedback compressed via ``collective="fused-int8ef"``).  The
+d-sized accumulators are psummed ONCE per pass over ``row_axes``.
+Accumulation is bucketed so the large end-of-pass psum is split into
+column buckets that overlap with the next microbatch's compute (XLA
+async collectives) — the distributed-optimization trick from DESIGN.md
+§5.
 
 ``orth`` is CholeskyQR2 with k̃×k̃ psum'd Grams (TPU-native; DESIGN §3).
 """
@@ -77,7 +82,8 @@ def _microbatches(a: jax.Array, mb: Optional[int]):
 
 def power_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
                      compute_dtype=jnp.bfloat16, int8_reduce=False,
-                     reduce_buckets=1, reduce_dtype=None, engine="jnp"):
+                     reduce_buckets=1, reduce_dtype=None, engine="jnp",
+                     collective="fused"):
     """One range-finder pass over the local shard → global (Ya, Yb, stats).
 
     Returns Ya/Yb sharded like Qa/Qb (features over col_axis, replicated
@@ -86,15 +92,23 @@ def power_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
     ``engine="kernels"`` runs the per-microbatch matmuls as Pallas
     kernels on the local shards: fully fused project+accumulate when
     features are unsharded (col_axis None — P stays in VMEM), and the
-    unfused kernel pair around the per-microbatch P psum otherwise.
-    The fused kernel buckets its ΔY output columns, so the fused path
-    holds for ANY local feature width da_l·k̃ — each local shard's
-    accumulator block is just a sequence of VMEM-sized buckets (the
-    driver collapses a size-1 col_axis to None so trivial model axes
-    take this path too).  Only a genuinely sharded feature axis — which
-    needs the P psum BETWEEN projection and accumulation — still uses
-    the unfused pair; fusing across that collective (psum inside the
-    Pallas pipeline via RDMA) is the remaining ROADMAP item.
+    collective-fused staged pair when col_axis genuinely shards the
+    features: the ``proj_stage`` kernel emits the *partial* P of the
+    local feature shard, the (mb × k̃) psum happens at the phase
+    boundary, and the ``powerpass_sweep`` kernel accumulates the
+    globally-summed P — no unfused matmul pair around a full-width
+    psum.  Both fused forms bucket the accumulator output columns, so
+    they hold for ANY local feature width da_l·k̃ (the driver collapses
+    a size-1 col_axis to None so trivial model axes take the
+    single-kernel path).
+
+    ``collective`` picks the sharded phase-boundary reduction:
+    ``"fused"`` (exact f32 psum), ``"fused-int8ef"`` (blockwise-int8
+    psum with error-feedback residuals carried across microbatches —
+    ~4× fewer wire bytes on the cross-pod hop; see
+    :func:`repro.distributed.psum_int8_ef`), or ``"unfused"`` (legacy
+    project → psum → accumulate_tn matmul pair, kept as the parity
+    oracle for the fused path).
 
     §Perf knobs: ``int8_reduce`` — compress the end-of-pass Y psum with
     blockwise int8 (4× fewer bytes on the row axes; randomized range
@@ -103,6 +117,8 @@ def power_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
     ``reduce_buckets`` — split the Y psum into column buckets issued
     independently so XLA's async collectives overlap them with compute.
     """
+    if collective not in ("fused", "fused-int8ef", "unfused"):
+        raise ValueError(f"unknown collective mode {collective!r}")
     nb, mb = _microbatches(a, microbatch)
     da_l, kt = Qa.shape
     db_l = Qb.shape[0]
@@ -111,19 +127,38 @@ def power_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
     kernels = engine == "kernels"
     if kernels:
         from repro.kernels import ops as kops
+    fused_col = kernels and col_axis is not None and collective != "unfused"
+    use_ef = fused_col and collective == "fused-int8ef"
+    if use_ef:
+        from repro.distributed import psum_int8_ef
 
     a_r = a.reshape(nb, mb, da_l)
     b_r = b.reshape(nb, mb, db_l)
     Qa_c, Qb_c = Qa.astype(cd), Qb.astype(cd)
 
     def body(carry, ab):
-        Ya, Yb, sa, sb, tra, trb, n = carry
+        Ya, Yb, sa, sb, tra, trb, n, ea, eb = carry
         am, bm = ab
         am_c, bm_c = am.astype(cd), bm.astype(cd)
         if kernels and col_axis is None:
             # features unsharded → the fused chunk update applies as-is
             dYa, dYb = kops.power_pass_chunk(am_c, bm_c, Qa_c, Qb_c)
             Ya, Yb = Ya + dYa, Yb + dYb
+        elif fused_col:
+            # collective-fused staged pair: partial-P stage on the local
+            # feature shard, psum at the phase boundary, sweep of the
+            # global P — the psum is folded between the two kernel
+            # phases instead of bracketing an unfused matmul pair.
+            pb = kops.stage_project(bm_c, Qb_c).astype(cd)
+            pa = kops.stage_project(am_c, Qa_c).astype(cd)
+            if use_ef:
+                pb, eb = psum_int8_ef(pb, col_axis, eb)
+                pa, ea = psum_int8_ef(pa, col_axis, ea)
+            else:
+                pb = _psum(pb, col_axis)
+                pa = _psum(pa, col_axis)
+            Ya = Ya + kops.sweep_accumulate(am_c, pb)
+            Yb = Yb + kops.sweep_accumulate(bm_c, pa)
         else:
             # projected activations: the ONLY per-microbatch collectives
             if kernels:
@@ -145,14 +180,18 @@ def power_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
         sb = sb + jnp.sum(bm, axis=0, dtype=f32)
         tra = tra + jnp.sum(am.astype(f32) ** 2)
         trb = trb + jnp.sum(bm.astype(f32) ** 2)
-        return (Ya, Yb, sa, sb, tra, trb, n + mb), None
+        return (Ya, Yb, sa, sb, tra, trb, n + mb, ea, eb), None
 
     z = jnp.zeros
+    # error-feedback residuals ride the scan carry (zero-size when the
+    # int8 collective is off, so the carry structure stays uniform)
+    e_shape = (mb, kt) if use_ef else (0,)
     init = (
         z((da_l, kt), f32), z((db_l, kt), f32),
         z((da_l,), f32), z((db_l,), f32), z((), f32), z((), f32), z((), f32),
+        z(e_shape, f32), z(e_shape, f32),
     )
-    (Ya, Yb, sa, sb, tra, trb, n), _ = jax.lax.scan(body, init, (a_r, b_r))
+    (Ya, Yb, sa, sb, tra, trb, n, _, _), _ = jax.lax.scan(body, init, (a_r, b_r))
 
     # one d-sized psum per pass, over the row axes only
     def reduce_Y(Y):
@@ -187,15 +226,23 @@ def power_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
 
 
 def final_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
-                     compute_dtype=jnp.bfloat16, engine="jnp"):
+                     compute_dtype=jnp.bfloat16, engine="jnp",
+                     collective="fused"):
     """Final pass: projected covariances Ca, Cb, F (paper lines 14-18).
 
     ``engine="kernels"``: with unsharded features the fused
     project+gram kernel reads each local shard from HBM once per
     C-column bucket per microbatch (C-column bucketing keeps this
     fused for sketches past k̃p = 1024; single bucket ⇒ one read);
-    with a genuinely sharded col_axis the kernel matmul pair brackets
-    the per-microbatch P psum."""
+    with a genuinely sharded col_axis the collective-fused staged pair
+    runs — ``proj_stage`` emits the local shard's partial P, the psum
+    folds at the phase boundary, and ``gram_sweep`` /
+    ``powerpass_sweep`` build Ca/Cb/F from the global P.  ``collective``
+    as in :func:`power_pass_local` (``"fused-int8ef"`` compresses the
+    phase-boundary psum with error feedback; ``"unfused"`` is the
+    legacy matmul-pair parity oracle)."""
+    if collective not in ("fused", "fused-int8ef", "unfused"):
+        raise ValueError(f"unknown collective mode {collective!r}")
     nb, mb = _microbatches(a, microbatch)
     da_l, kt = Qa.shape
     db_l = Qb.shape[0]
@@ -204,17 +251,34 @@ def final_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
     kernels = engine == "kernels"
     if kernels:
         from repro.kernels import ops as kops
+    fused_col = kernels and col_axis is not None and collective != "unfused"
+    use_ef = fused_col and collective == "fused-int8ef"
+    if use_ef:
+        from repro.distributed import psum_int8_ef
     a_r = a.reshape(nb, mb, da_l)
     b_r = b.reshape(nb, mb, db_l)
     Qa_c, Qb_c = Qa.astype(cd), Qb.astype(cd)
 
     def body(carry, ab):
-        Ca, Cb, F, sa, sb, tra, trb, n = carry
+        Ca, Cb, F, sa, sb, tra, trb, n, ea, eb = carry
         am, bm = ab
         am_c, bm_c = am.astype(cd), bm.astype(cd)
         if kernels and col_axis is None:
             dCa, dCb, dF = kops.final_pass_chunk(am_c, bm_c, Qa_c, Qb_c)
             Ca, Cb, F = Ca + dCa, Cb + dCb, F + dF
+        elif fused_col:
+            pa = kops.stage_project(am_c, Qa_c).astype(cd)
+            pb = kops.stage_project(bm_c, Qb_c).astype(cd)
+            if use_ef:
+                pa, ea = psum_int8_ef(pa, col_axis, ea)
+                pb, eb = psum_int8_ef(pb, col_axis, eb)
+            else:
+                pa = _psum(pa, col_axis)
+                pb = _psum(pb, col_axis)
+            Ca = Ca + kops.gram_accumulate(pa)
+            Cb = Cb + kops.gram_accumulate(pb)
+            # F = PaᵀPb is the sweep contraction with Pa as the operand
+            F = F + kops.sweep_accumulate(pa, pb)
         else:
             if kernels:
                 pa = kops.project(am_c, Qa_c).astype(cd)
@@ -237,14 +301,16 @@ def final_pass_local(a, b, Qa, Qb, *, row_axes, col_axis, microbatch=None,
         sb = sb + jnp.sum(bm, axis=0, dtype=f32)
         tra = tra + jnp.sum(am.astype(f32) ** 2)
         trb = trb + jnp.sum(bm.astype(f32) ** 2)
-        return (Ca, Cb, F, sa, sb, tra, trb, n + mb), None
+        return (Ca, Cb, F, sa, sb, tra, trb, n + mb, ea, eb), None
 
     z = jnp.zeros
+    e_shape = (mb, kt) if use_ef else (0,)
     init = (
         z((kt, kt), f32), z((kt, kt), f32), z((kt, kt), f32),
         z((da_l,), f32), z((db_l,), f32), z((), f32), z((), f32), z((), f32),
+        z(e_shape, f32), z(e_shape, f32),
     )
-    (Ca, Cb, F, sa, sb, tra, trb, n), _ = jax.lax.scan(body, init, (a_r, b_r))
+    (Ca, Cb, F, sa, sb, tra, trb, n, _, _), _ = jax.lax.scan(body, init, (a_r, b_r))
     # Ca/Cb/F are identical within a model group (pa/pb already psummed
     # over col_axis) — reduce over rows only.
     Ca, Cb, F = (_psum(t, row_axes) for t in (Ca, Cb, F))
@@ -272,6 +338,7 @@ def dist_randomized_cca(
     engine: str = DEFAULT_ENGINE,
     use_kernels: Optional[bool] = None,
     topology=None,
+    collective: str = "fused",
 ) -> RCCAResult:
     """Run Algorithm 1 on row+feature-sharded A (n×da), B (n×db).
 
@@ -286,7 +353,12 @@ def dist_randomized_cca(
     finish (lines 19-25) is computed redundantly on every device
     (replicated, no host round-trip).  ``engine`` selects the
     per-microbatch update implementation inside the shard_map bodies
-    (see rcca.randomized_cca_streaming).
+    (see rcca.randomized_cca_streaming); with ``engine="kernels"`` and
+    a genuinely sharded ``col_axis``, ``collective`` picks the sharded
+    kernel path — ``"fused"`` (default: staged kernels with the
+    partial-P psum folded at the phase boundary), ``"fused-int8ef"``
+    (same, int8+error-feedback compressed psum for the cross-pod hop),
+    or ``"unfused"`` (legacy matmul pair around a full-width psum).
     """
     engine = resolve_engine(engine, use_kernels)
     if topology is not None:
@@ -338,6 +410,7 @@ def dist_randomized_cca(
         Ya, Yb, sa, sb, tra, trb, nn = power_pass_local(
             a, b, Qa, Qb, row_axes=row_axes, col_axis=col_axis,
             microbatch=microbatch, compute_dtype=compute_dtype, engine=engine,
+            collective=collective,
         )
         if cfg.center:
             mu_bQ = (sb / nn) @ Qb.astype(jnp.float32)
@@ -366,6 +439,7 @@ def dist_randomized_cca(
         Ca, Cb, F, sa, sb, tra, trb, nn = final_pass_local(
             a, b, Qa, Qb, row_axes=row_axes, col_axis=col_axis,
             microbatch=microbatch, compute_dtype=compute_dtype, engine=engine,
+            collective=collective,
         )
         Qa32 = Qa.astype(jnp.float32)
         Qb32 = Qb.astype(jnp.float32)

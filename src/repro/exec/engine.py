@@ -178,6 +178,8 @@ def run_fold(indexed_chunks, update_fn, acc: SegmentedAccumulator, Qa, Qb, *,
             cost = cost_fn(a, b)
             attrs["flops"] = cost["flops"]
             attrs["bytes"] = cost["bytes"]
+            if cost.get("schedule") is not None:
+                attrs["schedule"] = cost["schedule"]
             kernel_parts.extend(cost["kernels"])
         with obs.span("chunk", **attrs):
             acc.update(chunk_idx, update_fn, a, b, Qa, Qb)
@@ -306,6 +308,8 @@ def fold_groups_on_mesh(get_chunk, groups: Sequence[int], update_fn,
                 if chunk_cost is not None:
                     fattrs["flops"] = chunk_cost["flops"] * len(ids) * G
                     fattrs["bytes"] = chunk_cost["bytes"] * len(ids) * G
+                    if chunk_cost.get("schedule") is not None:
+                        fattrs["schedule"] = chunk_cost["schedule"]
                 with obs.span("mesh_fold", **fattrs):
                     out = fold_batch(a_blk, b_blk, Qa, Qb)
                     for i, g in enumerate(ids):

@@ -6,9 +6,14 @@ matmul.py    — MXU-tiled NN/TN matmul (f32 VMEM accumulator) + the
 powerpass.py — fused project+accumulate (one HBM read of A and B per
                range-finder update; 2 pallas_calls per chunk, not 4);
                column-bucketed third grid axis keeps it fused at any
-               da (Europarl d = 2^19 included)
+               da (Europarl d = 2^19 included); plus the staged
+               (P-reuse) schedule — ``proj_stage`` computes P = B Q
+               once into HBM scratch and ``powerpass_sweep`` reloads
+               it per bucket, dropping the n_buckets·proj recompute
 projgram.py  — fused project+gram (one HBM read of X per final pass);
-               C-column bucketing covers sketches past k̃p = 1024
+               C-column bucketing covers sketches past k̃p = 1024;
+               staged variant shares ``proj_stage`` and sweeps the
+               gram buckets with ``gram_sweep``
 rand.py      — counter-based tile PRNG (Threefry-2x32 + Box–Muller);
                both fused kernels have ``*_seeded`` variants that
                generate their Ω tiles in-kernel from a (2,)-uint32
@@ -39,17 +44,27 @@ hardware to populate it (``$RCCA_AUTOTUNE_CACHE`` overrides the cache
 path).  Unswept shapes fall back to the 512³ heuristic.  Caps bind at
 trace time: sweep before a shape's first jitted use in the process, or
 the already-compiled blocks stay live until restart.
+
+The same cache also stores *schedule* entries (``op="powerpass-staged"``
+/ ``"projgram-staged"``) recording the measured staged-vs-recompute
+winner per shape; unswept shapes fall back to the analytic roofline
+crossover in :func:`matmul.pick_schedule`.
 """
 
 import dataclasses
 from typing import Callable, Optional, Tuple
 
 from . import autotune, compat, ops, plan, rand, ref
-from .matmul import pallas_matmul, plan_matmul
-from .powerpass import (plan_powerpass, plan_powerpass_seeded,
-                        power_project_accumulate,
-                        power_project_accumulate_seeded)
-from .projgram import plan_projgram, plan_projgram_seeded, projgram, projgram_seeded
+from .matmul import pallas_matmul, pick_schedule, plan_matmul
+from .powerpass import (choose_powerpass_schedule, plan_powerpass,
+                        plan_powerpass_seeded, plan_powerpass_staged,
+                        plan_powerpass_sweep, plan_proj_stage,
+                        plan_proj_stage_seeded, power_project_accumulate,
+                        power_project_accumulate_seeded, powerpass_sweep,
+                        proj_stage, proj_stage_seeded)
+from .projgram import (choose_projgram_schedule, gram_sweep, plan_gram_sweep,
+                       plan_projgram, plan_projgram_seeded,
+                       plan_projgram_staged, projgram, projgram_seeded)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -200,6 +215,76 @@ KERNEL_REGISTRY: dict = {
              _sds((2,), "uint32")),
         ),
     ),
+    # --- staged (P-reuse) schedule family: phase-1 stage + phase-2 sweeps
+    "proj_stage": KernelDef(
+        name="proj_stage",
+        plan=lambda p: plan_proj_stage(p["n"], p["d"], p["kt"], p["dtype"]),
+        probes=(
+            {"n": 256, "d": 500, "kt": 64, "dtype": "float32"},
+            # wide-sketch regime: the staged P block is k̃p-row-capped
+            {"n": 256, "d": 256, "kt": 2048, "dtype": "float32"},
+            {"n": 128, "d": 200, "kt": 64, "dtype": "bfloat16"},
+            # degenerate fallback regime: k̃p > 8192 → plan is None
+            {"n": 128, "d": 128, "kt": 8320, "dtype": "float32"},
+        ),
+        abstract=lambda p: (
+            __import__("functools").partial(proj_stage, interpret=True),
+            (_sds((p["n"], p["d"]), p["dtype"]),
+             _sds((p["d"], p["kt"]), p["dtype"])),
+        ),
+    ),
+    "proj_stage_seeded": KernelDef(
+        name="proj_stage_seeded",
+        plan=lambda p: plan_proj_stage_seeded(p["n"], p["d"], p["kt"],
+                                              p["dtype"]),
+        probes=(
+            {"n": 256, "d": 500, "kt": 64, "dtype": "float32"},
+            {"n": 256, "d": 256, "kt": 2048, "dtype": "float32"},
+            {"n": 128, "d": 200, "kt": 64, "dtype": "bfloat16"},
+            # degenerate fallback regime: k̃p > 8192 → plan is None
+            {"n": 128, "d": 128, "kt": 8320, "dtype": "float32"},
+        ),
+        abstract=lambda p: (
+            __import__("functools").partial(proj_stage_seeded, kt=p["kt"],
+                                            q_dtype=p["dtype"],
+                                            interpret=True),
+            (_sds((p["n"], p["d"]), p["dtype"]),
+             _sds((2,), "uint32")),
+        ),
+    ),
+    "powerpass_sweep": KernelDef(
+        name="powerpass_sweep",
+        plan=lambda p: plan_powerpass_sweep(p["n"], p["da"], p["kt"],
+                                            p["dtype"]),
+        probes=(
+            {"n": 256, "da": 500, "kt": 64, "dtype": "float32"},
+            # forced multi-bucket regime: dap·k̃p blows one block
+            {"n": 256, "da": 4096, "kt": 512, "dtype": "float32"},
+            {"n": 128, "da": 256, "kt": 64, "dtype": "bfloat16"},
+            # degenerate fallback regime: k̃p > 8192 → plan is None
+            {"n": 128, "da": 128, "kt": 8320, "dtype": "float32"},
+        ),
+        abstract=lambda p: (
+            __import__("functools").partial(powerpass_sweep, interpret=True),
+            (_sds((p["n"], p["da"]), p["dtype"]),
+             _sds((p["n"], p["kt"]), "float32")),
+        ),
+    ),
+    "gram_sweep": KernelDef(
+        name="gram_sweep",
+        plan=lambda p: plan_gram_sweep(p["n"], p["kt"]),
+        probes=(
+            {"n": 256, "kt": 64, "dtype": "float32"},
+            # forced multi-bucket regime: k̃p² blows one block
+            {"n": 256, "kt": 2048, "dtype": "float32"},
+            # degenerate fallback regime: k̃p > 8192 → plan is None
+            {"n": 128, "kt": 8320, "dtype": "float32"},
+        ),
+        abstract=lambda p: (
+            __import__("functools").partial(gram_sweep, interpret=True),
+            (_sds((p["n"], p["kt"]), "float32"),),
+        ),
+    ),
 }
 
 
@@ -212,14 +297,27 @@ __all__ = [
     "ref",
     "KernelDef",
     "KERNEL_REGISTRY",
+    "choose_powerpass_schedule",
+    "choose_projgram_schedule",
+    "gram_sweep",
     "pallas_matmul",
+    "pick_schedule",
+    "plan_gram_sweep",
     "plan_matmul",
     "plan_powerpass",
     "plan_powerpass_seeded",
+    "plan_powerpass_staged",
+    "plan_powerpass_sweep",
+    "plan_proj_stage",
+    "plan_proj_stage_seeded",
     "plan_projgram",
     "plan_projgram_seeded",
+    "plan_projgram_staged",
     "power_project_accumulate",
     "power_project_accumulate_seeded",
+    "powerpass_sweep",
+    "proj_stage",
+    "proj_stage_seeded",
     "projgram",
     "projgram_seeded",
 ]

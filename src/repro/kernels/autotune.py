@@ -14,6 +14,12 @@ The fused bucketed kernels tune the same way (``autotune_powerpass``,
 their cache entries carry (block_n, block_contraction, bucket) caps
 under op="powerpass"/"projgram", and unswept shapes default to
 buckets as large as the shared VMEM budget allows (DEFAULT_OP_CAPS).
+The staged-vs-recompute schedule choice tunes the same way
+(``autotune_powerpass_staged`` / ``autotune_projgram_staged``): entries
+under op="powerpass-staged"/"projgram-staged" carry
+``{"schedule": "staged"|"recompute"}`` and override the analytic
+crossover rule in ``choose_powerpass_schedule`` /
+``choose_projgram_schedule``.
 
 Cache location: ``$RCCA_AUTOTUNE_CACHE``, else
 ``~/.cache/repro/pallas_autotune.json``.  A missing or corrupt cache —
@@ -122,6 +128,35 @@ def record(op, M, K, N, dtype, blocks, us: float | None = None,
     if us is not None:
         entry["us"] = round(float(us), 1)
     _load()[shape_key(op, M, K, N, dtype, backend, extra=extra)] = entry
+    _persist()
+
+
+def _schedule_key(op: str, dims: tuple, dtype, backend: str | None = None) -> str:
+    """Schedule entries reuse the shape-key format: 3 dims map to
+    ``MxKxN``, 4 dims add the ``extra`` suffix (powerpass-staged keys
+    carry the bucketed dap as the fourth dim)."""
+    extra = dims[3] if len(dims) > 3 else None
+    return shape_key(op, dims[0], dims[1], dims[2], dtype, backend,
+                     extra=extra)
+
+
+def lookup_schedule(op: str, dims: tuple, dtype) -> str | None:
+    """Tuned schedule choice (``"staged"`` / ``"recompute"``) for a
+    padded problem under ``op="powerpass-staged"`` / ``"projgram-staged"``,
+    or ``None`` when unswept — the caller then applies the analytic
+    crossover rule.  Malformed entries read as unswept."""
+    ent = _load().get(_schedule_key(op, dims, dtype))
+    sched = ent.get("schedule") if isinstance(ent, dict) else None
+    return sched if sched in ("staged", "recompute") else None
+
+
+def record_schedule(op: str, dims: tuple, dtype, schedule: str,
+                    us: float | None = None,
+                    backend: str | None = None) -> None:
+    entry: dict = {"schedule": str(schedule)}
+    if us is not None:
+        entry["us"] = round(float(us), 1)
+    _load()[_schedule_key(op, dims, dtype, backend)] = entry
     _persist()
 
 
@@ -279,4 +314,81 @@ def autotune_projgram(x: jax.Array, q: jax.Array, *,
     if best is None:
         return DEFAULT_OP_CAPS["projgram"]
     record("projgram", np_, dp, ktp, x.dtype, best, us=best_us)
+    return best
+
+
+def _time_schedules(run, schedules, iters: int) -> tuple[str | None, float]:
+    best, best_us = None, float("inf")
+    for sched in schedules:
+        try:
+            jax.block_until_ready(run(sched))  # compile + warm up
+            t0 = time.perf_counter()
+            out = None
+            for _ in range(iters):
+                out = run(sched)
+            jax.block_until_ready(out)
+        except Exception:
+            continue
+        us = (time.perf_counter() - t0) / iters * 1e6
+        if us < best_us:
+            best, best_us = sched, us
+    return best, best_us
+
+
+def autotune_powerpass_staged(a: jax.Array, b: jax.Array, q: jax.Array, *,
+                              interpret: bool | None = None,
+                              iters: int = 2) -> str:
+    """Time the staged vs. recompute powerpass schedules for one shape;
+    persist the winner under op="powerpass-staged" so
+    ``choose_powerpass_schedule`` prefers the measurement over the
+    analytic crossover.  Degenerate shapes return "recompute" and
+    record nothing."""
+    from .matmul import _round_up
+    from .ops import _default_interpret
+    from .powerpass import plan_powerpass_staged, power_project_accumulate
+
+    interpret = _default_interpret() if interpret is None else interpret
+    n, da = a.shape
+    db, kt = q.shape
+    np_, dap = _round_up(n, 128), _round_up(da, 128)
+    dbp, ktp = _round_up(db, 128), _round_up(kt, 128)
+    if plan_powerpass_staged(n, da, db, kt, a.dtype) is None:
+        return "recompute"
+
+    def run(sched):
+        return power_project_accumulate(a, b, q, schedule=sched,
+                                        interpret=interpret)
+
+    best, best_us = _time_schedules(run, ("recompute", "staged"), iters)
+    if best is None:
+        return "recompute"
+    record_schedule("powerpass-staged", (np_, dbp, ktp, dap), a.dtype, best,
+                    us=best_us)
+    return best
+
+
+def autotune_projgram_staged(x: jax.Array, q: jax.Array, *,
+                             interpret: bool | None = None,
+                             iters: int = 2) -> str:
+    """Time the staged vs. recompute projgram schedules for one shape;
+    persist the winner under op="projgram-staged"."""
+    from .matmul import _round_up
+    from .ops import _default_interpret
+    from .projgram import plan_projgram_staged, projgram
+
+    interpret = _default_interpret() if interpret is None else interpret
+    n, d = x.shape
+    kt = q.shape[1]
+    np_, dp, ktp = _round_up(n, 128), _round_up(d, 128), _round_up(kt, 128)
+    if plan_projgram_staged(n, d, kt, x.dtype) is None:
+        return "recompute"
+
+    def run(sched):
+        return projgram(x, q, schedule=sched, interpret=interpret)
+
+    best, best_us = _time_schedules(run, ("recompute", "staged"), iters)
+    if best is None:
+        return "recompute"
+    record_schedule("projgram-staged", (np_, dp, ktp), x.dtype, best,
+                    us=best_us)
     return best

@@ -82,6 +82,34 @@ def _mm_tn_kernel(x_ref, p_ref, o_ref, acc_ref, *, n_k_steps: int):
 #: unfused matmul pair only when even a 128-row block cannot fit.
 VMEM_BLOCK_ELEMS = 1 << 20
 
+#: Modelled accelerator balance point (peak MXU FLOP/s ÷ HBM bytes/s)
+#: used by the staged-vs-recompute schedule crossover.  The default is
+#: the benchmark target's ratio (~197 TFLOP/s ÷ 819 GB/s ≈ 240 — the
+#: same constants ``benchmarks/kernel_bench.py`` rooflines against); an
+#: autotuned schedule entry (``op="powerpass-staged"`` /
+#: ``"projgram-staged"``) always overrides the analytic rule, so this
+#: constant only decides unswept shapes.
+ROOFLINE_FLOPS_PER_BYTE = 240.0
+
+
+def pick_schedule(costs: dict, *,
+                  roofline: float = ROOFLINE_FLOPS_PER_BYTE) -> str:
+    """Shared-budget crossover rule between kernel schedules.
+
+    ``costs`` maps a schedule name to its modelled ``(flops, bytes)``
+    for one launch (or launch pair).  A schedule's modelled wall time in
+    HBM-byte units is ``max(flops / roofline, bytes)`` — compute-bound
+    schedules are charged their FLOPs at the balance point, memory-bound
+    ones their traffic — and the cheaper schedule wins.  Ties break
+    deterministically by name order, so the choice is reproducible
+    across processes.
+    """
+    def t(c) -> float:
+        flops, bytes_ = c
+        return max(float(flops) / roofline, float(bytes_))
+
+    return min(sorted(costs), key=lambda k: t(costs[k]))
+
 
 def vmem_row_cap(cols: int) -> int:
     """Largest multiple-of-128 row count ``r`` with ``r·cols`` inside

@@ -15,12 +15,25 @@ import jax.numpy as jnp
 
 from .matmul import pallas_matmul, plan_matmul
 from .powerpass import (
+    choose_powerpass_schedule,
     plan_powerpass,
     plan_powerpass_seeded,
+    plan_powerpass_staged,
     power_project_accumulate,
     power_project_accumulate_seeded,
+    powerpass_sweep,
+    proj_stage,
+    proj_stage_seeded,
 )
-from .projgram import plan_projgram, plan_projgram_seeded, projgram, projgram_seeded
+from .projgram import (
+    choose_projgram_schedule,
+    gram_sweep,
+    plan_projgram,
+    plan_projgram_seeded,
+    plan_projgram_staged,
+    projgram,
+    projgram_seeded,
+)
 
 # interpret=True on CPU hosts (including the dry-run container), False on TPU.
 def _default_interpret() -> bool:
@@ -41,59 +54,74 @@ def accumulate_tn(x: jax.Array, p: jax.Array, *, interpret: bool | None = None) 
     return pallas_matmul(x, p, transpose_lhs=True, out_dtype=jnp.float32, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def power_pass_chunk(a, b, Qa, Qb, *, interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("schedule", "interpret"))
+def power_pass_chunk(a, b, Qa, Qb, *, schedule: str | None = None,
+                     interpret: bool | None = None):
     """Fused chunk update of Algorithm 1 lines 7-8:
     ΔYa = Aᵀ(B Qb), ΔYb = Bᵀ(A Qa) — one fused project+accumulate
-    kernel per view (powerpass.py); P never makes an HBM round-trip.
-    The kernel buckets the ΔY output columns over a third grid axis, so
-    this stays 2 pallas_calls per chunk at any da/db — including
-    Europarl-scale d = 2^19 — instead of falling back to the unfused
-    matmul pair.  HBM reads: with a single bucket (dap·k̃p within the
-    VMEM budget) each view is read exactly once per update; with more
-    buckets, B/Q re-reads and the projection recompute scale with the
-    bucket count — see powerpass.py's cost model."""
+    kernel per view (powerpass.py); P never makes an HBM round-trip
+    under the recompute schedule, or one staged round-trip under the
+    staged schedule.  The kernel buckets the ΔY output columns, so the
+    fused path holds at any da/db — including Europarl-scale d = 2^19 —
+    instead of falling back to the unfused matmul pair.  ``schedule``
+    (``None`` = per-shape crossover, ``"recompute"``, ``"staged"``)
+    picks between P recomputed per bucket (2 pallas_calls per chunk)
+    and P staged through HBM once with buckets reloading it (4
+    pallas_calls per chunk, ``n_buckets·proj + acc`` → ``proj + acc``
+    FLOPs) — bitwise equal either way; see powerpass.py's cost model."""
     interpret = _default_interpret() if interpret is None else interpret
-    dYa = power_project_accumulate(a, b, Qb, interpret=interpret)
-    dYb = power_project_accumulate(b, a, Qa, interpret=interpret)
+    dYa = power_project_accumulate(a, b, Qb, schedule=schedule,
+                                   interpret=interpret)
+    dYb = power_project_accumulate(b, a, Qa, schedule=schedule,
+                                   interpret=interpret)
     return dYa, dYb
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def final_pass_chunk(a, b, Qa, Qb, *, interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("schedule", "interpret"))
+def final_pass_chunk(a, b, Qa, Qb, *, schedule: str | None = None,
+                     interpret: bool | None = None):
     """Fused chunk update of Algorithm 1 lines 15-17:
     ΔCa = QaᵀAᵀA Qa, ΔCb = QbᵀBᵀB Qb, ΔF = QaᵀAᵀB Qb — projgram
     fusion: P never round-trips through HBM before the Gram.  C-column
     bucketing keeps the fused path for sketches past k̃p = 1024 (the
     paper's Europarl run uses k̃ = 2060); each view is read once per
-    C-column bucket (once total in the single-bucket k̃p ≤ 1024 case —
-    see projgram.py's cost model)."""
+    C-column bucket under the recompute schedule, once total under the
+    staged schedule (``schedule`` as in :func:`power_pass_chunk`; see
+    projgram.py's cost model)."""
     interpret = _default_interpret() if interpret is None else interpret
-    pa, Ca = projgram(a, Qa, interpret=interpret)
-    pb, Cb = projgram(b, Qb, interpret=interpret)
+    pa, Ca = projgram(a, Qa, schedule=schedule, interpret=interpret)
+    pb, Cb = projgram(b, Qb, schedule=schedule, interpret=interpret)
     F = pallas_matmul(pa, pb, transpose_lhs=True, out_dtype=jnp.float32, interpret=interpret)
     return Ca, Cb, F
 
 
-@functools.partial(jax.jit, static_argnames=("kt", "q_dtype", "interpret"))
+@functools.partial(jax.jit, static_argnames=("kt", "q_dtype", "schedule",
+                                             "interpret"))
 def power_pass_chunk_seeded(a, b, seed_a, seed_b, *, kt: int, q_dtype,
+                            schedule: str | None = None,
                             interpret: bool | None = None):
     """Seeded-Ω variant of :func:`power_pass_chunk`:
     ΔYa = Aᵀ(B Ω(seed_b)), ΔYb = Bᵀ(A Ω(seed_a)) with both Ω generated
     tile-by-tile inside the kernels (``rand.normal_tile``) — no
     ``(d, k̃)`` array exists anywhere in this update.  Bitwise identical
     to ``power_pass_chunk(a, b, Qa, Qb)`` with
-    ``Q* = rand.dense_omega(seed_*, d*, kt, q_dtype)``."""
+    ``Q* = rand.dense_omega(seed_*, d*, kt, q_dtype)``.  Under
+    ``schedule="staged"`` each Ω tile is generated exactly once, in the
+    stage phase."""
     interpret = _default_interpret() if interpret is None else interpret
     dYa = power_project_accumulate_seeded(a, b, seed_b, kt=kt,
-                                          q_dtype=q_dtype, interpret=interpret)
+                                          q_dtype=q_dtype, schedule=schedule,
+                                          interpret=interpret)
     dYb = power_project_accumulate_seeded(b, a, seed_a, kt=kt,
-                                          q_dtype=q_dtype, interpret=interpret)
+                                          q_dtype=q_dtype, schedule=schedule,
+                                          interpret=interpret)
     return dYa, dYb
 
 
-@functools.partial(jax.jit, static_argnames=("kt", "q_dtype", "interpret"))
+@functools.partial(jax.jit, static_argnames=("kt", "q_dtype", "schedule",
+                                             "interpret"))
 def final_pass_chunk_seeded(a, b, seed_a, seed_b, *, kt: int, q_dtype,
+                            schedule: str | None = None,
                             interpret: bool | None = None):
     """Seeded-Ω variant of :func:`final_pass_chunk` (the q = 0 direct
     sketch): ΔCa, ΔCb, ΔF against in-kernel generated Ω(seed_a),
@@ -101,42 +129,113 @@ def final_pass_chunk_seeded(a, b, seed_a, seed_b, *, kt: int, q_dtype,
     the materialized path does."""
     interpret = _default_interpret() if interpret is None else interpret
     pa, Ca = projgram_seeded(a, seed_a, kt=kt, q_dtype=q_dtype,
-                             interpret=interpret)
+                             schedule=schedule, interpret=interpret)
     pb, Cb = projgram_seeded(b, seed_b, kt=kt, q_dtype=q_dtype,
-                             interpret=interpret)
+                             schedule=schedule, interpret=interpret)
     F = pallas_matmul(pa, pb, transpose_lhs=True, out_dtype=jnp.float32, interpret=interpret)
     return Ca, Cb, F
 
 
+# --------------------------------------------------------------------------
+# sharded collective-fused ops (col_axis meshes): stage → psum → sweep
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def stage_project(x: jax.Array, q: jax.Array, *,
+                  interpret: bool | None = None) -> jax.Array:
+    """Phase-1 partial projection P_part = X_shard @ Q_shard (f32) on
+    the local feature shard — the collective-fused path psums these
+    partials at the phase boundary instead of wrapping a full-width
+    psum in unfused matmuls."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return proj_stage(x, q, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("kt", "q_dtype", "interpret"))
+def stage_project_seeded(x: jax.Array, seed: jax.Array, *, kt: int, q_dtype,
+                         interpret: bool | None = None) -> jax.Array:
+    """Seeded variant of :func:`stage_project`: the shard's Ω tiles are
+    generated in-kernel, once, in phase 1."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return proj_stage_seeded(x, seed, kt=kt, q_dtype=q_dtype,
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sweep_accumulate(x: jax.Array, p: jax.Array, *,
+                     interpret: bool | None = None) -> jax.Array:
+    """Phase-2 sweep ΔY = Xᵀ P over the psummed P, reloading its tiles
+    per output bucket (powerpass_sweep kernel)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return powerpass_sweep(x, p, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gram_accumulate(p: jax.Array, *,
+                    interpret: bool | None = None) -> jax.Array:
+    """ΔC = Pᵀ P over the psummed P (gram_sweep kernel) — the final
+    pass's collective-fused Gram update."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return gram_sweep(p, interpret=interpret)
+
+
 def _power_view_cost(n: int, d_out: int, d_in: int, kt: int, dtype: str,
-                     seeded: bool) -> list:
-    """Kernel cost entries for one view's ΔY = Xoutᵀ(Xin Ω) update."""
+                     seeded: bool, schedule: str | None = None) -> tuple:
+    """(kernel cost entries, resolved schedule) for one view's
+    ΔY = Xoutᵀ(Xin Ω) update — resolved exactly as the wrapper resolves
+    it, so the roofline counters charge what actually launches (and
+    stop charging the recompute when the launch is staged)."""
     from repro.obs.cost import plan_cost
     plan = (plan_powerpass_seeded(n, d_out, d_in, kt, dtype) if seeded
             else plan_powerpass(n, d_out, d_in, kt, dtype))
-    if plan is not None:
-        return [plan_cost(plan)]
-    # degenerate k̃p: the wrapper decomposes into the unfused matmul pair
-    return [plan_cost(plan_matmul(n, d_in, kt, dtype)),
-            plan_cost(plan_matmul(d_out, n, kt, "float32",
-                                  transpose_lhs=True))]
+    if plan is None:
+        # degenerate k̃p: the wrapper decomposes into the unfused pair
+        return ([plan_cost(plan_matmul(n, d_in, kt, dtype)),
+                 plan_cost(plan_matmul(d_out, n, kt, "float32",
+                                       transpose_lhs=True))], None)
+    sched = schedule or choose_powerpass_schedule(n, d_out, d_in, kt, dtype)
+    if sched == "staged":
+        plans = plan_powerpass_staged(n, d_out, d_in, kt, dtype,
+                                      seeded=seeded)
+        if plans is not None:
+            return [plan_cost(p) for p in plans], "staged"
+    return [plan_cost(plan)], "recompute"
 
 
-def _final_view_cost(n: int, d: int, kt: int, dtype: str, seeded: bool) -> list:
-    """Kernel cost entries for one view's (P, ΔC) projgram update."""
+def _final_view_cost(n: int, d: int, kt: int, dtype: str, seeded: bool,
+                     schedule: str | None = None) -> tuple:
+    """(kernel cost entries, resolved schedule) for one view's (P, ΔC)
+    projgram update."""
     from repro.obs.cost import plan_cost
     plan = (plan_projgram_seeded(n, d, kt, dtype) if seeded
             else plan_projgram(n, d, kt, dtype))
-    if plan is not None:
-        return [plan_cost(plan)]
-    return [plan_cost(plan_matmul(n, d, kt, dtype)),
-            plan_cost(plan_matmul(kt, n, kt, "float32", transpose_lhs=True))]
+    if plan is None:
+        return ([plan_cost(plan_matmul(n, d, kt, dtype)),
+                 plan_cost(plan_matmul(kt, n, kt, "float32",
+                                       transpose_lhs=True))], None)
+    sched = schedule or choose_projgram_schedule(n, d, kt, dtype)
+    if sched == "staged":
+        plans = plan_projgram_staged(n, d, kt, dtype, seeded=seeded)
+        if plans is not None:
+            return [plan_cost(p) for p in plans], "staged"
+    return [plan_cost(plan)], "recompute"
+
+
+def _join_schedules(*scheds) -> str | None:
+    """Collapse per-view schedule choices to one chunk label: the common
+    choice, a "a/b" composite when the views disagree, None when no
+    fused launch carries a schedule (degenerate / jnp)."""
+    seen = sorted({s for s in scheds if s is not None})
+    if not seen:
+        return None
+    return seen[0] if len(seen) == 1 else "/".join(seen)
 
 
 @functools.lru_cache(maxsize=512)
 def chunk_cost(kind: str, n: int, da: int, db: int, kt: int,
                dtype: str = "float32", *, engine: str = "kernels",
-               seeded: bool = False) -> dict:
+               seeded: bool = False, schedule: str | None = None) -> dict:
     """Cost-model flops/bytes for one fused chunk update (both views).
 
     ``kind`` is the pass kind ("power" or "final"); shapes are the
@@ -147,11 +246,17 @@ def chunk_cost(kind: str, n: int, da: int, db: int, kt: int,
     they are the logical dense counts (no padding, Ω always read as a
     materialized array — the jnp path re-derives it on the host).
 
+    ``schedule`` forces staged/recompute accounting; the default
+    ``None`` resolves per shape through the same crossover the kernel
+    wrappers use, and the resolved choice is reported back under the
+    ``"schedule"`` key (None for jnp / degenerate launches).
+
     Memoized per shape so tracing costs a cache lookup per chunk; treat
     the returned dict as read-only.
     """
     from repro.obs.cost import merge_kernel_costs
     isize = jnp.dtype(dtype).itemsize
+    sched: str | None = None
     if engine == "jnp":
         if kind == "power":
             flops = 2 * n * (da + db) * kt * 2  # P = XΩ and Xᵀ P, per view
@@ -167,17 +272,22 @@ def chunk_cost(kind: str, n: int, da: int, db: int, kt: int,
         kernels = [{"kernel": f"jnp_{kind}", "calls": 1,
                     "flops": flops, "bytes": bytes_}]
     elif kind == "power":
-        kernels = (_power_view_cost(n, da, db, kt, dtype, seeded)
-                   + _power_view_cost(n, db, da, kt, dtype, seeded))
+        ka, sa = _power_view_cost(n, da, db, kt, dtype, seeded, schedule)
+        kb, sb = _power_view_cost(n, db, da, kt, dtype, seeded, schedule)
+        kernels = ka + kb
+        sched = _join_schedules(sa, sb)
     elif kind == "final":
         from repro.obs.cost import plan_cost
-        kernels = (_final_view_cost(n, da, kt, dtype, seeded)
-                   + _final_view_cost(n, db, kt, dtype, seeded)
+        ka, sa = _final_view_cost(n, da, kt, dtype, seeded, schedule)
+        kb, sb = _final_view_cost(n, db, kt, dtype, seeded, schedule)
+        kernels = (ka + kb
                    + [plan_cost(plan_matmul(kt, n, kt, "float32",
                                             transpose_lhs=True))])
+        sched = _join_schedules(sa, sb)
     else:
         raise ValueError(f"unknown pass kind {kind!r}")
     kernels = merge_kernel_costs(kernels)
     return {"flops": sum(k["flops"] for k in kernels),
             "bytes": sum(k["bytes"] for k in kernels),
-            "kernels": kernels}
+            "kernels": kernels,
+            "schedule": sched}

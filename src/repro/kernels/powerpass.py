@@ -26,18 +26,32 @@ When ``dap·k̃p`` fits a single block the bucket covers all of ΔY and
 the schedule is identical to the old 2-axis grid — small shapes lose
 nothing.  Arbitrarily large ``da`` (Europarl's d = 2^19) now runs
 fused, and Halko et al. 2011 guarantee blockwise accumulation is
-exact.  COST MODEL (be honest about it): with the bucket axis
-outermost, B and Q are re-read and the projection ``P = B Qb``
-re-accumulated once per bucket, so a chunk costs
+exact.
+
+TWO SCHEDULES, ONE COST MODEL (be honest about it).  The bucketed
+*recompute* schedule above re-reads B and Q and re-accumulates the
+projection ``P = B Qb`` once per bucket, so a chunk costs
 ``n_buckets·proj + acc`` FLOPs versus the unfused pair's
-``proj + acc`` (which instead pays the P HBM round-trip).  Bucketed
-fusion therefore wins when ``n_buckets`` is small and/or the
-projection is cheap relative to accumulation (db ≪ da); at Europarl's
-da = db with thousands of buckets the recompute dominates on real
-hardware — sweep on the TPU target (``make sweep-blocks``) before
-trusting defaults there, and see ROADMAP for the P-reuse schedule
-(P staged through HBM scratch once, buckets reloading instead of
-recomputing) that removes the recompute entirely.  The unfused
+``proj + acc`` (which instead pays the P HBM round-trip).  That wins
+when ``n_buckets`` is small and/or the projection is cheap relative to
+accumulation (db ≪ da); at Europarl's da = db with ~2k buckets the
+recompute dominates.  The *staged* schedule
+(:func:`power_project_accumulate` with ``schedule="staged"``) removes
+the recompute: phase 1 (``proj_stage`` kernel, grid (n_t, db_t))
+computes each row tile's ``P = B Qb`` exactly once, accumulating f32
+directly in the (bn, k̃p) output block (index map constant in the
+inner contraction axis, so the block stays VMEM-resident and hits HBM
+once); phase 2 (``powerpass_sweep`` kernel, grid (da_t, n_t)) sweeps
+the ΔY buckets reloading the staged P tiles instead of recomputing
+them.  Cost: ``proj + acc`` FLOPs — bucket-count-independent — plus
+one ``n×k̃`` f32 HBM round-trip and ``n_buckets`` re-reads of P.  The
+two schedules issue bitwise-identical f32 dot sequences (P is staged
+in full f32 precision), so the choice is pure performance: the
+crossover rule (:func:`choose_powerpass_schedule`, built on
+:func:`repro.kernels.matmul.pick_schedule`) compares the modelled
+``max(flops/roofline, bytes)`` of each schedule per shape, and an
+autotuned ``op="powerpass-staged"`` cache entry (measured by
+``benchmarks/sweep_blocks.py``) overrides the model.  The unfused
 matmul-pair fallback remains only for genuinely degenerate shapes —
 ``k̃p > VMEM_BLOCK_ELEMS/128`` (= 8192), where even a 128-row block of
 ΔY or P blows the budget and fusion is pointless (k̃ ~ d).
@@ -45,7 +59,9 @@ matmul-pair fallback remains only for genuinely degenerate shapes —
 Block caps resolve from the autotune cache (``op="powerpass"``, keyed
 by the padded (n, db, k̃) problem plus the bucketed dap) — see
 :func:`repro.kernels.autotune.autotune_powerpass` and
-``benchmarks/sweep_blocks.py``.
+``benchmarks/sweep_blocks.py``.  The staged schedule resolves blocks
+through the *same* lookup, so both schedules tile identically and
+parity is structural.
 
 Ω-RESIDENCY ACCOUNTING (the ``omega="seeded"`` variant): with a
 materialized sketch the power pass holds Ω = ``d·k̃`` elements resident
@@ -61,6 +77,10 @@ that overlaps the MXU dot on real hardware.  Per power-pass chunk the
 HBM bytes are then ``n·(da+db)·bytes`` (the data reads) instead of
 ``n·(da+db)·bytes + n_buckets·d·k̃·bytes`` with materialized Ω tiles,
 and cluster rounds ship the 8-byte seed instead of the 4 GB array.
+Under the staged schedule the same applies per *phase*: the seeded
+stage kernel generates each Ω tile exactly once (phase 1 is the only
+consumer — the sweep touches no Ω at all), which is the seeded analogue
+of removing the materialized-Ω bucket re-reads.
 """
 
 from __future__ import annotations
@@ -74,7 +94,8 @@ from jax.experimental import pallas as pl
 
 from . import autotune, rand
 from .compat import tpu_compiler_params
-from .matmul import _pad2, _pick_block, _round_up, pallas_matmul, vmem_row_cap
+from .matmul import (_pad2, _pick_block, _round_up, pallas_matmul,
+                     pick_schedule, vmem_row_cap)
 from .plan import BlockDef, KernelPlan, ScalarDef, ScratchDef, launch_args
 
 
@@ -165,7 +186,9 @@ def plan_powerpass(n: int, da: int, db: int, kt: int, dtype, *,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_n", "block_db", "block_da", "interpret")
+    jax.jit,
+    static_argnames=("block_n", "block_db", "block_da", "schedule",
+                     "interpret"),
 )
 def power_project_accumulate(
     a: jax.Array,
@@ -175,6 +198,7 @@ def power_project_accumulate(
     block_n: int | None = None,
     block_db: int | None = None,
     block_da: int | None = None,
+    schedule: str | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Return ΔY = aᵀ (b @ q) with a and b each read from HBM once.
@@ -184,6 +208,12 @@ def power_project_accumulate(
     ``block_da`` caps the output-column bucket (rows of ΔY resident in
     VMEM at once); ``None`` caps resolve from the autotune cache
     (``op="powerpass"``) and then from the shared VMEM budget.
+
+    ``schedule`` picks ``"recompute"`` (P re-accumulated per bucket) or
+    ``"staged"`` (P staged through HBM once, buckets reload it); the
+    default ``None`` resolves per shape via
+    :func:`choose_powerpass_schedule`.  Both schedules are bitwise
+    equal — P is carried in full f32 precision either way.
     """
     n, da = a.shape
     n2, db = b.shape
@@ -198,6 +228,21 @@ def power_project_accumulate(
         p = pallas_matmul(b, q, out_dtype=jnp.float32, interpret=interpret)
         return pallas_matmul(a, p, transpose_lhs=True, out_dtype=jnp.float32,
                              interpret=interpret)
+    if schedule is None:
+        schedule = choose_powerpass_schedule(
+            n, da, db, kt, a.dtype, block_n=block_n, block_db=block_db,
+            block_da=block_da)
+    if schedule == "staged":
+        plans = plan_powerpass_staged(n, da, db, kt, a.dtype,
+                                      block_n=block_n, block_db=block_db,
+                                      block_da=block_da)
+        if plans is not None:
+            stage, sweep = plans
+            ap = _pad2(a, *sweep.in_specs[0].padded)
+            bp = _pad2(b, *stage.in_specs[0].padded)
+            qp = _pad2(q, *stage.in_specs[1].padded)
+            out = _staged_call(ap, bp, qp, stage, sweep, interpret)
+            return out[:da, :kt]
     ap = _pad2(a, *plan.in_specs[0].padded)
     bp = _pad2(b, *plan.in_specs[1].padded)
     qp = _pad2(q, *plan.in_specs[2].padded)
@@ -276,7 +321,7 @@ def plan_powerpass_seeded(n: int, da: int, db: int, kt: int, dtype, *,
 @functools.partial(
     jax.jit,
     static_argnames=("kt", "q_dtype", "block_n", "block_db", "block_da",
-                     "interpret"),
+                     "schedule", "interpret"),
 )
 def power_project_accumulate_seeded(
     a: jax.Array,
@@ -288,6 +333,7 @@ def power_project_accumulate_seeded(
     block_n: int | None = None,
     block_db: int | None = None,
     block_da: int | None = None,
+    schedule: str | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Return ΔY = aᵀ (b @ Ω(seed)) with Ω generated inside the kernel.
@@ -298,6 +344,9 @@ def power_project_accumulate_seeded(
     oracle — because the in-kernel tiles are the same counter-PRNG
     values cast the same way.  Only the degenerate unfused fallback
     (k̃p > 8192) materializes Ω transiently.
+
+    ``schedule`` as in :func:`power_project_accumulate`; under
+    ``"staged"`` each Ω tile is generated exactly once, in phase 1.
     """
     n, da = a.shape
     n2, db = b.shape
@@ -312,6 +361,26 @@ def power_project_accumulate_seeded(
         p = pallas_matmul(b, q, out_dtype=jnp.float32, interpret=interpret)
         return pallas_matmul(a, p, transpose_lhs=True, out_dtype=jnp.float32,
                              interpret=interpret)
+    if schedule is None:
+        schedule = choose_powerpass_schedule(
+            n, da, db, kt, a.dtype, block_n=block_n, block_db=block_db,
+            block_da=block_da)
+    if schedule == "staged":
+        plans = plan_powerpass_staged(n, da, db, kt, a.dtype,
+                                      block_n=block_n, block_db=block_db,
+                                      block_da=block_da, seeded=True)
+        if plans is not None:
+            stage, sweep = plans
+            ap = _pad2(a, *sweep.in_specs[0].padded)
+            bp = _pad2(b, *stage.in_specs[0].padded)
+            bd = stage.in_specs[0].shape[1]
+            ktp = stage.out_specs[0].shape[1]
+            out = _staged_call(
+                ap, bp, jnp.asarray(seed, jnp.uint32), stage, sweep,
+                interpret,
+                seeded_kwargs=dict(bd=bd, ktp=ktp, d=db, kt=kt,
+                                   q_dtype=q_dtype))
+            return out[:da, :kt]
     ap = _pad2(a, *plan.in_specs[0].padded)
     bp = _pad2(b, *plan.in_specs[1].padded)
     bdb = plan.in_specs[1].shape[1]
@@ -326,4 +395,333 @@ def power_project_accumulate_seeded(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
     )(jnp.asarray(seed, jnp.uint32), ap, bp)
+    return out[:da, :kt]
+
+
+# --------------------------------------------------------------------------
+# staged (P-reuse) schedule: stage P through HBM once, sweep buckets
+# --------------------------------------------------------------------------
+
+
+def _proj_stage_kernel(x_ref, q_ref, p_ref):
+    """Phase 1: P = Σ_k x_tile q_tile, f32, accumulated in the output
+    block itself; grid (n_t, k_t) with the contraction innermost.  The
+    (bn, k̃p) block's index map is constant in k, so it stays
+    VMEM-resident across the contraction and is written to HBM exactly
+    once — the one ``n×k̃`` round-trip the staged schedule pays."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        p_ref[...] = jnp.zeros_like(p_ref)
+
+    p_ref[...] += jax.lax.dot_general(
+        x_ref[...], q_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _proj_stage_seeded_kernel(seed_ref, x_ref, p_ref, *,
+                              bd: int, ktp: int, d: int, kt: int, q_dtype):
+    """Seeded phase 1: the (bd, k̃p) Ω tile is regenerated from the SMEM
+    seed at global row offset ``k_step·bd`` — each tile is generated
+    exactly once per chunk, since only phase 1 touches Ω at all."""
+    k_step = pl.program_id(1)
+
+    @pl.when(k_step == 0)
+    def _init():
+        p_ref[...] = jnp.zeros_like(p_ref)
+
+    q_tile = rand.normal_tile(
+        seed_ref[0], seed_ref[1],
+        (k_step * bd).astype(rand.U32), rand.U32(0),
+        (bd, ktp), row_limit=d, col_limit=kt,
+    ).astype(q_dtype)
+    p_ref[...] += jax.lax.dot_general(
+        x_ref[...], q_tile, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _powerpass_sweep_kernel(a_ref, p_ref, y_ref):
+    """Phase 2: y_bucket += a_bucketᵀ p; grid (da_t, n_t), rows
+    innermost.  Reloads the staged (bn, k̃p) P tiles once per bucket
+    instead of recomputing them — same contraction order and f32
+    accumulation as the recompute schedule's last-k step, so the two
+    schedules are bitwise equal."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[...] += jax.lax.dot_general(  # aᵀ p without materializing aᵀ
+        a_ref[...], p_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def plan_proj_stage(n: int, d: int, kt: int, dtype, *,
+                    bn: int | None = None,
+                    bd: int | None = None) -> KernelPlan | None:
+    """Launch plan for the phase-1 stage kernel (P = X Q, f32).
+
+    ``bn``/``bd`` are *resolved* blocks when given (the staged composite
+    passes the recompute plan's blocks verbatim so both schedules tile
+    identically); ``None`` resolves standalone from the shared VMEM
+    budget — the entry point the registry and the sharded
+    collective-fused path use.
+    """
+    np_, dp, ktp = _round_up(n, 128), _round_up(d, 128), _round_up(kt, 128)
+    row_cap = vmem_row_cap(ktp)
+    if row_cap < 128:
+        return None
+    if bd is None:
+        bd = _pick_block(dp, min(512, row_cap))
+    if bn is None:
+        bn = _pick_block(np_, min(256, row_cap, vmem_row_cap(bd)))
+    in_dt = str(jnp.dtype(dtype))
+    return KernelPlan(
+        name="proj_stage",
+        grid=(np_ // bn, dp // bd),
+        in_specs=(
+            BlockDef((bn, bd), lambda i, k: (i, k), (np_, dp), in_dt),
+            BlockDef((bd, ktp), lambda i, k: (k, 0), (dp, ktp), in_dt),
+        ),
+        out_specs=(
+            BlockDef((bn, ktp), lambda i, k: (i, 0), (np_, ktp), "float32"),
+        ),
+        scratch=(),
+        out_shape=((n, kt),),
+        accum_outputs=(0,),
+    )
+
+
+def plan_proj_stage_seeded(n: int, d: int, kt: int, dtype, *,
+                           bn: int | None = None,
+                           bd: int | None = None) -> KernelPlan | None:
+    """Seeded phase-1 plan: the stage plan's geometry with the Q
+    operand replaced by a (2,)-uint32 SMEM seed scalar."""
+    base = plan_proj_stage(n, d, kt, dtype, bn=bn, bd=bd)
+    if base is None:
+        return None
+    return dataclasses.replace(
+        base,
+        name="proj_stage_seeded",
+        in_specs=base.in_specs[:1],
+        scalars=(ScalarDef((2,), "uint32"),),
+    )
+
+
+def plan_powerpass_sweep(n: int, da: int, kt: int, dtype, *,
+                         bn: int | None = None,
+                         bda: int | None = None,
+                         p_dtype="float32") -> KernelPlan | None:
+    """Launch plan for the phase-2 sweep kernel (ΔY = AᵀP, bucketed).
+
+    ``dtype`` is A's dtype; ``p_dtype`` is the staged P's (f32 inside
+    the composite, the compute dtype on the sharded collective-fused
+    path where P crosses a psum).  Blocks as in :func:`plan_proj_stage`.
+    """
+    np_, dap, ktp = _round_up(n, 128), _round_up(da, 128), _round_up(kt, 128)
+    row_cap = vmem_row_cap(ktp)
+    if row_cap < 128:
+        return None
+    if bda is None:
+        bda = dap if dap <= row_cap else _pick_block(dap, row_cap)
+    if bn is None:
+        bn = _pick_block(np_, min(256, row_cap, vmem_row_cap(bda)))
+    in_dt = str(jnp.dtype(dtype))
+    return KernelPlan(
+        name="powerpass_sweep",
+        grid=(dap // bda, np_ // bn),
+        in_specs=(
+            BlockDef((bn, bda), lambda j, i: (i, j), (np_, dap), in_dt),
+            BlockDef((bn, ktp), lambda j, i: (i, 0), (np_, ktp),
+                     str(jnp.dtype(p_dtype))),
+        ),
+        out_specs=(
+            BlockDef((bda, ktp), lambda j, i: (j, 0), (dap, ktp), "float32"),
+        ),
+        scratch=(),
+        out_shape=((da, kt),),
+        accum_outputs=(0,),
+    )
+
+
+def plan_powerpass_staged(
+    n: int, da: int, db: int, kt: int, dtype, *,
+    block_n: int | None = None, block_db: int | None = None,
+    block_da: int | None = None, seeded: bool = False,
+) -> tuple[KernelPlan, KernelPlan] | None:
+    """(stage, sweep) plan pair for the staged schedule, or ``None`` on
+    the degenerate shapes.  Blocks are extracted from the *recompute*
+    plan for the same shape (same autotune lookup, same VMEM budget),
+    so staged and recompute tile identically — the structural basis of
+    their bitwise parity."""
+    base = plan_powerpass(n, da, db, kt, dtype, block_n=block_n,
+                          block_db=block_db, block_da=block_da)
+    if base is None:
+        return None
+    bn, bda = base.in_specs[0].shape
+    bdb = base.in_specs[1].shape[1]
+    if seeded:
+        stage = plan_proj_stage_seeded(n, db, kt, dtype, bn=bn, bd=bdb)
+    else:
+        stage = plan_proj_stage(n, db, kt, dtype, bn=bn, bd=bdb)
+    sweep = plan_powerpass_sweep(n, da, kt, dtype, bn=bn, bda=bda)
+    if stage is None or sweep is None:
+        return None
+    return stage, sweep
+
+
+def choose_powerpass_schedule(
+    n: int, da: int, db: int, kt: int, dtype, *,
+    block_n: int | None = None, block_db: int | None = None,
+    block_da: int | None = None,
+) -> str:
+    """``"staged"`` or ``"recompute"`` for one powerpass shape.
+
+    Order of authority: an autotuned schedule entry
+    (``op="powerpass-staged"``, written by
+    :func:`repro.kernels.autotune.autotune_powerpass_staged`), then the
+    analytic roofline crossover (:func:`repro.kernels.matmul.pick_schedule`)
+    over the KernelPlan-derived cost model — the same model the obs
+    roofline counters charge, so the report's numbers explain the
+    choice.  Single-bucket shapes always recompute: staged would add
+    the P round-trip and remove nothing.
+    """
+    np_, dap = _round_up(n, 128), _round_up(da, 128)
+    dbp, ktp = _round_up(db, 128), _round_up(kt, 128)
+    tuned = autotune.lookup_schedule("powerpass-staged",
+                                     (np_, dbp, ktp, dap), dtype)
+    if tuned is not None:
+        return tuned
+    base = plan_powerpass(n, da, db, kt, dtype, block_n=block_n,
+                          block_db=block_db, block_da=block_da)
+    if base is None or base.grid[0] == 1:
+        return "recompute"
+    plans = plan_powerpass_staged(n, da, db, kt, dtype, block_n=block_n,
+                                  block_db=block_db, block_da=block_da)
+    if plans is None:
+        return "recompute"
+    from repro.obs.cost import plan_cost  # deferred: obs imports kernels.plan
+
+    rec = plan_cost(base)
+    stage, sweep = (plan_cost(p) for p in plans)
+    return pick_schedule({
+        "recompute": (rec["flops"], rec["bytes"]),
+        "staged": (stage["flops"] + sweep["flops"],
+                   stage["bytes"] + sweep["bytes"]),
+    })
+
+
+def _staged_call(ap, bp, qp_or_seed, stage: KernelPlan, sweep: KernelPlan,
+                 interpret: bool, *, seeded_kwargs=None) -> jax.Array:
+    """Launch the (stage, sweep) pallas_call pair; returns padded ΔY.
+    The staged P stays padded (np_, k̃p) f32 between the phases — no
+    host-side slicing, one HBM round-trip."""
+    if seeded_kwargs is None:
+        body = _proj_stage_kernel
+        operands = (bp, qp_or_seed)
+    else:
+        body = functools.partial(_proj_stage_seeded_kernel, **seeded_kwargs)
+        operands = (qp_or_seed, bp)  # seed scalar leads the blocked operands
+    p = pl.pallas_call(
+        body,
+        **launch_args(stage),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(*operands)
+    return pl.pallas_call(
+        _powerpass_sweep_kernel,
+        **launch_args(sweep),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(ap, p)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def proj_stage(x: jax.Array, q: jax.Array, *,
+               interpret: bool = False) -> jax.Array:
+    """Standalone phase-1 stage: P = x @ q in f32, staged blockwise.
+
+    x: (n, d), q: (d, k̃) → (n, k̃) f32.  Used by the sharded
+    collective-fused path (partial P on the local feature shard, psum
+    at the phase boundary) and as the registry entry point for the
+    ``proj_stage`` contract checks; the staged composite inlines the
+    same kernel with the recompute plan's blocks.
+    """
+    n, d = x.shape
+    d2, kt = q.shape
+    assert d == d2, f"contraction mismatch {d} vs {d2}"
+    plan = plan_proj_stage(n, d, kt, x.dtype)
+    if plan is None:
+        return pallas_matmul(x, q, out_dtype=jnp.float32, interpret=interpret)
+    xp = _pad2(x, *plan.in_specs[0].padded)
+    qp = _pad2(q, *plan.in_specs[1].padded)
+    p = pl.pallas_call(
+        _proj_stage_kernel,
+        **launch_args(plan),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(xp, qp)
+    return p[:n, :kt]
+
+
+@functools.partial(jax.jit, static_argnames=("kt", "q_dtype", "interpret"))
+def proj_stage_seeded(x: jax.Array, seed: jax.Array, *, kt: int,
+                      q_dtype=None, interpret: bool = False) -> jax.Array:
+    """Standalone seeded phase-1 stage: P = x @ Ω(seed) in f32, each Ω
+    tile generated in-kernel exactly once.  Bitwise identical to
+    ``proj_stage(x, rand.dense_omega(seed, d, kt, q_dtype))``."""
+    n, d = x.shape
+    q_dtype = x.dtype if q_dtype is None else jnp.dtype(q_dtype)
+    plan = plan_proj_stage_seeded(n, d, kt, x.dtype)
+    if plan is None:
+        q = rand.dense_omega(seed, d, kt, q_dtype)
+        return pallas_matmul(x, q, out_dtype=jnp.float32, interpret=interpret)
+    xp = _pad2(x, *plan.in_specs[0].padded)
+    bd = plan.in_specs[0].shape[1]
+    ktp = plan.out_specs[0].shape[1]
+    p = pl.pallas_call(
+        functools.partial(_proj_stage_seeded_kernel, bd=bd, ktp=ktp,
+                          d=d, kt=kt, q_dtype=q_dtype),
+        **launch_args(plan),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(jnp.asarray(seed, jnp.uint32), xp)
+    return p[:n, :kt]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def powerpass_sweep(a: jax.Array, p: jax.Array, *,
+                    interpret: bool = False) -> jax.Array:
+    """Standalone phase-2 sweep: ΔY = aᵀ p, reloading staged P tiles
+    per ΔY bucket.  a: (n, da), p: (n, k̃) → (da, k̃) f32.  ``p`` may be
+    f32 (local staged composite) or the compute dtype (the sharded path,
+    where P crosses the ``col_axis`` psum between the phases)."""
+    n, da = a.shape
+    n2, kt = p.shape
+    assert n == n2, f"row mismatch {n} vs {n2}"
+    plan = plan_powerpass_sweep(n, da, kt, a.dtype, p_dtype=str(p.dtype))
+    if plan is None:
+        return pallas_matmul(a, p, transpose_lhs=True, out_dtype=jnp.float32,
+                             interpret=interpret)
+    ap = _pad2(a, *plan.in_specs[0].padded)
+    pp = _pad2(p, *plan.in_specs[1].padded)
+    out = pl.pallas_call(
+        _powerpass_sweep_kernel,
+        **launch_args(plan),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(ap, pp)
     return out[:da, :kt]

@@ -24,21 +24,33 @@ the contraction (d) innermost:
 
 When ``k̃p² ≤ VMEM_BLOCK_ELEMS`` (k̃p ≤ 1024) a single bucket covers C
 and the schedule matches the old 2-axis grid exactly.  Larger sketches
-(the paper's Europarl run has k̃ = 2060) now stay fused.  COST MODEL:
-with the bucket axis outermost, X is re-read and ``P = XQ``
-re-accumulated once per C-column bucket — ``n_buckets·proj`` FLOPs
-versus the unfused pair's single projection plus P round-trip.  The
-bucket count here is only ``k̃p/bc`` (17 for Europarl, not thousands),
-but for d ≫ k̃ the projection dominates, so sweep the TPU target
-(``make sweep-blocks``) before trusting the fused default at large
-k̃ — and see ROADMAP for the P-reuse schedule that removes the
-recompute.  The unfused matmul-pair fallback remains only for
-degenerate ``k̃p > 8192`` where even a 128-column C block (or a
-128-row P/Q tile) blows the budget.
+(the paper's Europarl run has k̃ = 2060) now stay fused.
+
+TWO SCHEDULES, ONE COST MODEL.  The bucketed *recompute* schedule
+above re-reads X and re-accumulates ``P = XQ`` once per C-column
+bucket — ``n_buckets·proj + gram`` FLOPs versus the unfused pair's
+single projection plus P round-trip.  The bucket count here is only
+``k̃p/bc`` (17 for Europarl, not thousands), but for d ≫ k̃ the
+projection dominates.  The *staged* schedule (``schedule="staged"``,
+requires ``p_dtype=float32``) reuses the powerpass phase-1 kernel
+(:func:`repro.kernels.powerpass.proj_stage`): P is projected exactly
+once into its f32 output buffer — which the final pass has to emit
+anyway for the cross term F — and phase 2 (the ``gram_sweep`` kernel,
+grid (kt_t, n_t)) computes ``C[:, bucket] += Pᵀ P[:, bucket]`` reloading
+the staged P tiles.  Cost: ``proj + gram`` FLOPs plus ``n_buckets``
+re-reads of P, with no extra round-trip at all (the P write-out was
+already part of the contract).  Both schedules issue bitwise-identical
+f32 dot sequences; :func:`choose_projgram_schedule` picks per shape via
+the shared roofline crossover
+(:func:`repro.kernels.matmul.pick_schedule`), overridden by autotuned
+``op="projgram-staged"`` cache entries.  The unfused matmul-pair
+fallback remains only for degenerate ``k̃p > 8192`` where even a
+128-column C block (or a 128-row P/Q tile) blows the budget.
 
 Block caps resolve from the autotune cache (``op="projgram"``) — see
 :func:`repro.kernels.autotune.autotune_projgram` and
-``benchmarks/sweep_blocks.py``.
+``benchmarks/sweep_blocks.py``.  The staged schedule resolves blocks
+through the same lookup, so both schedules tile identically.
 """
 
 from __future__ import annotations
@@ -52,8 +64,11 @@ from jax.experimental import pallas as pl
 
 from . import autotune, rand
 from .compat import tpu_compiler_params
-from .matmul import _pad2, _pick_block, _round_up, pallas_matmul, vmem_row_cap
+from .matmul import (_pad2, _pick_block, _round_up, pallas_matmul,
+                     pick_schedule, vmem_row_cap)
 from .plan import BlockDef, KernelPlan, ScalarDef, ScratchDef, launch_args
+from .powerpass import (_proj_stage_kernel, _proj_stage_seeded_kernel,
+                        plan_proj_stage, plan_proj_stage_seeded)
 
 
 def _projgram_kernel(x_ref, q_ref, p_ref, c_ref, acc_ref,
@@ -145,7 +160,8 @@ def plan_projgram(n: int, d: int, kt: int, dtype, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_n", "block_d", "block_c", "interpret", "p_dtype"),
+    static_argnames=("block_n", "block_d", "block_c", "schedule", "interpret",
+                     "p_dtype"),
 )
 def projgram(
     x: jax.Array,
@@ -154,6 +170,7 @@ def projgram(
     block_n: int | None = None,
     block_d: int | None = None,
     block_c: int | None = None,
+    schedule: str | None = None,
     p_dtype=jnp.float32,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
@@ -162,6 +179,11 @@ def projgram(
     x: (n, d), q: (d, k̃).  ``block_c`` caps the C-column bucket;
     ``None`` caps resolve from the autotune cache (``op="projgram"``)
     and then from the shared VMEM budget.
+
+    ``schedule`` picks ``"recompute"`` or ``"staged"`` (P projected
+    once, Gram buckets reload it; requires ``p_dtype`` f32); ``None``
+    resolves per shape via :func:`choose_projgram_schedule`.  Both
+    schedules are bitwise equal.
     """
     n, d = x.shape
     d2, kt = q.shape
@@ -173,6 +195,20 @@ def projgram(
         p = pallas_matmul(x, q, out_dtype=p_dtype, interpret=interpret)
         c = pallas_matmul(p, p, transpose_lhs=True, interpret=interpret)
         return p, c
+    if schedule is None:
+        schedule = choose_projgram_schedule(
+            n, d, kt, x.dtype, block_n=block_n, block_d=block_d,
+            block_c=block_c, p_dtype=p_dtype)
+    if schedule == "staged":
+        plans = plan_projgram_staged(n, d, kt, x.dtype, block_n=block_n,
+                                     block_d=block_d, block_c=block_c,
+                                     p_dtype=p_dtype)
+        if plans is not None:
+            stage, gram = plans
+            xp = _pad2(x, *stage.in_specs[0].padded)
+            qp = _pad2(q, *stage.in_specs[1].padded)
+            p, c = _staged_gram_call(xp, qp, stage, gram, interpret)
+            return p[:n, :kt], c[:kt, :kt]
     xp = _pad2(x, *plan.in_specs[0].padded)
     qp = _pad2(q, *plan.in_specs[1].padded)
 
@@ -250,7 +286,7 @@ def plan_projgram_seeded(n: int, d: int, kt: int, dtype, *,
 @functools.partial(
     jax.jit,
     static_argnames=("kt", "q_dtype", "block_n", "block_d", "block_c",
-                     "interpret", "p_dtype"),
+                     "schedule", "interpret", "p_dtype"),
 )
 def projgram_seeded(
     x: jax.Array,
@@ -261,6 +297,7 @@ def projgram_seeded(
     block_n: int | None = None,
     block_d: int | None = None,
     block_c: int | None = None,
+    schedule: str | None = None,
     p_dtype=jnp.float32,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
@@ -269,6 +306,8 @@ def projgram_seeded(
     x: (n, d), seed: (2,) uint32.  Bitwise identical to
     ``projgram(x, rand.dense_omega(seed, d, kt, q_dtype))``; only the
     degenerate unfused fallback (k̃p > 8192) materializes Ω transiently.
+    ``schedule`` as in :func:`projgram`; under ``"staged"`` each Ω tile
+    is generated exactly once, in phase 1.
     """
     n, d = x.shape
     q_dtype = x.dtype if q_dtype is None else jnp.dtype(q_dtype)
@@ -280,6 +319,24 @@ def projgram_seeded(
         p = pallas_matmul(x, q, out_dtype=p_dtype, interpret=interpret)
         c = pallas_matmul(p, p, transpose_lhs=True, interpret=interpret)
         return p, c
+    if schedule is None:
+        schedule = choose_projgram_schedule(
+            n, d, kt, x.dtype, block_n=block_n, block_d=block_d,
+            block_c=block_c, p_dtype=p_dtype)
+    if schedule == "staged":
+        plans = plan_projgram_staged(n, d, kt, x.dtype, block_n=block_n,
+                                     block_d=block_d, block_c=block_c,
+                                     p_dtype=p_dtype, seeded=True)
+        if plans is not None:
+            stage, gram = plans
+            xp = _pad2(x, *stage.in_specs[0].padded)
+            bd = stage.in_specs[0].shape[1]
+            ktp = stage.out_specs[0].shape[1]
+            p, c = _staged_gram_call(
+                xp, jnp.asarray(seed, jnp.uint32), stage, gram, interpret,
+                seeded_kwargs=dict(bd=bd, ktp=ktp, d=d, kt=kt,
+                                   q_dtype=q_dtype))
+            return p[:n, :kt], c[:kt, :kt]
     xp = _pad2(x, *plan.in_specs[0].padded)
     bd = plan.in_specs[0].shape[1]
     ktp = plan.out_specs[0].shape[1]
@@ -295,3 +352,183 @@ def projgram_seeded(
         ),
     )(jnp.asarray(seed, jnp.uint32), xp)
     return p[:n, :kt], c[:kt, :kt]
+
+
+# --------------------------------------------------------------------------
+# staged (P-reuse) schedule: project once, sweep the Gram buckets
+# --------------------------------------------------------------------------
+
+
+def _gram_sweep_kernel(p_ref, c_ref, *, block_c: int):
+    """Phase 2: C[:, bucket] += Pᵀ P[:, bucket]; grid (kt_t, n_t), rows
+    innermost.  Reloads the staged (bn, k̃p) P tiles once per C-column
+    bucket — the same f32 dot the recompute schedule issues on its last
+    d step, so the two schedules are bitwise equal."""
+    c_step = pl.program_id(0)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    p = p_ref[...]
+    pj = p_ref[:, pl.ds(c_step * block_c, block_c)]
+    c_ref[...] += jax.lax.dot_general(  # Pᵀ P[:, bucket] on the MXU
+        p, pj, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def plan_gram_sweep(n: int, kt: int, *,
+                    bn: int | None = None,
+                    bc: int | None = None) -> KernelPlan | None:
+    """Launch plan for the phase-2 Gram sweep (C = PᵀP, bucketed).
+
+    ``bn``/``bc`` are resolved blocks when given (the staged composite
+    passes the recompute plan's blocks verbatim); ``None`` resolves
+    standalone from the shared VMEM budget.
+    """
+    np_, ktp = _round_up(n, 128), _round_up(kt, 128)
+    row_cap = vmem_row_cap(ktp)
+    if row_cap < 128:
+        return None
+    if bc is None:
+        bc = ktp if ktp <= row_cap else _pick_block(ktp, row_cap)
+    if bn is None:
+        bn = _pick_block(np_, min(256, row_cap))
+    return KernelPlan(
+        name="gram_sweep",
+        grid=(ktp // bc, np_ // bn),
+        in_specs=(
+            BlockDef((bn, ktp), lambda j, i: (i, 0), (np_, ktp), "float32"),
+        ),
+        out_specs=(
+            BlockDef((ktp, bc), lambda j, i: (0, j), (ktp, ktp), "float32"),
+        ),
+        scratch=(),
+        out_shape=((kt, kt),),
+        accum_outputs=(0,),
+    )
+
+
+def plan_projgram_staged(
+    n: int, d: int, kt: int, dtype, *,
+    block_n: int | None = None, block_d: int | None = None,
+    block_c: int | None = None, p_dtype=jnp.float32, seeded: bool = False,
+) -> tuple[KernelPlan, KernelPlan] | None:
+    """(stage, gram_sweep) plan pair for the staged schedule, or
+    ``None`` on degenerate shapes or when ``p_dtype`` is not f32 (the
+    staged P *is* the emitted P buffer, and parity requires it exact).
+    Blocks are extracted from the recompute plan for the same shape, so
+    both schedules tile identically."""
+    if jnp.dtype(p_dtype) != jnp.float32:
+        return None
+    base = plan_projgram(n, d, kt, dtype, block_n=block_n, block_d=block_d,
+                         block_c=block_c, p_dtype=p_dtype)
+    if base is None:
+        return None
+    bn, bd = base.in_specs[0].shape
+    bc = base.out_specs[1].shape[1]
+    if seeded:
+        stage = plan_proj_stage_seeded(n, d, kt, dtype, bn=bn, bd=bd)
+    else:
+        stage = plan_proj_stage(n, d, kt, dtype, bn=bn, bd=bd)
+    gram = plan_gram_sweep(n, kt, bn=bn, bc=bc)
+    if stage is None or gram is None:
+        return None
+    return stage, gram
+
+
+def choose_projgram_schedule(
+    n: int, d: int, kt: int, dtype, *,
+    block_n: int | None = None, block_d: int | None = None,
+    block_c: int | None = None, p_dtype=jnp.float32,
+) -> str:
+    """``"staged"`` or ``"recompute"`` for one projgram shape — same
+    order of authority as
+    :func:`repro.kernels.powerpass.choose_powerpass_schedule`: autotuned
+    ``op="projgram-staged"`` entry, then the analytic roofline crossover
+    over the plan-derived cost model.  Non-f32 ``p_dtype`` always
+    recomputes (the staged schedule's P buffer must stay exact)."""
+    if jnp.dtype(p_dtype) != jnp.float32:
+        return "recompute"
+    np_, dp, ktp = _round_up(n, 128), _round_up(d, 128), _round_up(kt, 128)
+    tuned = autotune.lookup_schedule("projgram-staged", (np_, dp, ktp), dtype)
+    if tuned is not None:
+        return tuned
+    base = plan_projgram(n, d, kt, dtype, block_n=block_n, block_d=block_d,
+                         block_c=block_c, p_dtype=p_dtype)
+    if base is None or base.grid[0] == 1:
+        return "recompute"
+    plans = plan_projgram_staged(n, d, kt, dtype, block_n=block_n,
+                                 block_d=block_d, block_c=block_c,
+                                 p_dtype=p_dtype)
+    if plans is None:
+        return "recompute"
+    from repro.obs.cost import plan_cost  # deferred: obs imports kernels.plan
+
+    rec = plan_cost(base)
+    stage, gram = (plan_cost(p) for p in plans)
+    return pick_schedule({
+        "recompute": (rec["flops"], rec["bytes"]),
+        "staged": (stage["flops"] + gram["flops"],
+                   stage["bytes"] + gram["bytes"]),
+    })
+
+
+def _staged_gram_call(xp, q_or_seed, stage: KernelPlan, gram: KernelPlan,
+                      interpret: bool, *, seeded_kwargs=None):
+    """Launch the (stage, gram_sweep) pallas_call pair; returns the
+    padded (P, C).  P is the staged f32 buffer itself — the final pass
+    emits it anyway for the cross term F, so staging is free here."""
+    if seeded_kwargs is None:
+        body = _proj_stage_kernel
+        operands = (xp, q_or_seed)
+    else:
+        body = functools.partial(_proj_stage_seeded_kernel, **seeded_kwargs)
+        operands = (q_or_seed, xp)  # seed scalar leads the blocked operands
+    p = pl.pallas_call(
+        body,
+        **launch_args(stage),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(*operands)
+    c = pl.pallas_call(
+        functools.partial(_gram_sweep_kernel,
+                          block_c=gram.out_specs[0].shape[1]),
+        **launch_args(gram),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(p)
+    return p, c
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gram_sweep(p: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Standalone phase-2 Gram sweep: C = pᵀ p, reloading P tiles per
+    C-column bucket.  p: (n, k̃) f32 (or the compute dtype on the
+    sharded collective-fused path) → (k̃, k̃) f32.  Registry entry point
+    for the ``gram_sweep`` contract checks."""
+    n, kt = p.shape
+    plan = plan_gram_sweep(n, kt)
+    if plan is None:
+        return pallas_matmul(p, p, transpose_lhs=True, interpret=interpret)
+    pp = _pad2(p, *plan.in_specs[0].padded)
+    if plan.in_specs[0].dtype != str(p.dtype):
+        plan = dataclasses.replace(
+            plan,
+            in_specs=(dataclasses.replace(plan.in_specs[0],
+                                          dtype=str(p.dtype)),),
+        )
+    c = pl.pallas_call(
+        functools.partial(_gram_sweep_kernel,
+                          block_c=plan.out_specs[0].shape[1]),
+        **launch_args(plan),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(pp)
+    return c[:kt, :kt]

@@ -84,6 +84,11 @@ def main(argv=None) -> int:
                          "baseline correlation")
     ap.add_argument("--clients", type=int, default=16,
                     help="concurrent request threads during the swap")
+    ap.add_argument("--prune-keep", type=int, default=None, metavar="N",
+                    help="after the final publish, garbage-collect old "
+                         "registry versions keeping the newest N (the "
+                         "current version and its rollback chain are "
+                         "always kept)")
     ap.add_argument("--trace", default=None, metavar="DIR", nargs="?",
                     const="1",
                     help="record a repro.obs trace (spans for fit + "
@@ -214,6 +219,10 @@ def main(argv=None) -> int:
     print(f"[serve] post-swap held-out correlation: {recovered:.4f} "
           f"(refit_needed={monitor.refit_needed})")
     proj.close()
+
+    if args.prune_keep is not None:
+        pruned = reg.prune(args.name, keep=args.prune_keep)
+        print(f"[serve] pruned versions {pruned} (keep={args.prune_keep})")
 
     if args.trace:
         from repro import obs

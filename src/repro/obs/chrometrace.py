@@ -26,10 +26,10 @@ process ``ctx.role``    ``ph: "M" process_name`` metadata
 Timestamps: obs records carry epoch-seconds wall clocks shared across
 processes; the exporter rebases to the earliest record so Perfetto's
 timeline starts at zero.  Spans are placed on the recording thread's
-track (``tid`` = the span stack; obs spans are per-thread, but the
-stream does not record thread ids, so all of a process's spans share
-one track — nesting still renders because span intervals from one
-process never partially overlap).
+track: obs records carry the OS thread id (``tid``), so each thread of
+a process — the engine's prefetch I/O threads next to its fold loop —
+renders as its own Perfetto track (older traces without ``tid`` fall
+back to one track per process).
 """
 from __future__ import annotations
 
@@ -73,7 +73,7 @@ def convert(events: List[dict]) -> Dict[str, Any]:
             args["parent_sid"] = ev["parent"]
         out.append({
             "ph": "X", "name": str(ev.get("name", "?")),
-            "pid": pid, "tid": pid,
+            "pid": pid, "tid": int(ev.get("tid", pid)),
             "ts": us(float(ev["t"])),
             "dur": float(ev.get("dur", 0.0)) * 1e6,
             "cat": "span", "args": args,
@@ -96,7 +96,8 @@ def convert(events: List[dict]) -> Dict[str, Any]:
             })
         else:  # nothing numeric to plot: keep it visible as an instant
             out.append({
-                "ph": "i", "name": track, "pid": pid, "tid": pid,
+                "ph": "i", "name": track, "pid": pid,
+                "tid": int(ev.get("tid", pid)),
                 "ts": us(float(ev.get("t", t0))), "s": "p",
                 "cat": "ctr", "args": dict(fields),
             })
@@ -104,7 +105,7 @@ def convert(events: List[dict]) -> Dict[str, Any]:
         pid = int(ev.get("pid", 0))
         out.append({
             "ph": "i", "name": f"proto:{ev.get('op', '?')}",
-            "pid": pid, "tid": pid,
+            "pid": pid, "tid": int(ev.get("tid", pid)),
             "ts": us(float(ev.get("t", t0))), "s": "p",
             "cat": "proto",
             "args": {"path": ev.get("path"), **(ev.get("meta") or {})},

@@ -2,12 +2,23 @@
 
 A :class:`~repro.kernels.plan.KernelPlan` is the single source of truth
 for launch geometry, so it is also the single source of truth for the
-cost model: HBM traffic is counted by enumerating each operand's
-distinct ``index_map`` blocks over the grid (a block with an index map
-constant in some grid axis is loaded once, not once per step — exactly
-the VMEM-residency the plans encode), and MXU flops follow the
-per-kernel formulas documented in the kernel modules (the powerpass /
-projgram docstrings' honest ``n_buckets·proj + acc`` accounting).
+cost model.  HBM traffic follows Pallas's residency rule: a block stays
+VMEM-resident while its ``index_map`` value is unchanged between
+*consecutive* grid steps (last grid axis innermost), so an operand is
+fetched once per run — ``Π grid[:j+1]`` fetches, where ``j`` is the
+innermost grid axis its index map depends on, and exactly one fetch for
+a grid-invariant map.  Dependence is detected by probing each axis at
+its unit vector (the index maps in this codebase are affine in the grid
+coordinates), which stays O(axes) at any grid size — including the
+Europarl chunk's ~10^8-step grids, far beyond what enumeration could
+count.  The same rule charges output blocks one writeback per run.
+
+MXU flops follow the per-kernel formulas documented in the kernel
+modules: the recompute schedules' honest ``n_buckets·proj + acc``
+accounting, and the staged schedules' bucket-count-independent
+``proj`` / ``acc`` split across the ``proj_stage`` /
+``powerpass_sweep`` / ``gram_sweep`` plans — which is how the roofline
+counters stop charging the recompute once a launch goes staged.
 
 :func:`chunk_cost_fn` is the instrumentation entry point: given the
 pass kind and engine it returns a cheap ``(a, b) -> cost`` closure (or
@@ -17,16 +28,11 @@ spans; the underlying per-shape model is cached in
 """
 from __future__ import annotations
 
-import itertools
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.kernels.plan import BlockDef, KernelPlan
-
-#: grids larger than this are not enumerated; traffic falls back to
-#: one full sweep of the padded operand (chunk-scale grids are tiny)
-_ENUM_CAP = 1 << 16
 
 
 def _prod(xs) -> int:
@@ -36,24 +42,36 @@ def _prod(xs) -> int:
     return n
 
 
-def _distinct_blocks(block: BlockDef, grid) -> int:
-    if _prod(grid) <= _ENUM_CAP:
-        seen = {
-            tuple(block.index_map(*idx))
-            for idx in itertools.product(*(range(g) for g in grid))
-        }
-        return len(seen)
-    return max(1, _prod(block.padded) // block.elems)
+def _block_runs(block: BlockDef, grid) -> int:
+    """Number of HBM fetches (or writebacks) of this operand across one
+    launch: one per consecutive run of its index-map value over the
+    lexicographic grid walk.  The innermost grid axis the map depends
+    on — found by probing unit vectors, valid for the affine maps the
+    plans use — bounds the run length: every step of an axis at or
+    outside it starts a new run."""
+    zero = (0,) * len(grid)
+    base = tuple(block.index_map(*zero))
+    jmax = -1
+    for ax, g in enumerate(grid):
+        if g <= 1:
+            continue
+        probe = list(zero)
+        probe[ax] = 1
+        if tuple(block.index_map(*probe)) != base:
+            jmax = ax
+    if jmax < 0:
+        return 1
+    return _prod(grid[:jmax + 1])
 
 
 def plan_bytes(plan: KernelPlan) -> int:
-    """Modelled HBM traffic of one launch: every distinct input block
-    read once, every distinct output block written once, plus the SMEM
-    scalars."""
+    """Modelled HBM traffic of one launch: every input block read once
+    per residency run, every output block written once per run, plus
+    the SMEM scalars."""
     total = 0
     for block in (*plan.in_specs, *plan.out_specs):
-        n_blocks = _distinct_blocks(block, plan.grid)
-        total += n_blocks * block.elems * np.dtype(block.dtype).itemsize
+        n_fetches = _block_runs(block, plan.grid)
+        total += n_fetches * block.elems * np.dtype(block.dtype).itemsize
     for sc in plan.scalars:
         total += sc.elems * np.dtype(sc.dtype).itemsize
     return total
@@ -85,6 +103,19 @@ def plan_flops(plan: KernelPlan) -> int:
         # the gram C = PᵀP is computed bc columns at a time, summing
         # to one full (k̃p, k̃p) product
         return plan.grid[0] * 2 * n_rows * dp * ktp + 2 * n_rows * ktp * ktp
+    if name in ("proj_stage", "proj_stage_seeded"):
+        # staged phase 1: the projection happens exactly once —
+        # no bucket factor, which is the point of the schedule
+        n_rows, dp = plan.in_specs[0].padded
+        ktp = plan.out_specs[0].padded[1]
+        return 2 * n_rows * dp * ktp
+    if name == "powerpass_sweep":
+        n_rows, dap = plan.in_specs[0].padded
+        ktp = plan.out_specs[0].padded[1]
+        return 2 * n_rows * dap * ktp
+    if name == "gram_sweep":
+        n_rows, ktp = plan.in_specs[0].padded
+        return 2 * n_rows * ktp * ktp
     raise ValueError(f"no cost formula for kernel plan {name!r}")
 
 
@@ -107,12 +138,15 @@ def merge_kernel_costs(parts: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
 
 def chunk_cost_fn(kind: str, engine: str, kt: int, dtype: Any,
                   seeded: bool = False) -> Optional[Callable]:
-    """``(a, b) -> {"flops", "bytes", "kernels"}`` for one chunk update
-    of the given pass kind, or ``None`` when tracing is disabled.
+    """``(a, b) -> {"flops", "bytes", "kernels", "schedule"}`` for one
+    chunk update of the given pass kind, or ``None`` when tracing is
+    disabled.
 
     The closure only reads shapes; the model itself is memoized per
     shape in :func:`repro.kernels.ops.chunk_cost`, so the per-chunk
-    overhead under tracing is a cache lookup.
+    overhead under tracing is a cache lookup.  ``schedule`` reports the
+    staged-vs-recompute choice the kernels resolve for this shape (None
+    for the jnp engine), so the timeline shows the schedule per launch.
     """
     from repro import obs
     if not obs.enabled():

@@ -252,7 +252,8 @@ def render(report: Dict[str, Any]) -> str:
         for sp in proc["top_spans"]:
             attrs = sp["attrs"]
             tag = " ".join(f"{k}={attrs[k]}" for k in sorted(attrs)
-                           if k in ("site", "pass_idx", "kind", "engine"))
+                           if k in ("site", "pass_idx", "kind", "engine",
+                                    "schedule"))
             out.append(f"    +{sp['t']:8.3f}s  {sp['name']:<12} "
                        f"{sp['dur']:8.3f}s  {tag}")
         for name, ph in proc["phases"].items():

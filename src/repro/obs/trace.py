@@ -8,8 +8,11 @@ directory ``rcca_trace/``).  Records are written with a single
 processes interleave whole lines and a killed worker leaves at worst one
 torn final line — which the reader skips.
 
-Record shapes (all carry ``ev``, ``t`` = epoch seconds, ``pid``, and the
-process ``ctx`` dict set via :func:`set_context`):
+Record shapes (all carry ``ev``, ``t`` = epoch seconds, ``pid``, ``tid``
+= the recording OS thread id, and the process ``ctx`` dict set via
+:func:`set_context`; ``tid`` is what lets the Perfetto exporter give
+each thread — e.g. the engine's I/O prefetchers next to the fold loop —
+its own track):
 
 * ``{"ev": "span", "name": ..., "t": t0, "dur": seconds, "sid": n,
   "parent": m | None, "attrs": {...}}`` — one record per completed
@@ -91,6 +94,7 @@ def _emit(rec: Dict[str, Any]) -> None:
     if dir_ is None:
         return
     rec["pid"] = os.getpid()
+    rec["tid"] = threading.get_native_id()
     if _CTX:
         rec["ctx"] = dict(_CTX)
     line = json.dumps(rec, sort_keys=True, default=str) + "\n"

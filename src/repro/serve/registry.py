@@ -17,6 +17,12 @@ mutable file and flips via ``os.replace``.  Version metadata carries a
 content hash (sha256 over the projection leaves), the store
 fingerprint + algo binding inherited from the fit, and the parent
 version — the provenance chain a drift investigation walks.
+
+``prune(name, keep=N)`` is the garbage collector: it removes old
+versions while never touching the current version, its recorded parent
+(the rollback target), or the newest N — and deletes via
+rename-then-rmtree so a concurrent reader can never open a half-deleted
+artifact.
 """
 
 from __future__ import annotations
@@ -26,6 +32,7 @@ import hashlib
 import json
 import os
 import re
+import shutil
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -206,3 +213,50 @@ class ModelRegistry:
 
     def meta(self, name: str, version: int) -> dict:
         return load_metadata(self._version_dir(name, version))
+
+    # -- garbage collection ----------------------------------------------
+
+    def prune(self, name: str, *, keep: int) -> List[int]:
+        """Delete old versions of ``name``, keeping the newest ``keep``
+        plus everything a rollback could land on; returns the versions
+        removed (ascending).
+
+        Protected, never pruned: the current version, its recorded
+        ``parent`` (the rollback target ``set_current`` lands on when a
+        swap goes bad), and the newest ``keep`` versions.  Deletion is
+        reader-safe: a version directory is first renamed out of the
+        registry namespace (atomic, so :meth:`versions` / :meth:`load`
+        never see a half-deleted artifact — a concurrent ``load`` either
+        opened the manifest before the rename and reads the moved inode,
+        or misses the version entirely) and only then removed.
+        """
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
+        versions = self.versions(name)
+        protected = set(versions[-keep:])
+        cur = self.current_version(name)
+        if cur is not None:
+            protected.add(cur)
+            try:
+                parent = self.meta(name, cur).get("parent")
+            except (OSError, ValueError):
+                parent = None
+            if parent is not None:
+                protected.add(int(parent))
+        pruned: List[int] = []
+        d = self._model_dir(name)
+        for version in versions:
+            if version in protected:
+                continue
+            vdir = self._version_dir(name, version)
+            trash = os.path.join(d, f".trash.v{version:05d}.{os.getpid()}")
+            try:
+                os.rename(vdir, trash)
+            except FileNotFoundError:
+                continue  # concurrent prune got it first
+            shutil.rmtree(trash, ignore_errors=True)
+            pruned.append(version)
+        if pruned:
+            obs.counter("registry_prune", model=name, n=len(pruned),
+                        kept=len(versions) - len(pruned))
+        return pruned

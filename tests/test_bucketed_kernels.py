@@ -110,11 +110,19 @@ def test_europarl_powerpass_shape_stays_fused(monkeypatch):
     assert out.shape == (wl.da, kt)
     assert calls["n"] == 0, "Europarl shape fell back to the unfused pair"
 
-    # ... and the fused chunk update is exactly 2 pallas_calls (one per
-    # view), matching the small-shape fused path's HBM-read count.
+    # ... and the chunk update stays all-Pallas in both schedules: the
+    # Europarl shape auto-selects the staged (P-reuse) schedule — 2
+    # pallas_calls per view (stage + sweep) — while the forced recompute
+    # schedule keeps the single fused call per view.
+    qa = jax.ShapeDtypeStruct((wl.da, kt), jnp.float32)
     jaxpr = jax.make_jaxpr(
         lambda *xs: ops.power_pass_chunk(*xs, interpret=True)
-    )(a, b, jax.ShapeDtypeStruct((wl.da, kt), jnp.float32), q)
+    )(a, b, qa, q)
+    assert count_pallas_calls(jaxpr) == 4
+    jaxpr = jax.make_jaxpr(
+        lambda *xs: ops.power_pass_chunk(*xs, schedule="recompute",
+                                         interpret=True)
+    )(a, b, qa, q)
     assert count_pallas_calls(jaxpr) == 2
 
 

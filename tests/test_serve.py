@@ -404,6 +404,68 @@ def test_registry_rollback_and_bad_version(fit_old, cold, tmp_path):
         reg.set_current("m", 7)
 
 
+def test_registry_prune_keeps_current_and_rollback(fit_old, tmp_path):
+    """prune(keep=N) drops old versions but never the current version,
+    its recorded parent (the rollback target), or the newest N."""
+    res, _ = fit_old
+    reg = ModelRegistry(str(tmp_path / "reg"))
+    for _ in range(6):
+        reg.publish("m", res)
+    # roll back to v3: current=3, its parent=2 → both protected even
+    # though they are far from the newest versions
+    reg.set_current("m", 3)
+    pruned = reg.prune("m", keep=2)
+    assert pruned == [1, 4]
+    assert reg.versions("m") == [2, 3, 5, 6]
+    assert reg.current_version("m") == 3
+    reg.load("m")          # current still loads, hash-verified
+    reg.load("m", version=2)  # and so does the rollback target
+    # idempotent: a second prune with the same policy removes nothing
+    assert reg.prune("m", keep=2) == []
+    with pytest.raises(ValueError, match="keep"):
+        reg.prune("m", keep=0)
+
+
+def test_registry_prune_safe_under_concurrent_readers(fit_old, tmp_path):
+    """Readers hammering load() during a prune never observe a torn
+    artifact: every load either succeeds with a verified hash or misses
+    the version cleanly (FileNotFoundError)."""
+    import threading
+
+    res, _ = fit_old
+    reg = ModelRegistry(str(tmp_path / "reg"))
+    for _ in range(8):
+        reg.publish("m", res)
+    errors = []
+    stop = threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            try:
+                m = reg.load("m", version=2)  # a version prune removes
+                assert m.version == 2
+            except FileNotFoundError:
+                pass  # pruned away between listing and open — clean miss
+            except Exception as e:  # noqa: BLE001 — anything else is torn
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        pruned = reg.prune("m", keep=1)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=30)
+    assert 2 in pruned
+    assert not errors, f"reader observed a torn artifact: {errors[0]!r}"
+    # survivors: current v8 + parent v7 + newest 1
+    assert reg.versions("m") == [7, 8]
+    reg.load("m")
+
+
 def test_registry_detects_corrupted_artifact(fit_old, tmp_path):
     """The content hash catches bit-rot at load time, not in traffic."""
     res, _ = fit_old
@@ -620,6 +682,56 @@ def test_export_trace_chrome_json(tmp_path):
     meta = next(e for e in evs if e["ph"] == "M")
     assert meta["args"]["name"] == "coordinator (pid 10)"
     assert doc["otherData"]["t0_epoch_s"] == t0
+    # records without a tid (older traces) fall back to one track/process
+    assert all(e["tid"] == 10 for e in xs)
+
+
+def test_export_trace_per_thread_tracks(tmp_path):
+    """Spans recorded on different threads land on different Perfetto
+    tracks (tid), so the engine's prefetch I/O threads render next to
+    the fold loop instead of merging into one process track."""
+    from repro.obs.chrometrace import export
+
+    t0 = 1000.0
+    trace = str(tmp_path / "trace")
+    _write_trace(trace, [
+        {"ev": "span", "name": "fold", "t": t0, "dur": 2.0, "sid": 1,
+         "pid": 10, "tid": 101},
+        {"ev": "span", "name": "io_read", "t": t0 + 0.1, "dur": 1.5,
+         "sid": 2, "pid": 10, "tid": 202},
+    ])
+    out = str(tmp_path / "chrome.json")
+    export(trace, out)
+    with open(out) as f:
+        evs = json.load(f)["traceEvents"]
+    tids = {e["name"]: e["tid"] for e in evs if e["ph"] == "X"}
+    assert tids == {"fold": 101, "io_read": 202}
+
+
+def test_spans_record_thread_ids(tmp_path, monkeypatch):
+    """Live obs records carry the recording OS thread id: concurrent
+    threads produce distinct tids, all records carry one."""
+    import threading
+
+    monkeypatch.setenv("RCCA_TRACE", str(tmp_path / "trace"))
+    from repro import obs
+
+    with obs.span("main_work"):
+        pass
+
+    def worker():
+        with obs.span("thread_work"):
+            obs.counter("thread_ctr", x=1)
+
+    t = threading.Thread(target=worker)
+    t.start()
+    t.join()
+    evs = obs.load_events(str(tmp_path / "trace"))
+    assert evs and all("tid" in e for e in evs)
+    by_name = {e["name"]: e["tid"] for e in evs if e.get("ev") == "span"}
+    assert by_name["main_work"] != by_name["thread_work"]
+    ctr = next(e for e in evs if e.get("ev") == "ctr")
+    assert ctr["tid"] == by_name["thread_work"]
 
 
 def test_report_includes_worker_liveness(tmp_path):

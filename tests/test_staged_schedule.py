@@ -1,0 +1,317 @@
+"""Staged (P-reuse) powerpass/projgram schedule: bitwise parity against
+the recompute schedule across the dtype × Ω-source × shape grid, the
+shared-budget crossover rule, autotuned schedule cache entries, and the
+obs cost model's staged accounting (the roofline must stop charging the
+per-bucket projection recompute once a launch goes staged)."""
+
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.europarl_cca import config as europarl_config
+from repro.kernels import ops
+from repro.kernels.compat import count_pallas_calls
+from repro.kernels.matmul import ROOFLINE_FLOPS_PER_BYTE, pick_schedule
+from repro.kernels.powerpass import (choose_powerpass_schedule,
+                                     plan_powerpass_staged,
+                                     power_project_accumulate,
+                                     power_project_accumulate_seeded)
+from repro.kernels.projgram import (choose_projgram_schedule,
+                                    plan_projgram_staged, projgram,
+                                    projgram_seeded)
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+# single-bucket, 2-bucket (da·k̃p past the VMEM row cap), and a
+# forced-16-bucket geometry; unaligned dims exercise the padding path
+SHAPES = [
+    (130, 500, 96, 64),       # single bucket
+    (256, 4096, 256, 512),    # 2 buckets at kt=512 (row cap 2048)
+    (256, 4096, 192, 1100),   # 4 buckets, unaligned db/kt
+]
+
+
+def _rand(key, shape, dt):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dt)
+
+
+# --------------------------------------------------------------------------
+# bitwise parity: staged ≡ recompute (same f32 dot sequence, P exact
+# through the HBM round-trip)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,da,db,kt", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES, ids=["f32", "bf16"])
+def test_powerpass_staged_bitwise(n, da, db, kt, dt):
+    a, b = _rand(0, (n, da), dt), _rand(1, (n, db), dt)
+    q = _rand(2, (db, kt), dt)
+    rec = power_project_accumulate(a, b, q, schedule="recompute",
+                                   interpret=True)
+    stg = power_project_accumulate(a, b, q, schedule="staged",
+                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(stg))
+
+
+def test_powerpass_staged_bitwise_forced_buckets():
+    """Explicit block_da forcing a 16-bucket sweep stays bitwise equal."""
+    a, b = _rand(3, (256, 4096), jnp.float32), _rand(4, (256, 256), jnp.float32)
+    q = _rand(5, (256, 512), jnp.float32)
+    rec = power_project_accumulate(a, b, q, block_da=256,
+                                   schedule="recompute", interpret=True)
+    stg = power_project_accumulate(a, b, q, block_da=256,
+                                   schedule="staged", interpret=True)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(stg))
+
+
+@pytest.mark.parametrize("dt", DTYPES, ids=["f32", "bf16"])
+def test_powerpass_staged_seeded_bitwise(dt):
+    """Seeded Ω: the staged stage kernel generates each Ω tile exactly
+    once (phase 1) yet stays bitwise equal to the recompute schedule,
+    which regenerates tiles per bucket."""
+    a, b = _rand(6, (256, 4096), dt), _rand(7, (256, 256), dt)
+    seed = jnp.asarray([3, 7], jnp.uint32)
+    rec = power_project_accumulate_seeded(a, b, seed, kt=300,
+                                          schedule="recompute",
+                                          interpret=True)
+    stg = power_project_accumulate_seeded(a, b, seed, kt=300,
+                                          schedule="staged", interpret=True)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(stg))
+
+
+@pytest.mark.parametrize("n,d,kt", [(130, 96, 2176), (256, 512, 512)])
+def test_projgram_staged_bitwise(n, d, kt):
+    x, q = _rand(8, (n, d), jnp.float32), _rand(9, (d, kt), jnp.float32)
+    p_rec, c_rec = projgram(x, q, schedule="recompute", interpret=True)
+    p_stg, c_stg = projgram(x, q, schedule="staged", interpret=True)
+    np.testing.assert_array_equal(np.asarray(p_rec), np.asarray(p_stg))
+    np.testing.assert_array_equal(np.asarray(c_rec), np.asarray(c_stg))
+
+
+def test_projgram_staged_seeded_bitwise():
+    x = _rand(10, (256, 512), jnp.float32)
+    seed = jnp.asarray([11, 5], jnp.uint32)
+    p_rec, c_rec = projgram_seeded(x, seed, kt=300, schedule="recompute",
+                                   interpret=True)
+    p_stg, c_stg = projgram_seeded(x, seed, kt=300, schedule="staged",
+                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(p_rec), np.asarray(p_stg))
+    np.testing.assert_array_equal(np.asarray(c_rec), np.asarray(c_stg))
+
+
+# --------------------------------------------------------------------------
+# Europarl eval_shape regression: auto schedule goes staged, all-Pallas
+# --------------------------------------------------------------------------
+
+
+def test_europarl_staged_no_fallback(monkeypatch):
+    """At the Europarl chunk shape the auto chooser picks staged and the
+    whole launch stays Pallas — zero pallas_matmul fallback calls."""
+    from repro.kernels import powerpass as pp
+
+    wl = europarl_config()
+    kt = wl.rcca.sketch
+    assert choose_powerpass_schedule(
+        wl.chunk, wl.da, wl.db, kt, "float32") == "staged"
+
+    calls = {"n": 0}
+    real = pp.pallas_matmul
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(pp, "pallas_matmul", counting)
+    a = jax.ShapeDtypeStruct((wl.chunk, wl.da), jnp.float32)
+    b = jax.ShapeDtypeStruct((wl.chunk, wl.db), jnp.float32)
+    q = jax.ShapeDtypeStruct((wl.db, kt), jnp.float32)
+    out = jax.eval_shape(
+        functools.partial(pp.power_project_accumulate, schedule="staged",
+                          interpret=True), a, b, q)
+    assert out.shape == (wl.da, kt)
+    assert calls["n"] == 0
+
+    # staged = exactly 2 pallas_calls (stage + sweep) per view
+    jaxpr = jax.make_jaxpr(
+        lambda *xs: pp.power_project_accumulate(
+            *xs, schedule="staged", interpret=True))(a, b, q)
+    assert count_pallas_calls(jaxpr) == 2
+
+
+# --------------------------------------------------------------------------
+# crossover rule
+# --------------------------------------------------------------------------
+
+
+def test_pick_schedule_roofline_rule():
+    # compute-bound entries compare by flops/roofline
+    r = ROOFLINE_FLOPS_PER_BYTE
+    assert pick_schedule({"a": (100 * r, 1), "b": (10 * r, 1)}) == "b"
+    # memory-bound entries compare by bytes
+    assert pick_schedule({"a": (1, 100), "b": (1, 10)}) == "b"
+    # mixed: max(flops/roofline, bytes) per schedule
+    assert pick_schedule({"rec": (1000 * r, 10), "stg": (10 * r, 500)}) == "stg"
+    # deterministic tie-break: sorted-name order
+    assert pick_schedule({"z": (5, 5), "a": (5, 5)}) == "a"
+
+
+def test_choose_schedule_regimes():
+    # tiny single-bucket shape: nothing to reuse → recompute
+    assert choose_powerpass_schedule(256, 256, 256, 64, "float32") == "recompute"
+    assert choose_projgram_schedule(256, 256, 64, "float32") == "recompute"
+    # Europarl-scale many-bucket shapes → staged
+    assert choose_powerpass_schedule(
+        8192, 1 << 19, 2048, 2060, "float32") == "staged"
+    assert choose_projgram_schedule(8192, 1 << 19, 2060, "float32") == "staged"
+    # staged projgram requires a f32 P contract
+    assert choose_projgram_schedule(
+        8192, 1 << 19, 2060, "float32", p_dtype=jnp.bfloat16) == "recompute"
+    # degenerate sketch (no plan at all) → recompute fallback
+    assert choose_powerpass_schedule(128, 64, 96, 9000, "float32") == "recompute"
+
+
+def test_projgram_staged_plan_requires_f32_p():
+    assert plan_projgram_staged(8192, 1 << 19, 2060, "float32",
+                                p_dtype=jnp.bfloat16) is None
+    assert plan_projgram_staged(8192, 1 << 19, 2060, "float32") is not None
+
+
+def test_staged_plans_share_recompute_geometry():
+    """The staged plans tile exactly like the recompute base plan — the
+    structural half of the bitwise-parity argument."""
+    from repro.kernels.powerpass import plan_powerpass
+
+    base = plan_powerpass(256, 4096, 256, 512, "float32")
+    stage, sweep = plan_powerpass_staged(256, 4096, 256, 512, "float32")
+    assert stage.in_specs[0].shape[0] == base.in_specs[0].shape[0]  # bn
+    assert stage.in_specs[0].shape[1] == base.in_specs[1].shape[1]  # bdb
+    assert sweep.in_specs[0].shape == base.in_specs[0].shape        # (bn, bda)
+    assert sweep.out_specs[0].padded == base.out_specs[0].padded
+
+
+# --------------------------------------------------------------------------
+# autotuned schedule cache entries
+# --------------------------------------------------------------------------
+
+
+def test_schedule_cache_roundtrip(tmp_path, monkeypatch):
+    from repro.kernels import autotune
+
+    monkeypatch.setenv("RCCA_AUTOTUNE_CACHE",
+                       str(tmp_path / "sched.json"))
+    autotune.reset()
+    dims = (256, 256, 512, 4096)
+    assert autotune.lookup_schedule("powerpass-staged", dims, "float32") is None
+    autotune.record_schedule("powerpass-staged", dims, "float32", "staged",
+                             us=10.0)
+    assert autotune.lookup_schedule(
+        "powerpass-staged", dims, "float32") == "staged"
+    # the tuned entry overrides the analytic crossover in the chooser
+    assert choose_powerpass_schedule(256, 4096, 256, 512, "float32") == "staged"
+    # a malformed value is ignored, not trusted
+    path = autotune.cache_path()
+    cache = json.load(open(path))
+    for k in cache:
+        cache[k]["schedule"] = "bogus"
+    json.dump(cache, open(path, "w"))
+    autotune.reset()  # drop the in-memory copy, force a file re-read
+    assert autotune.lookup_schedule("powerpass-staged", dims, "float32") is None
+    autotune.reset()
+
+
+def test_autotune_staged_smoke(tmp_path, monkeypatch):
+    from repro.kernels import autotune
+
+    monkeypatch.setenv("RCCA_AUTOTUNE_CACHE", str(tmp_path / "sched.json"))
+    autotune.reset()
+    a, b = _rand(12, (256, 4096), jnp.float32), _rand(13, (256, 256), jnp.float32)
+    q = _rand(14, (256, 512), jnp.float32)
+    win = autotune.autotune_powerpass_staged(a, b, q, interpret=True, iters=1)
+    assert win in ("staged", "recompute")
+    assert autotune.lookup_schedule(
+        "powerpass-staged", (256, 256, 512, 4096), "float32") == win
+    x, qq = _rand(15, (256, 512), jnp.float32), _rand(16, (512, 512), jnp.float32)
+    win2 = autotune.autotune_projgram_staged(x, qq, interpret=True, iters=1)
+    assert win2 in ("staged", "recompute")
+    autotune.reset()
+
+
+def test_schedule_cache_entries_pass_kernel_check(tmp_path, monkeypatch):
+    from repro.analysis.kernel_check import check_autotune_cache
+    from repro.kernels import autotune
+
+    monkeypatch.setenv("RCCA_AUTOTUNE_CACHE", str(tmp_path / "sched.json"))
+    autotune.reset()
+    autotune.record_schedule("powerpass-staged", (256, 256, 512, 4096),
+                             "float32", "staged")
+    autotune.record_schedule("projgram-staged", (256, 512, 512),
+                             "float32", "recompute")
+    assert check_autotune_cache() == []
+    path = autotune.cache_path()
+    cache = json.load(open(path))
+    k = sorted(cache)[0]
+    cache[k]["schedule"] = "bogus"
+    json.dump(cache, open(path, "w"))
+    autotune.reset()
+    vs = check_autotune_cache()
+    assert len(vs) == 1 and vs[0].code == "RCCA107"
+    autotune.reset()
+
+
+# --------------------------------------------------------------------------
+# obs cost model: staged launches stop charging the recompute
+# --------------------------------------------------------------------------
+
+
+def test_europarl_chunk_cost_drops_recompute():
+    """Acceptance: modelled chunk FLOPs at the Europarl shape drop from
+    n_buckets·proj + acc (recompute) to proj + acc (staged)."""
+    from repro.obs.cost import plan_cost
+
+    wl = europarl_config()
+    kt = wl.rcca.sketch
+    ops.chunk_cost.cache_clear()
+    auto = ops.chunk_cost("power", wl.chunk, wl.da, wl.db, kt, "float32",
+                          engine="kernels")
+    rec = ops.chunk_cost("power", wl.chunk, wl.da, wl.db, kt, "float32",
+                         engine="kernels", schedule="recompute")
+    assert auto["schedule"] == "staged"
+    assert rec["schedule"] == "recompute"
+
+    # staged chunk flops == 2 views × (proj + acc) from the plan pair
+    stage, sweep = plan_powerpass_staged(wl.chunk, wl.da, wl.db, kt,
+                                         "float32")
+    per_view = plan_cost(stage)["flops"] + plan_cost(sweep)["flops"]
+    assert auto["flops"] == 2 * per_view
+    # the recompute model still charges n_buckets·proj — orders more
+    assert rec["flops"] > 100 * auto["flops"]
+    # jnp engine reports no kernel schedule
+    assert ops.chunk_cost("power", wl.chunk, wl.da, wl.db, kt, "float32",
+                          engine="jnp")["schedule"] is None
+
+
+def test_chunk_span_carries_schedule(tmp_path, monkeypatch):
+    """The engine stamps the resolved schedule on chunk spans, so the
+    timeline shows the staged-vs-recompute choice per launch."""
+    monkeypatch.setenv("RCCA_TRACE", str(tmp_path / "trace"))
+    from repro.core.rcca import RCCAConfig
+    from repro.data import PlantedCCAData
+    from repro.exec import Local
+    from repro.exec import fit as exec_fit
+    from repro.obs import load_events
+    from repro.store import ingest_planted
+
+    data = PlantedCCAData(n=256, da=24, db=16, rank=4, noise=0.4,
+                          seed=13, chunk=128)
+    store = ingest_planted(str(tmp_path / "store"), data)
+    cfg = RCCAConfig(k=3, p=5, q=1)
+    exec_fit(store, cfg, jax.random.PRNGKey(7), topology=Local(),
+             engine="kernels")
+    spans = [e for e in load_events(str(tmp_path / "trace"))
+             if e.get("ev") == "span" and e.get("name") == "chunk"]
+    assert spans, "no chunk spans recorded"
+    assert all("schedule" in (s.get("attrs") or {}) for s in spans)
